@@ -1,0 +1,61 @@
+"""Shared benchmark plumbing: the paper's experimental grid in one place."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.lints_paper import PAPER
+from repro.core import heuristics, lints
+from repro.core.problem import build_problem, paper_workload
+from repro.core.simulator import evaluate_plan, noisy_costs
+from repro.core.trace import make_trace_set
+
+
+def paper_setup(n_jobs: int | None = None, seed: int = 0):
+    traces = make_trace_set(PAPER.zones, hours=PAPER.horizon_hours,
+                            slot_seconds=PAPER.slot_seconds, seed=seed)
+    reqs = paper_workload(
+        n_jobs=n_jobs or PAPER.n_jobs, seed=seed, path=PAPER.path,
+        size_range_gb=PAPER.size_range_gb,
+        deadline_range_h=PAPER.deadline_range_h,
+    )
+    return reqs, traces
+
+
+def run_all_algorithms(reqs, traces, capacity_gbps: float, noise: float,
+                       noise_seed: int = 7, backend: str = "scipy"):
+    """Returns {algorithm: EmissionsReport} on the noisy evaluation trace.
+
+    Heuristics run best-effort: at 25% capacity the paper's own workload is
+    deadline-infeasible for arrival-order scheduling (cf. the empty
+    worst-case cell in its Table II); the reports carry sla_violations.
+    LinTS itself is solved strictly — the LP is feasible at every capacity.
+    """
+    prob = build_problem(reqs, traces, capacity_gbps, PAPER.power)
+    cost_eval = noisy_costs(reqs, traces, noise, seed=noise_seed)
+    plans = [lints.solve(prob, lints.LinTSConfig(backend=backend))]
+    # Beyond-paper: emission-aware refinement (reported as "lints+").
+    plans.append(lints.solve(prob, lints.LinTSConfig(backend=backend,
+                                                     refine=True)))
+    plans.append(heuristics.fcfs(prob, best_effort=True))
+    plans.append(heuristics.edf(prob, best_effort=True))
+    plans.append(heuristics.worst_case(
+        prob, n_random=PAPER.worst_case_random_plans, best_effort=True))
+    plans.append(heuristics.single_threshold(prob, best_effort=True))
+    plans.append(heuristics.double_threshold(prob, alpha=PAPER.dt_alpha,
+                                             best_effort=True))
+    return {p.algorithm: evaluate_plan(prob, p, cost_eval) for p in plans}
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6  # us
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,47 @@
+"""Fig. 3: distribution of emissions per algorithm across trace windows
+(15% noise), reported as median/quartiles — LinTS should show the lowest
+median and quartiles at every capacity."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.lints_paper import PAPER
+
+from .common import csv_line, paper_setup, run_all_algorithms, timed
+
+ALGS = ("lints", "lints+", "single_threshold", "double_threshold", "fcfs", "edf")
+
+
+def run(n_jobs: int = 60, quiet: bool = False) -> list[str]:
+    lines = []
+    for frac in PAPER.bandwidth_fractions:
+        cap = frac * PAPER.first_hop_gbps
+        dists: dict[str, list[float]] = {a: [] for a in ALGS}
+
+        def sweep():
+            for seed in PAPER.seeds:
+                reqs, traces = paper_setup(n_jobs, seed=seed)
+                reports = run_all_algorithms(reqs, traces, cap, noise=0.15,
+                                             noise_seed=seed + 100)
+                for a in ALGS:
+                    dists[a].append(reports[a].total_kg)
+
+        _, us = timed(sweep)
+        parts = []
+        for a in ALGS:
+            q1, med, q3 = np.percentile(dists[a], (25, 50, 75))
+            parts.append(f"{a}=({q1:.3f}|{med:.3f}|{q3:.3f})kg")
+        med_plus = np.median(dists["lints+"])
+        assert all(
+            med_plus <= np.median(dists[a]) * 1.01 for a in ALGS
+        ), "LinTS+ median should be best-or-tied"
+        lines.append(csv_line(f"fig3_dist_{int(frac*100)}pct", us,
+                              ";".join(parts)))
+        if not quiet:
+            print(lines[-1], flush=True)
+    return lines
+
+
+if __name__ == "__main__":
+    run()

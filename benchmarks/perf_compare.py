@@ -1,0 +1,79 @@
+"""Fleet-wide §Perf before/after: baseline artifacts vs optimized artifacts.
+
+    PYTHONPATH=src python -m benchmarks.perf_compare \
+        --before artifacts/dryrun --after artifacts/dryrun_opt
+
+Emits a markdown table (per single-pod cell: dominant-term seconds and
+roofline fraction before/after) and aggregate geomean improvements.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import numpy as np
+
+from .roofline import analyze
+
+
+def _load(art_dir: str) -> dict[tuple[str, str, str], dict]:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        art = json.load(open(path))
+        r = analyze(art)
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def compare(before_dir: str, after_dir: str, mesh: str = "pod16x16") -> str:
+    before = _load(before_dir)
+    after = _load(after_dir)
+    rows = []
+    fracs_b, fracs_a, doms_b, doms_a = [], [], [], []
+    for key in sorted(before):
+        if key not in after or key[2] != mesh:
+            continue
+        b, a = before[key], after[key]
+        tb = max(b["terms_s"].values())
+        ta = max(a["terms_s"].values())
+        rows.append(
+            f"| {key[0]} | {key[1]} | {b['dominant']} {tb:.3g}s "
+            f"| {a['dominant']} {ta:.3g}s | {tb / max(ta, 1e-30):.2f}x "
+            f"| {b['roofline_fraction']:.3f} -> {a['roofline_fraction']:.3f} |"
+        )
+        fracs_b.append(max(b["roofline_fraction"], 1e-6))
+        fracs_a.append(max(a["roofline_fraction"], 1e-6))
+        doms_b.append(tb)
+        doms_a.append(ta)
+    if not rows:
+        return "no comparable cells found\n"
+    g_dom = float(np.exp(np.mean(np.log(np.array(doms_b) / np.array(doms_a)))))
+    g_frac = float(np.exp(np.mean(np.log(np.array(fracs_a) / np.array(fracs_b)))))
+    head = ("| arch | shape | dominant before | dominant after | step speedup "
+            "| roofline frac |\n|---|---|---|---|---|---|\n")
+    foot = (f"\n**geomean dominant-term speedup: {g_dom:.2f}x; "
+            f"geomean roofline-fraction gain: {g_frac:.2f}x** "
+            f"({len(rows)} cells, {mesh})\n")
+    return head + "\n".join(rows) + "\n" + foot
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--before", default="artifacts/dryrun")
+    ap.add_argument("--after", default="artifacts/dryrun_opt")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--out", default="artifacts/perf_fleet.md")
+    args = ap.parse_args()
+    md = compare(args.before, args.after, args.mesh)
+    print(md)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(md)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Fig. 2: thread -> throughput/power curves and the linear P(rho) fit.
+
+Reports the linear-model quality (R^2 of Eq. 7 against the exact Eq. 6
+curve on 0 <= rho <= L) that justifies using an LP at all.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.lints_paper import PAPER
+
+from .common import csv_line, timed
+
+
+def run(quiet: bool = False) -> list[str]:
+    pm = PAPER.power
+    lines = []
+    for l_gbps in (0.25, 0.5, 0.75, 1.0):
+        thetas = np.linspace(1, pm.theta_max, 32)
+        rho = np.asarray(pm.throughput_gbps(thetas, l_gbps))
+        p_theta = np.asarray(pm.power_w(thetas))
+
+        def fit():
+            xs = np.linspace(1e-6, l_gbps * 0.999, 256)
+            exact = np.asarray(pm.power_of_rho_exact_w(xs, l_gbps))
+            lin = np.asarray(pm.power_of_rho_linear_w(xs, l_gbps))
+            # Pearson r (Fig. 2b's "correlation" claim) + worst-case error;
+            # R^2 is meaningless against a nearly-flat exact curve.
+            r = np.corrcoef(exact, lin)[0, 1]
+            return r, np.abs(exact - lin).max()
+
+        (pearson, max_err), us = timed(fit)
+        derived = (
+            f"rho(32)={rho[-1]:.4f}Gbps;P(32)={p_theta[-1]:.2f}W;"
+            f"lin_pearson_r={pearson:.4f};lin_maxerr={max_err:.2f}W"
+            f";maxerr_le_deltaP={max_err <= pm.delta_p_w}"
+        )
+        lines.append(csv_line(f"fig2_power_model_L{l_gbps}", us, derived))
+        if not quiet:
+            print(lines[-1], flush=True)
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,158 @@
+"""Roofline analysis over the dry-run artifacts (deliverable (g)).
+
+Per (arch x shape x mesh) cell, derive from the compiled artifact:
+
+    compute term    = HLO_FLOPs_per_dev / peak_FLOPs            [s]
+    memory term     = HLO_bytes_per_dev / HBM_bw                [s]
+    collective term = collective_bytes_per_dev / link_bw        [s]
+
+(The SPMD module's shapes are per-device, so cost_analysis/HLO byte counts
+are already per-chip; dividing global totals by chips is equivalent.)
+
+Also: MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (prefill/decode),
+the useful-compute ratio MODEL_FLOPS/HLO_FLOPs (catches remat/masked-FLOP
+waste), the dominant term, and the roofline fraction
+(useful-compute-time / dominant-term-time) that §Perf hillclimbs.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+# TPU v5e (target hardware; this container only compiles).
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # B/s per chip
+LINK_BW = 50e9           # B/s per ICI link (1-link conservative model)
+
+SUGGEST = {
+    "compute": "cut HLO FLOPs: avoid masked/quadratic attention waste, "
+               "reduce remat recompute, keep matmuls MXU-aligned",
+    "memory": "cut bytes: fuse/bf16 intermediates, blocked attention, "
+              "smaller logits dtype, better layouts",
+    "collective": "cut collective bytes: reshard to avoid double "
+                  "all-gathers, bf16 grad reduction, hierarchical pod "
+                  "reduction, overlap with compute",
+}
+
+
+def load_artifacts(art_dir: str = "artifacts/dryrun") -> list[dict]:
+    arts = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            arts.append(json.load(f))
+    return arts
+
+
+def analyze(art: dict) -> dict:
+    # Loop-aware analysis is authoritative; raw cost_analysis (which counts
+    # while bodies once) is kept in the artifact for comparison.
+    cost = art.get("hlo_analysis") or {}
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes_accessed", 0.0))
+    if not flops_dev:
+        raw = art.get("cost_analysis", {})
+        flops_dev = float(raw.get("flops", 0.0))
+        bytes_dev = float(raw.get("bytes accessed", 0.0))
+    coll_dev = float(art["collectives"]["total_per_device_bytes"])
+    n_dev = art["n_devices"]
+    terms = {
+        "compute": flops_dev / PEAK_FLOPS,
+        "memory": bytes_dev / HBM_BW,
+        "collective": coll_dev / LINK_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    tokens = art["tokens_per_call"]
+    n_active = art["params_active"]
+    mult = 6.0 if art["kind"] == "train" else 2.0
+    model_flops = mult * n_active * tokens
+    hlo_flops_global = flops_dev * n_dev
+    useful_ratio = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+    max_term = max(terms.values()) or 1e-30
+    model_time = model_flops / n_dev / PEAK_FLOPS
+    return {
+        "arch": art["arch"],
+        "shape": art["shape"],
+        "mesh": art["mesh"],
+        "kind": art["kind"],
+        "terms_s": terms,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": useful_ratio,
+        "roofline_fraction": model_time / max_term,
+        "suggestion": SUGGEST[dominant],
+        "compile_s": art["compile_s"],
+        "collective_counts": art["collectives"]["counts"],
+    }
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | coll s | "
+           "dominant | MODEL_FLOPs | useful | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        t = r["terms_s"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute']:.3e} | {t['memory']:.3e} "
+            f"| {t['collective']:.3e} | **{r['dominant']}** "
+            f"| {r['model_flops']:.2e} | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} |\n"
+        )
+    return "".join(out)
+
+
+def run(art_dir: str = "artifacts/dryrun", quiet: bool = False,
+        write_md: str | None = "artifacts/roofline.md") -> list[str]:
+    from .common import csv_line
+
+    lines: list[str] = []
+    md_parts: list[str] = []
+    # Baseline artifacts + (if present) the post-§Perf optimized set.
+    sources = [("baseline", art_dir)]
+    opt_dir = art_dir + "_opt"
+    if os.path.isdir(opt_dir):
+        sources.append(("optimized", opt_dir))
+    any_rows = False
+    for label, directory in sources:
+        arts = load_artifacts(directory)
+        rows = []
+        for art in arts:
+            if "error" in art.get("cost_analysis", {}):
+                continue
+            r = analyze(art)
+            rows.append(r)
+            t = r["terms_s"]
+            derived = (
+                f"mesh={r['mesh']};dom={r['dominant']};"
+                f"compute={t['compute']:.3e}s;mem={t['memory']:.3e}s;"
+                f"coll={t['collective']:.3e}s;useful={r['useful_ratio']:.2f};"
+                f"frac={r['roofline_fraction']:.3f}"
+            )
+            lines.append(csv_line(
+                f"roofline[{label}]_{r['arch']}_{r['shape']}_{r['mesh']}",
+                0.0, derived))
+            if not quiet:
+                print(lines[-1], flush=True)
+        if rows:
+            any_rows = True
+            md_parts.append(f"## {label} ({directory})\n\n"
+                            + markdown_table(rows) + "\n")
+    if not any_rows:
+        line = csv_line("roofline", 0.0,
+                        f"no artifacts in {art_dir}; run repro.launch.dryrun")
+        if not quiet:
+            print(line)
+        return [line]
+    if write_md and md_parts:
+        os.makedirs(os.path.dirname(write_md), exist_ok=True)
+        with open(write_md, "w") as f:
+            f.write("".join(md_parts))
+    return lines
+
+
+if __name__ == "__main__":
+    run()

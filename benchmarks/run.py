@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure + solver scaling +
+the dry-run roofline reader.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run              # everything
+    PYTHONPATH=src python -m benchmarks.run --only paper_tables
+    PYTHONPATH=src python -m benchmarks.run --fast       # smaller workloads
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (
+    congestion,
+    emission_dist,
+    paper_tables,
+    power_model,
+    roofline,
+    solver_scaling,
+)
+
+SUITES = {
+    "paper_tables": lambda fast: paper_tables.run(n_jobs=60 if fast else None),
+    "power_model": lambda fast: power_model.run(),
+    "emission_dist": lambda fast: emission_dist.run(n_jobs=30 if fast else 60),
+    "congestion": lambda fast: congestion.run(n_transfers=6 if fast else 12),
+    "solver_scaling": lambda fast: solver_scaling.run(),
+    "roofline": lambda fast: roofline.run(),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(SUITES))
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        t0 = time.time()
+        try:
+            SUITES[name](args.fast)
+        except Exception:
+            failures += 1
+            print(f"{name},0,ERROR", flush=True)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Fault-tolerance demo: train, 'lose' capacity mid-run, resume from the
+latest committed checkpoint on a smaller mesh, finish training — and verify
+the loss curve continues rather than restarting.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import OptimizerConfig, TrainConfig, registry
+from repro.data import SyntheticTokens
+from repro.runtime import HeartbeatMonitor, plan_mesh, reshard_state
+from repro.train import abstract_state, init_state, make_train_step
+
+
+def main() -> None:
+    cfg = registry.get("internlm2-1.8b").model(reduced=True)
+    tcfg = TrainConfig(
+        global_batch=8, seq_len=64,
+        optimizer=OptimizerConfig(lr=5e-3, warmup_steps=10, total_steps=60),
+    )
+    key = jax.random.PRNGKey(0)
+    data = SyntheticTokens(cfg.vocab_size, 64, 8, seed=0)
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    monitor = HeartbeatMonitor(n_workers=4, timeout_s=30.0)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir, keep=2)
+
+        # ---- phase 1: "512-chip" run (here: whatever devices exist).
+        state = init_state(key, cfg, tcfg)
+        losses = []
+        for step in range(30):
+            state, metrics = step_fn(state, data.next_batch())
+            losses.append(float(metrics["loss"]))
+            for w in range(4):
+                monitor.beat(w, 0.1 if w != 3 or step < 20 else 0.5)
+            if (step + 1) % 10 == 0:
+                mgr.save(step + 1, state, data.get_state(), async_=True)
+        mgr.wait()
+        print(f"phase 1: 30 steps, loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+        stragglers = monitor.stragglers()
+        print(f"straggler detector flags workers: {stragglers}")
+
+        # ---- failure: a straggler dies; re-plan the mesh elastically.
+        survivors = 512 - 128  # lost a slice of the pod
+        plan = plan_mesh(survivors)
+        print(f"elastic plan for {survivors} chips: shape={plan.shape} "
+              f"axes={plan.axis_names} spares={plan.dropped_devices}")
+
+        # ---- phase 2: restore on the (locally built) new mesh and continue.
+        host_state, data_state, at_step = mgr.restore()
+        new_mesh = plan_mesh(len(jax.devices())).build()
+        shapes = abstract_state(key, cfg, tcfg)
+        state = reshard_state(host_state, shapes, new_mesh)
+        data2 = SyntheticTokens(cfg.vocab_size, 64, 8, seed=0)
+        data2.set_state(data_state)
+        print(f"restored step {at_step}; resuming with exact data cursor")
+
+        cont = []
+        with new_mesh:
+            for step in range(at_step, at_step + 20):
+                state, metrics = step_fn(state, data2.next_batch())
+                cont.append(float(metrics["loss"]))
+        print(f"phase 2: 20 steps, loss {cont[0]:.3f} -> {cont[-1]:.3f}")
+        # Continuation, not restart: resumed loss ~ where phase 1 left off.
+        assert cont[0] < losses[4] + 0.5, (cont[0], losses[4])
+        print("OK: loss curve continued across the elastic restart")
+
+
+if __name__ == "__main__":
+    main()

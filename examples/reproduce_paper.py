@@ -1,0 +1,77 @@
+"""Full reproduction of the paper's evaluation (Tables II/III + headline
+savings), §IV: 200 transfer requests (10-50 GB, deadlines 48-71h), 72h of
+high-variability zone traces, bandwidth limited to 25/50/75% of the 1 Gbps
+first hop, 5% and 15% forecast noise.
+
+    PYTHONPATH=src python examples/reproduce_paper.py [--fast]
+
+Writes artifacts/paper_tables.csv and prints the comparison against the
+paper's claims.
+"""
+
+import argparse
+import csv
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import paper_setup, run_all_algorithms  # noqa: E402
+from repro.configs.lints_paper import PAPER  # noqa: E402
+
+ORDER = ("worst_case", "edf", "fcfs", "double_threshold",
+         "single_threshold", "lints")
+
+PAPER_CLAIMS = {
+    # capacity: (vs_fcfs %, vs_worst %)   — §IV-B, averaged over noise.
+    0.25: (10.1, 14.8),
+    0.50: (14.2, 50.1),
+    0.75: (15.4, 66.1),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="60 jobs instead of 200")
+    ap.add_argument("--out", default="artifacts/paper_tables.csv")
+    args = ap.parse_args()
+
+    n_jobs = 60 if args.fast else PAPER.n_jobs
+    reqs, traces = paper_setup(n_jobs)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+
+    results = {}
+    for noise in PAPER.noise_levels:
+        for frac in PAPER.bandwidth_fractions:
+            cap = frac * PAPER.first_hop_gbps
+            reports = run_all_algorithms(reqs, traces, cap, noise)
+            results[(noise, frac)] = {k: v.total_kg for k, v in reports.items()}
+            row = "  ".join(
+                f"{a}={results[(noise, frac)][a]:6.3f}" for a in ORDER
+            )
+            print(f"noise={int(noise*100):2d}% cap={int(frac*100):2d}%  {row} kg",
+                  flush=True)
+
+    with open(args.out, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["noise", "bandwidth_frac"] + list(ORDER))
+        for (noise, frac), kg in sorted(results.items()):
+            w.writerow([noise, frac] + [f"{kg[a]:.4f}" for a in ORDER])
+
+    print("\n=== headline savings (averaged over 5%/15% noise) vs paper ===")
+    for frac in PAPER.bandwidth_fractions:
+        avg = {a: np.mean([results[(n, frac)][a] for n in PAPER.noise_levels])
+               for a in ORDER}
+        vs_fcfs = 100 * (1 - avg["lints"] / avg["fcfs"])
+        vs_worst = 100 * (1 - avg["lints"] / avg["worst_case"])
+        claim_f, claim_w = PAPER_CLAIMS[frac]
+        print(f"cap={int(frac*100):2d}%: LinTS vs FCFS {vs_fcfs:5.1f}% "
+              f"(paper {claim_f}%), vs worst-case {vs_worst:5.1f}% "
+              f"(paper {claim_w}%)")
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from .manager import (  # noqa: F401
+    CheckpointManager,
+    checkpoint_nbytes,
+    load_pytree,
+    save_pytree,
+)

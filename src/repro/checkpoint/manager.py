@@ -1,0 +1,165 @@
+"""Fault-tolerant sharded checkpointing.
+
+Layout (one directory per step):
+
+    <root>/step_000123.tmp-<nonce>/   while writing
+        manifest.json                 {"leaves": [{"path","dtype","shape"}...],
+                                       "data_state": "..."}
+        leaf_00000.npy ...
+    <root>/step_000123/               after atomic os.replace
+        COMMIT                        written last; restore ignores dirs
+                                      without it (torn writes survive crashes)
+
+Restore returns host numpy trees; ``restore_sharded`` re-places leaves under
+any target topology (512 -> 256 chip elastic restarts reshard here).  Saves
+can run on a background thread (training continues; ``wait()`` joins).
+Pytrees must be nested dicts of arrays (our param/opt/state trees are).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import uuid
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        parts = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        out.append(("/".join(parts), leaf))
+    return out
+
+
+def _insert(root: dict, path: str, value) -> None:
+    parts = path.split("/")
+    node = root
+    for p in parts[:-1]:
+        node = node.setdefault(p, {})
+    node[parts[-1]] = value
+
+
+def save_pytree(dirpath: str, tree, data_state: str | None = None) -> None:
+    os.makedirs(dirpath, exist_ok=True)
+    leaves = _flatten_with_paths(tree)
+    manifest = {"leaves": [], "data_state": data_state}
+    for i, (path, leaf) in enumerate(leaves):
+        arr = np.asarray(leaf)
+        shape = list(arr.shape)  # before ascontiguousarray (it 1-d-ifies 0-d)
+        arr = np.ascontiguousarray(arr)
+        fname = f"leaf_{i:05d}.npy"
+        # Raw-byte storage: np.save mangles extended dtypes (bfloat16/fp8)
+        # into void records; the manifest's dtype string is authoritative.
+        np.save(os.path.join(dirpath, fname),
+                np.frombuffer(arr.tobytes(), dtype=np.uint8))
+        manifest["leaves"].append(
+            {"path": path, "file": fname, "dtype": str(arr.dtype),
+             "shape": shape}
+        )
+    with open(os.path.join(dirpath, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def load_pytree(dirpath: str) -> tuple[dict, str | None]:
+    import ml_dtypes  # noqa: F401  (registers bfloat16/fp8 dtype names)
+
+    with open(os.path.join(dirpath, "manifest.json")) as f:
+        manifest = json.load(f)
+    tree: dict = {}
+    for entry in manifest["leaves"]:
+        raw = np.load(os.path.join(dirpath, entry["file"]))
+        arr = raw.view(np.dtype(entry["dtype"])).reshape(entry["shape"])
+        _insert(tree, entry["path"], arr)
+    return tree, manifest.get("data_state")
+
+
+def checkpoint_nbytes(dirpath: str) -> int:
+    return sum(
+        os.path.getsize(os.path.join(dirpath, f))
+        for f in os.listdir(dirpath)
+    )
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self.on_commit = None  # hook(step, nbytes): e.g. enqueue replication
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree, data_state: str | None = None,
+             async_: bool = False) -> None:
+        self.wait()
+        host_tree = jax.device_get(tree)  # snapshot before training continues
+
+        def work():
+            final = os.path.join(self.root, f"step_{step:08d}")
+            tmp = final + f".tmp-{uuid.uuid4().hex[:8]}"
+            save_pytree(tmp, host_tree, data_state)
+            if os.path.exists(final):  # idempotent re-save of the same step
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            with open(os.path.join(final, "COMMIT"), "w") as f:
+                f.write("ok")
+            if self.on_commit is not None:
+                self.on_commit(step, checkpoint_nbytes(final))
+            self._gc()
+
+        if async_:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.root):
+            if not name.startswith("step_") or name.endswith(".tmp") or ".tmp-" in name:
+                continue
+            if os.path.exists(os.path.join(self.root, name, "COMMIT")):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int | None = None) -> tuple[dict, str | None, int]:
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no committed checkpoints in {self.root}")
+        tree, data_state = load_pytree(
+            os.path.join(self.root, f"step_{step:08d}")
+        )
+        return tree, data_state, step
+
+    def restore_sharded(self, shardings, step: int | None = None):
+        """Restore and re-place each leaf under ``shardings`` (any topology)."""
+        host, data_state, step = self.restore(step)
+        placed = jax.tree.map(
+            lambda leaf, sh: jax.device_put(leaf, sh), host, shardings
+        )
+        return placed, data_state, step

@@ -1,0 +1,18 @@
+"""Configs: per-architecture model configs + the paper's experiment config."""
+
+from .base import (  # noqa: F401
+    AttentionConfig,
+    BlockConfig,
+    ModelConfig,
+    MoEConfig,
+    OptimizerConfig,
+    ServeConfig,
+    ShapeSpec,
+    SHAPES,
+    SSMConfig,
+    Stage,
+    TrainConfig,
+    shapes_for,
+)
+from .lints_paper import PAPER, PaperConfig  # noqa: F401
+from .registry import ARCHS, ArchSpec, cells, get, list_archs  # noqa: F401

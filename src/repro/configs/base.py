@@ -1,0 +1,194 @@
+"""Config dataclasses for the model zoo and the training/serving stack.
+
+A model is a sequence of *stages*; each stage repeats a *group* of blocks.
+Homogeneous stages are stacked and executed with ``jax.lax.scan`` (bounded
+HLO size and compile time at 88 layers), so heterogeneous layer patterns —
+gemma3's 5 local : 1 global, zamba2's shared-attention-every-6, llama4's
+alternating dense/MoE — are expressed as multi-block groups.  Blocks marked
+``shared=True`` reuse one parameter set across all repeats of the stage
+(zamba2's shared transformer block) while still getting per-repeat KV cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    sliding_window: int | None = None      # local attention window (tokens)
+    logit_softcap: float | None = None
+    rope_theta: float = 10_000.0
+    # MLA (DeepSeek): enabled when kv_lora_rank > 0.
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    @property
+    def is_mla(self) -> bool:
+        return self.kv_lora_rank > 0
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    expert_ffn_dim: int
+    num_shared_experts: int = 0
+    shared_ffn_dim: int = 0
+    capacity_factor: float = 1.25
+    group_size: int = 512                  # tokens per dispatch group (GShard)
+    router_aux_weight: float = 0.01        # load-balance loss weight
+    router_z_weight: float = 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128                       # SSD chunk length
+    a_init_range: tuple[float, float] = (1.0, 16.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    kind: Literal["attn_mlp", "mamba", "moe"]  # moe = attention + MoE FFN
+    attention: AttentionConfig | None = None
+    mlp_dim: int = 0
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    mlp_gated: bool = True
+    activation: Literal["silu", "gelu"] = "silu"
+    shared: bool = False                   # share params across stage repeats
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    blocks: tuple[BlockConfig, ...]
+    repeat: int
+    scan: bool = True
+
+    def n_layers(self) -> int:
+        return len(self.blocks) * self.repeat
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]
+    d_model: int
+    vocab_size: int
+    stages: tuple[Stage, ...]
+    max_seq_len: int = 131_072
+    norm: Literal["rms", "layer"] = "rms"
+    norm_eps: float = 1e-5
+    post_norm: bool = False                # sandwich norms (gemma3)
+    tie_embeddings: bool = False
+    embed_scale: float | None = None       # multiply embeddings (gemma: sqrt(d))
+    embedding_inputs: bool = False         # stub frontend feeds (B,S,d) embeds
+    final_logit_softcap: float | None = None
+    # Precision.
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # Attention implementation: "einsum" (materialized scores), "blocked"
+    # (flash-style online softmax), or "auto" (blocked when S >= threshold).
+    attn_impl: Literal["einsum", "blocked", "auto"] = "auto"
+    blocked_attn_threshold: int = 8192
+    attn_block_q: int = 512
+    attn_block_kv: int = 1024
+    # Expand KV heads to full H inside attention (GQA): keeps one plain,
+    # TP-shardable head axis per einsum.  False = paper-agnostic grouped
+    # (hkv, g) form (baseline; collective-pathological when hkv < TP).
+    gqa_expand_kv: bool = True
+    # Score/softmax storage dtype. f32 is the safe default; bf16 halves the
+    # dominant attention-scores HBM traffic (max-subtracted softmax is
+    # bf16-stable at inference; use with care for training).
+    softmax_dtype: str = "float32"
+
+    def n_layers(self) -> int:
+        return sum(s.n_layers() for s in self.stages)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: Literal["adamw", "adamw8bit"] = "adamw"
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: Literal["cosine", "linear", "constant"] = "cosine"
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    quant_block: int = 256                 # 8-bit Adam block size
+    # Collective-efficiency knobs (see EXPERIMENTS.md §Perf):
+    grad_reduce_dtype: str | None = None   # e.g. "bfloat16" halves DP traffic
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    global_batch: int = 256
+    seq_len: int = 4096
+    microbatches: int = 1                  # gradient accumulation steps
+    remat: Literal["none", "dots", "full"] = "full"
+    optimizer: OptimizerConfig = OptimizerConfig()
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch: int = 128
+    max_seq_len: int = 32_768
+    prefill_seq_len: int = 32_768
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned (input-shape) cell: what to lower and at what size."""
+
+    name: str
+    kind: Literal["train", "prefill", "decode"]
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+# Archs allowed to run long_500k (sub-quadratic attention; DESIGN.md §4).
+SUBQUADRATIC = ("mamba2-130m", "zamba2-7b", "gemma3-27b")
+
+
+def shapes_for(arch_name: str) -> list[str]:
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch_name in SUBQUADRATIC:
+        names.append("long_500k")
+    return names
+
+
+def dense_stage(block: BlockConfig, n: int, scan: bool = True) -> Stage:
+    return Stage(blocks=(block,), repeat=n, scan=scan)
+
+
+def gqa(
+    heads: int, kv: int, head_dim: int, *, bias: bool = False,
+    window: int | None = None, theta: float = 1e4, qk_norm: bool = False,
+) -> AttentionConfig:
+    return AttentionConfig(
+        num_heads=heads, num_kv_heads=kv, head_dim=head_dim, qkv_bias=bias,
+        sliding_window=window, rope_theta=theta, qk_norm=qk_norm,
+    )

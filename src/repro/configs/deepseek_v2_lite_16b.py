@@ -1,0 +1,48 @@
+"""deepseek-v2-lite-16b [moe]: MLA + fine-grained MoE.
+
+27L, d_model=2048, 16 heads of MLA (kv_lora_rank=512, qk_nope=128,
+qk_rope=64, v=128), vocab=102400.  First layer is a dense FFN (d_ff=10944,
+HF value); layers 2..27 are MoE with 2 shared + 64 routed experts, top-6,
+expert d_ff=1408.  (The assignment block's "160 routed" note conflicts with
+its own "64e top-6"; the HF config says 64 — see DESIGN.md §Fidelity.)
+[arXiv:2405.04434; hf]
+"""
+
+from .base import AttentionConfig, BlockConfig, ModelConfig, MoEConfig, Stage
+
+
+def _mla(heads: int, kv_lora: int, nope: int, rope: int, v: int) -> AttentionConfig:
+    return AttentionConfig(
+        num_heads=heads, num_kv_heads=heads, head_dim=nope + rope,
+        kv_lora_rank=kv_lora, qk_nope_dim=nope, qk_rope_dim=rope, v_head_dim=v,
+    )
+
+
+def config(reduced: bool = False) -> ModelConfig:
+    if reduced:
+        attn = _mla(4, 32, 16, 8, 16)
+        dense = BlockConfig(kind="attn_mlp", attention=attn, mlp_dim=256)
+        moe = BlockConfig(
+            kind="moe", attention=attn,
+            moe=MoEConfig(num_experts=8, top_k=2, expert_ffn_dim=64,
+                          num_shared_experts=2, shared_ffn_dim=64,
+                          group_size=64),
+        )
+        return ModelConfig(
+            name="deepseek-v2-lite-16b", family="moe", d_model=64,
+            vocab_size=512, stages=(Stage((dense,), 1), Stage((moe,), 2)),
+            max_seq_len=1024,
+        )
+    attn = _mla(16, 512, 128, 64, 128)
+    dense = BlockConfig(kind="attn_mlp", attention=attn, mlp_dim=10944)
+    moe = BlockConfig(
+        kind="moe", attention=attn,
+        moe=MoEConfig(num_experts=64, top_k=6, expert_ffn_dim=1408,
+                      num_shared_experts=2, shared_ffn_dim=1408,
+                      capacity_factor=1.25, group_size=512),
+    )
+    return ModelConfig(
+        name="deepseek-v2-lite-16b", family="moe", d_model=2048,
+        vocab_size=102400, stages=(Stage((dense,), 1), Stage((moe,), 26)),
+        max_seq_len=163840,
+    )

@@ -1,0 +1,46 @@
+"""gemma3-27b [dense]: 62L, d_model=5376, 32H (GQA kv=16, head_dim=128),
+d_ff=21504, vocab=262144, 5 local (sliding window 1024) : 1 global layer
+pattern, 128k context.  QK-norm, sandwich norms, tied embeddings, GeGLU.
+62 = 10 x (5 local + 1 global) + 2 local.  [hf:google/gemma-3-1b-pt; unverified]
+"""
+
+import math
+
+from .base import BlockConfig, ModelConfig, Stage, gqa
+
+
+def config(reduced: bool = False) -> ModelConfig:
+    if reduced:
+        local = BlockConfig(
+            kind="attn_mlp",
+            attention=gqa(4, 2, 16, window=64, qk_norm=True),
+            mlp_dim=128, activation="gelu",
+        )
+        glob = BlockConfig(
+            kind="attn_mlp", attention=gqa(4, 2, 16, qk_norm=True, theta=1e6),
+            mlp_dim=128, activation="gelu",
+        )
+        return ModelConfig(
+            name="gemma3-27b", family="dense", d_model=64, vocab_size=512,
+            stages=(Stage((local, local, glob), 2), Stage((local,), 1)),
+            max_seq_len=1024, post_norm=True, tie_embeddings=True,
+            embed_scale=math.sqrt(64.0),
+        )
+    local = BlockConfig(
+        kind="attn_mlp",
+        attention=gqa(32, 16, 128, window=1024, qk_norm=True, theta=1e4),
+        mlp_dim=21504, activation="gelu",
+    )
+    glob = BlockConfig(
+        kind="attn_mlp", attention=gqa(32, 16, 128, qk_norm=True, theta=1e6),
+        mlp_dim=21504, activation="gelu",
+    )
+    return ModelConfig(
+        name="gemma3-27b", family="dense", d_model=5376, vocab_size=262144,
+        stages=(
+            Stage((local, local, local, local, local, glob), 10),
+            Stage((local,), 2),
+        ),
+        max_seq_len=131072, post_norm=True, tie_embeddings=True,
+        embed_scale=math.sqrt(5376.0),
+    )

@@ -1,0 +1,24 @@
+"""granite-34b [dense]: 88L, d_model=6144, 48H with MQA (kv=1, head_dim=128),
+d_ff=24576, vocab=49152 (code model).  GPT-BigCode-style non-gated GELU MLP
+(the gated variant would be 47B, not 34B).  [arXiv:2405.04324; hf]
+"""
+
+from .base import BlockConfig, ModelConfig, dense_stage, gqa
+
+
+def config(reduced: bool = False) -> ModelConfig:
+    if reduced:
+        block = BlockConfig(kind="attn_mlp", attention=gqa(4, 1, 16), mlp_dim=128,
+                            mlp_gated=False, activation="gelu")
+        return ModelConfig(
+            name="granite-34b", family="dense", d_model=64, vocab_size=512,
+            stages=(dense_stage(block, 2),), max_seq_len=1024,
+        )
+    block = BlockConfig(
+        kind="attn_mlp", attention=gqa(48, 1, 128), mlp_dim=24576,
+        mlp_gated=False, activation="gelu",
+    )
+    return ModelConfig(
+        name="granite-34b", family="dense", d_model=6144, vocab_size=49152,
+        stages=(dense_stage(block, 88),), max_seq_len=8192,
+    )

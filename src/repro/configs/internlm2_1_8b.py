@@ -1,0 +1,21 @@
+"""internlm2-1.8b [dense]: 24L, d_model=2048, 16H (GQA kv=8, head_dim=128),
+d_ff=8192, vocab=92544.  [arXiv:2403.17297; hf]
+"""
+
+from .base import BlockConfig, ModelConfig, dense_stage, gqa
+
+
+def config(reduced: bool = False) -> ModelConfig:
+    if reduced:
+        block = BlockConfig(kind="attn_mlp", attention=gqa(4, 2, 16), mlp_dim=128)
+        return ModelConfig(
+            name="internlm2-1.8b", family="dense", d_model=64, vocab_size=512,
+            stages=(dense_stage(block, 2),), max_seq_len=1024,
+        )
+    block = BlockConfig(
+        kind="attn_mlp", attention=gqa(16, 8, 128, theta=1e6), mlp_dim=8192
+    )
+    return ModelConfig(
+        name="internlm2-1.8b", family="dense", d_model=2048, vocab_size=92544,
+        stages=(dense_stage(block, 24),), max_seq_len=32768,
+    )

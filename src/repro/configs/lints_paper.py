@@ -1,0 +1,38 @@
+"""The paper's own experimental configuration (§IV-A), as one place to import.
+
+Used by benchmarks (Tables II/III, Figs. 2-4) and examples/reproduce_paper.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.power import PowerModel
+from ..core.trace import FIG4_PATH, PAPER_ZONES
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperConfig:
+    n_jobs: int = 200
+    size_range_gb: tuple[float, float] = (10.0, 50.0)
+    deadline_range_h: tuple[int, int] = (48, 71)
+    horizon_hours: int = 72
+    slot_seconds: float = 900.0              # 288 x 15-minute slots
+    first_hop_gbps: float = 1.0
+    bandwidth_fractions: tuple[float, ...] = (0.25, 0.50, 0.75)
+    noise_levels: tuple[float, ...] = (0.05, 0.15)
+    # Path: source + intermediate + destination (§IV-A "Simulator"); the
+    # network supports up to 8 nodes (see ``long_path``).
+    path: tuple[str, ...] = ("US-NM", "US-WY", "US-SD")
+    long_path: tuple[str, ...] = FIG4_PATH   # 7-node AWS route of Fig. 4
+    zones: tuple[str, ...] = PAPER_ZONES
+    power: PowerModel = PowerModel(
+        p_max_w=100.0, p_min_w=88.0, s_rho=1.0 / 24.0, s_p=1.0 / 50.0,
+        theta_max=32.0,
+    )
+    dt_alpha: float = 50.0                   # DT threshold gap
+    worst_case_random_plans: int = 20
+    seeds: tuple[int, ...] = (0, 1, 2, 3, 4)  # trace windows for Fig. 3 spread
+
+
+PAPER = PaperConfig()

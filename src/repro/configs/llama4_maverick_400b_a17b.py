@@ -1,0 +1,41 @@
+"""llama4-maverick-400b-a17b [moe]: 400B total / ~17B active.
+
+48L, d_model=5120, 40H (GQA kv=8, head_dim=128), d_ff=8192, vocab=202048.
+MoE on every second layer (24 MoE layers): 128 routed experts top-1 plus
+one always-on shared expert (d_ff=8192 each).  Early-fusion multimodality
+is outside the assigned backbone scope (text path only).  bf16 params +
+8-bit Adam so optimizer state fits 16 GB/chip at 256 chips (DESIGN.md §5).
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+"""
+
+from .base import BlockConfig, ModelConfig, MoEConfig, Stage, gqa
+
+
+def config(reduced: bool = False) -> ModelConfig:
+    if reduced:
+        attn = gqa(4, 2, 16, theta=5e5)
+        dense = BlockConfig(kind="attn_mlp", attention=attn, mlp_dim=128)
+        moe = BlockConfig(
+            kind="moe", attention=attn,
+            moe=MoEConfig(num_experts=8, top_k=1, expert_ffn_dim=128,
+                          num_shared_experts=1, shared_ffn_dim=128,
+                          group_size=64),
+        )
+        return ModelConfig(
+            name="llama4-maverick-400b-a17b", family="moe", d_model=64,
+            vocab_size=512, stages=(Stage((dense, moe), 2),),
+            max_seq_len=1024,
+        )
+    attn = gqa(40, 8, 128, theta=5e5)
+    dense = BlockConfig(kind="attn_mlp", attention=attn, mlp_dim=8192)
+    moe = BlockConfig(
+        kind="moe", attention=attn,
+        moe=MoEConfig(num_experts=128, top_k=1, expert_ffn_dim=8192,
+                      num_shared_experts=1, shared_ffn_dim=8192,
+                      capacity_factor=1.25, group_size=512),
+    )
+    return ModelConfig(
+        name="llama4-maverick-400b-a17b", family="moe", d_model=5120,
+        vocab_size=202048, stages=(Stage((dense, moe), 24),),
+        max_seq_len=1048576, param_dtype="bfloat16",
+    )

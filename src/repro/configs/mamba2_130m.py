@@ -1,0 +1,26 @@
+"""mamba2-130m [ssm]: pure SSD, attention-free.
+
+24L, d_model=768, d_state=128, head_dim=64, expand=2 (d_inner=1536, 24 ssm
+heads), conv_width=4, vocab=50280, tied embeddings.
+[arXiv:2405.21060; unverified]
+"""
+
+from .base import BlockConfig, ModelConfig, SSMConfig, dense_stage
+
+
+def config(reduced: bool = False) -> ModelConfig:
+    if reduced:
+        block = BlockConfig(kind="mamba", ssm=SSMConfig(d_state=16, head_dim=8, chunk=32))
+        return ModelConfig(
+            name="mamba2-130m", family="ssm", d_model=64, vocab_size=512,
+            stages=(dense_stage(block, 2),), tie_embeddings=True,
+            max_seq_len=2048,
+        )
+    block = BlockConfig(
+        kind="mamba", ssm=SSMConfig(d_state=128, head_dim=64, expand=2, chunk=256)
+    )
+    return ModelConfig(
+        name="mamba2-130m", family="ssm", d_model=768, vocab_size=50280,
+        stages=(dense_stage(block, 24),), tie_embeddings=True,
+        max_seq_len=1048576,
+    )

@@ -1,0 +1,32 @@
+"""musicgen-large [audio]: decoder-only over EnCodec tokens.
+
+48L, d_model=2048, 32H (MHA: kv=32, head_dim=64), d_ff=8192, vocab=2048
+(one EnCodec codebook; the codec frontend is a stub supplying frame
+embeddings).  Original uses LayerNorm + non-gated GELU FFN + sinusoidal
+positions; we keep LayerNorm/GELU and substitute RoPE (TPU-idiomatic;
+noted in DESIGN.md).  [arXiv:2306.05284; hf]
+"""
+
+from .base import BlockConfig, ModelConfig, dense_stage, gqa
+
+
+def config(reduced: bool = False) -> ModelConfig:
+    if reduced:
+        block = BlockConfig(
+            kind="attn_mlp", attention=gqa(4, 4, 16), mlp_dim=128,
+            mlp_gated=False, activation="gelu",
+        )
+        return ModelConfig(
+            name="musicgen-large", family="audio", d_model=64, vocab_size=256,
+            stages=(dense_stage(block, 2),), norm="layer",
+            embedding_inputs=True, max_seq_len=1024,
+        )
+    block = BlockConfig(
+        kind="attn_mlp", attention=gqa(32, 32, 64), mlp_dim=8192,
+        mlp_gated=False, activation="gelu",
+    )
+    return ModelConfig(
+        name="musicgen-large", family="audio", d_model=2048, vocab_size=2048,
+        stages=(dense_stage(block, 48),), norm="layer",
+        embedding_inputs=True, max_seq_len=32768,
+    )

@@ -1,0 +1,29 @@
+"""pixtral-12b [vlm]: Pixtral-ViT + Mistral-Nemo-style decoder backbone.
+
+40L, d_model=5120, 32H (GQA kv=8, head_dim=128 — attention dim 4096 < d),
+d_ff=14336, vocab=131072.  Vision frontend is a stub: training inputs are
+precomputed patch embeddings (B, S, d); the text path embeds tokens.
+[hf:mistralai/Pixtral-12B-2409; unverified]
+"""
+
+from .base import BlockConfig, ModelConfig, dense_stage, gqa
+
+
+def config(reduced: bool = False) -> ModelConfig:
+    if reduced:
+        block = BlockConfig(
+            kind="attn_mlp", attention=gqa(4, 2, 16, theta=1e6), mlp_dim=128
+        )
+        return ModelConfig(
+            name="pixtral-12b", family="vlm", d_model=64, vocab_size=512,
+            stages=(dense_stage(block, 2),), embedding_inputs=True,
+            max_seq_len=1024,
+        )
+    block = BlockConfig(
+        kind="attn_mlp", attention=gqa(32, 8, 128, theta=1e6), mlp_dim=14336
+    )
+    return ModelConfig(
+        name="pixtral-12b", family="vlm", d_model=5120, vocab_size=131072,
+        stages=(dense_stage(block, 40),), embedding_inputs=True,
+        max_seq_len=131072,
+    )

@@ -1,0 +1,24 @@
+"""qwen2.5-14b [dense]: 48L, d_model=5120, 40H (GQA kv=8, head_dim=128),
+d_ff=13824, vocab=152064, QKV bias.  [hf:Qwen/Qwen2.5-0.5B; hf]
+"""
+
+from .base import BlockConfig, ModelConfig, dense_stage, gqa
+
+
+def config(reduced: bool = False) -> ModelConfig:
+    if reduced:
+        block = BlockConfig(
+            kind="attn_mlp", attention=gqa(4, 2, 16, bias=True), mlp_dim=128
+        )
+        return ModelConfig(
+            name="qwen2.5-14b", family="dense", d_model=64, vocab_size=512,
+            stages=(dense_stage(block, 2),), max_seq_len=1024,
+        )
+    block = BlockConfig(
+        kind="attn_mlp", attention=gqa(40, 8, 128, bias=True, theta=1e6),
+        mlp_dim=13824,
+    )
+    return ModelConfig(
+        name="qwen2.5-14b", family="dense", d_model=5120, vocab_size=152064,
+        stages=(dense_stage(block, 48),), max_seq_len=131072,
+    )

@@ -1,0 +1,73 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig (+ training prefs)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from . import (
+    deepseek_v2_lite_16b,
+    gemma3_27b,
+    granite_34b,
+    internlm2_1_8b,
+    llama4_maverick_400b_a17b,
+    mamba2_130m,
+    musicgen_large,
+    pixtral_12b,
+    qwen2_5_14b,
+    zamba2_7b,
+)
+from .base import ModelConfig, shapes_for
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    make: Callable[[bool], ModelConfig]      # make(reduced) -> ModelConfig
+    optimizer: str = "adamw"                 # "adamw8bit" for 100B+ params
+    notes: str = ""
+
+    def model(self, reduced: bool = False) -> ModelConfig:
+        return self.make(reduced)
+
+
+ARCHS: dict[str, ArchSpec] = {
+    "pixtral-12b": ArchSpec("pixtral-12b", pixtral_12b.config,
+                            notes="vlm backbone; patch-embedding stub"),
+    "deepseek-v2-lite-16b": ArchSpec("deepseek-v2-lite-16b",
+                                     deepseek_v2_lite_16b.config,
+                                     notes="MLA + 2 shared/64 routed top-6"),
+    "llama4-maverick-400b-a17b": ArchSpec(
+        "llama4-maverick-400b-a17b", llama4_maverick_400b_a17b.config,
+        optimizer="adamw8bit",
+        notes="400B MoE; bf16 params + 8-bit Adam to fit 16GB/chip",
+    ),
+    "internlm2-1.8b": ArchSpec("internlm2-1.8b", internlm2_1_8b.config),
+    "qwen2.5-14b": ArchSpec("qwen2.5-14b", qwen2_5_14b.config,
+                            notes="QKV bias; 40 heads pad to 48 on 16-way TP"),
+    "gemma3-27b": ArchSpec("gemma3-27b", gemma3_27b.config,
+                           notes="5:1 local:global; ring KV for local layers"),
+    "granite-34b": ArchSpec("granite-34b", granite_34b.config,
+                            notes="88L MQA; KV replicated across TP"),
+    "zamba2-7b": ArchSpec("zamba2-7b", zamba2_7b.config,
+                          notes="hybrid; shared attn params, per-invocation KV"),
+    "musicgen-large": ArchSpec("musicgen-large", musicgen_large.config,
+                               notes="audio backbone; codec stub"),
+    "mamba2-130m": ArchSpec("mamba2-130m", mamba2_130m.config,
+                            notes="pure SSD; attention-free"),
+}
+
+
+def get(name: str) -> ArchSpec:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)
+
+
+def cells() -> list[tuple[str, str]]:
+    """All assigned (arch x shape) baseline cells (skips per DESIGN.md §4)."""
+    return [(a, s) for a in sorted(ARCHS) for s in shapes_for(a)]

@@ -1,0 +1,37 @@
+"""zamba2-7b [hybrid]: Mamba2 backbone + one *shared* attention block.
+
+81 layers, d_model=3584: 13 x (5 mamba + 1 shared attn block) + 3 mamba.
+The attention block (32H, kv=32, head_dim=112, d_ff=14336) reuses ONE
+parameter set across all 13 invocations (Zamba's signature trick) but keeps
+a distinct KV cache per invocation.  Mamba2: d_state=64, head_dim=64,
+expand=2 (d_inner=7168, 112 ssm heads).  [arXiv:2411.15242; unverified]
+"""
+
+from .base import BlockConfig, ModelConfig, SSMConfig, Stage, gqa
+
+
+def config(reduced: bool = False) -> ModelConfig:
+    if reduced:
+        mamba = BlockConfig(kind="mamba", ssm=SSMConfig(d_state=16, head_dim=8, chunk=32))
+        shared = BlockConfig(
+            kind="attn_mlp", attention=gqa(4, 4, 16), mlp_dim=128, shared=True
+        )
+        return ModelConfig(
+            name="zamba2-7b", family="hybrid", d_model=64, vocab_size=512,
+            stages=(Stage((mamba, mamba, shared), 2), Stage((mamba,), 1)),
+            max_seq_len=2048,
+        )
+    mamba = BlockConfig(
+        kind="mamba", ssm=SSMConfig(d_state=64, head_dim=64, expand=2, chunk=256)
+    )
+    shared = BlockConfig(
+        kind="attn_mlp", attention=gqa(32, 32, 112), mlp_dim=14336, shared=True
+    )
+    return ModelConfig(
+        name="zamba2-7b", family="hybrid", d_model=3584, vocab_size=32000,
+        stages=(
+            Stage((mamba, mamba, mamba, mamba, mamba, shared), 13),
+            Stage((mamba,), 3),
+        ),
+        max_seq_len=1048576,
+    )

@@ -1,0 +1,32 @@
+"""LinTS core: carbon-aware temporal data-transfer scheduling (the paper's
+primary contribution), plus the baseline heuristics and emissions simulator
+it is evaluated against.
+
+Submodules:
+  trace          carbon-intensity traces (synthetic + ElectricityMaps CSV)
+  power          Eqs. 1-7 throughput/power models
+  problem        requests -> dense LP tensors
+  scipy_backend  paper-faithful SciPy/HiGHS LP solve
+  pdhg           TPU-native restarted-averaged PDHG (PDLP-style) in JAX
+  heuristics     FCFS / EDF / Worst-Case / ST / DT baselines
+  simulator      noisy-trace emissions evaluation
+  feasibility    checks, greedy fill, repair
+  lints          public scheduling API
+"""
+
+from . import (  # noqa: F401
+    feasibility,
+    heuristics,
+    lints,
+    pdhg,
+    plan,
+    power,
+    problem,
+    scipy_backend,
+    simulator,
+    trace,
+)
+from .lints import LinTSConfig, build, schedule, solve  # noqa: F401
+from .plan import InfeasibleError, Plan  # noqa: F401
+from .problem import ScheduleProblem, TransferRequest, build_problem, paper_workload  # noqa: F401
+from .trace import TraceSet, make_trace_set  # noqa: F401

@@ -1,0 +1,160 @@
+"""Feasibility checking, greedy capacity-tracked filling, and plan repair.
+
+``greedy_fill`` is the shared primitive behind every heuristic scheduler
+(FCFS/EDF/Worst-Case/ST/DT), LP vertex rounding, and plan repair: requests
+are processed in an algorithm-specific priority order; each walks its
+candidate slots (an algorithm-specific ranking of its masked slots) taking
+``min(per-request rate cap, remaining slot capacity)`` until its bytes are
+delivered.  See DESIGN.md §Fidelity for why capacity tracking is required.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+from .plan import InfeasibleError
+from .problem import ScheduleProblem
+
+_BIT_TOL = 1.0  # absolute slack (bits) tolerated in completion checks
+
+
+@dataclasses.dataclass(frozen=True)
+class FeasibilityReport:
+    byte_shortfall_bits: np.ndarray   # (n_jobs,) max(0, J_i - delivered_i)
+    capacity_excess_bps: np.ndarray   # (n_slots,) max(0, used_j - L)
+    bound_violation_bps: float        # max over cells of bound/mask violation
+    feasible: bool
+
+    def worst(self) -> float:
+        return float(
+            max(
+                self.byte_shortfall_bits.max(initial=0.0),
+                self.capacity_excess_bps.max(initial=0.0),
+                self.bound_violation_bps,
+            )
+        )
+
+
+def check_plan(
+    problem: ScheduleProblem,
+    rho_bps: np.ndarray,
+    rel_tol: float = 1e-6,
+) -> FeasibilityReport:
+    rho = np.asarray(rho_bps, dtype=np.float64)
+    delivered = rho.sum(axis=1) * problem.slot_seconds
+    shortfall = np.maximum(0.0, problem.size_bits - delivered)
+    used = rho.sum(axis=0)
+    excess = np.maximum(0.0, used - problem.capacity_bps)
+    outside = np.abs(np.where(problem.mask, 0.0, rho)).max(initial=0.0)
+    over_cap = np.maximum(0.0, rho - problem.rate_cap_bps).max(initial=0.0)
+    negative = np.maximum(0.0, -rho).max(initial=0.0)
+    bound = float(max(outside, over_cap, negative))
+    feasible = bool(
+        (shortfall <= rel_tol * problem.size_bits + _BIT_TOL).all()
+        and (excess <= rel_tol * problem.capacity_bps).all()
+        and bound <= rel_tol * problem.rate_cap_bps
+    )
+    return FeasibilityReport(shortfall, excess, bound, feasible)
+
+
+def workload_feasible(problem: ScheduleProblem) -> tuple[bool, str]:
+    """Necessary-and-sufficient check for the single-link problem.
+
+    For a shared bottleneck, EDF is optimal w.r.t. feasibility: for every
+    time t, the total demand of requests with deadline <= t must fit in the
+    capacity available to them.  (Per-request rate caps are also respected
+    by a max-flow argument; we check the simple aggregate bounds plus the
+    per-request ``D_i * rate_cap`` bound.)
+    """
+    per_slot_bits = problem.capacity_bps * problem.slot_seconds
+    # Per-request: even alone, a request cannot exceed rate_cap per slot.
+    avail = (problem.deadlines - problem.offsets) * problem.rate_cap_bps * problem.slot_seconds
+    bad = problem.size_bits > avail + _BIT_TOL
+    if bad.any():
+        i = int(np.argmax(bad))
+        return False, (
+            f"request {i} needs {problem.size_bits[i]:.3g} bits but can move at most "
+            f"{avail[i]:.3g} before its deadline even at max threads"
+        )
+    # Aggregate EDF bound.
+    order = np.argsort(problem.deadlines)
+    cum = 0.0
+    for i in order:
+        cum += problem.size_bits[i]
+        t = problem.deadlines[i]
+        if cum > t * per_slot_bits + _BIT_TOL:
+            return False, (
+                f"aggregate demand with deadline <= slot {t} is {cum:.3g} bits "
+                f"but capacity is {t * per_slot_bits:.3g}"
+            )
+    return True, "ok"
+
+
+SlotRanker = Callable[[int], Iterable[int]]
+
+
+def greedy_fill(
+    problem: ScheduleProblem,
+    job_order: Sequence[int],
+    slot_ranker: SlotRanker,
+    rho_init: np.ndarray | None = None,
+    strict: bool = True,
+) -> np.ndarray:
+    """Capacity-tracked greedy allocation (see module docstring).
+
+    ``rho_init`` seeds pre-existing allocations (used by vertex rounding);
+    only the *remaining* bytes of each job are placed.  Returns rho (bps).
+    Raises :class:`InfeasibleError` when ``strict`` and a job cannot finish.
+    """
+    n_jobs, n_slots = problem.cost.shape
+    rho = np.zeros((n_jobs, n_slots)) if rho_init is None else np.array(rho_init, dtype=np.float64)
+    slot_bits_left = problem.capacity_bps * problem.slot_seconds - rho.sum(axis=0) * problem.slot_seconds
+    cell_cap_bits = problem.rate_cap_bps * problem.slot_seconds
+    for i in job_order:
+        need = problem.size_bits[i] - rho[i].sum() * problem.slot_seconds
+        if need <= _BIT_TOL:
+            continue
+        for j in slot_ranker(i):
+            if need <= _BIT_TOL:
+                break
+            if not problem.mask[i, j]:
+                continue
+            cell_room = cell_cap_bits - rho[i, j] * problem.slot_seconds
+            take = min(need, cell_room, slot_bits_left[j])
+            if take <= 0.0:
+                continue
+            rho[i, j] += take / problem.slot_seconds
+            slot_bits_left[j] -= take
+            need -= take
+        if strict and need > _BIT_TOL + 1e-9 * problem.size_bits[i]:
+            raise InfeasibleError(
+                f"job {i}: {need:.4g} bits undeliverable before slot "
+                f"{problem.deadlines[i]} (algorithmic slot choice too restrictive)"
+            )
+    return rho
+
+
+def repair_plan(problem: ScheduleProblem, rho_bps: np.ndarray) -> np.ndarray:
+    """Make a nearly feasible plan exactly feasible.
+
+    Clips bounds/capacity, then tops up any byte shortfall greedily on the
+    cheapest remaining slots.  Used to guard iterative-solver tolerance so
+    the simulator never sees SLA violations caused by solver epsilon.
+    """
+    rho = np.clip(np.asarray(rho_bps, dtype=np.float64), 0.0, problem.rate_cap_bps)
+    rho = np.where(problem.mask, rho, 0.0)
+    used = rho.sum(axis=0)
+    over = used > problem.capacity_bps
+    if over.any():
+        scale = np.where(over, problem.capacity_bps / np.maximum(used, 1e-30), 1.0)
+        rho = rho * scale[None, :]
+
+    def cheapest(i: int) -> Iterable[int]:
+        cols = np.nonzero(problem.mask[i])[0]
+        return cols[np.argsort(problem.cost[i, cols], kind="stable")]
+
+    order = np.argsort(problem.deadlines, kind="stable")
+    return greedy_fill(problem, order, cheapest, rho_init=rho, strict=True)

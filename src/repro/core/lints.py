@@ -1,0 +1,96 @@
+"""LinTS public API: the paper's scheduler as a composable library.
+
+Typical use (mirrors §III-C "designed to integrate with data transfer
+services as a Python library"):
+
+    from repro.core import lints, problem, trace
+
+    traces = trace.make_trace_set(trace.PAPER_ZONES)
+    reqs = problem.paper_workload()
+    plan = lints.schedule(reqs, traces, capacity_gbps=0.5)
+    threads = plan.threads(lints.build(reqs, traces, 0.5))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .feasibility import check_plan, workload_feasible
+from .pdhg import PDHGConfig, solve_pdhg, vertex_round
+from .plan import InfeasibleError, Plan
+from .power import DEFAULT_POWER_MODEL, PowerModel
+from .problem import ScheduleProblem, TransferRequest, build_problem
+from .scipy_backend import solve_scipy
+from .trace import TraceSet
+
+
+@dataclasses.dataclass(frozen=True)
+class LinTSConfig:
+    backend: str = "scipy"             # "scipy" (paper-faithful) | "pdhg" (TPU-native)
+    pdhg: PDHGConfig = PDHGConfig()
+    # Concentration tie-break: the LP is massively degenerate (equal-cost
+    # slots), and a vertex that splits a job across k equal-cost cells pays
+    # ~k * P_min in the nonlinear simulator for the same objective.  Rounding
+    # keeps the LP objective (±eps) while minimizing active cells.
+    vertex_round: bool = True
+    # Beyond-paper: emission-aware refinement under the exact power curve
+    # (core/refine.py).  Returned plan is tagged "lints+".
+    refine: bool = False
+    validate: bool = True              # assert feasibility of the returned plan
+
+
+def build(
+    requests: Sequence[TransferRequest],
+    traces: TraceSet,
+    capacity_gbps: float,
+    power: PowerModel = DEFAULT_POWER_MODEL,
+) -> ScheduleProblem:
+    return build_problem(requests, traces, capacity_gbps, power)
+
+
+def solve(problem: ScheduleProblem, config: LinTSConfig = LinTSConfig()) -> Plan:
+    ok, why = workload_feasible(problem)
+    if not ok:
+        raise InfeasibleError(f"workload infeasible: {why}")
+    if config.backend == "scipy":
+        plan = solve_scipy(problem)
+    elif config.backend == "pdhg":
+        plan = solve_pdhg(problem, config.pdhg)
+    else:
+        raise ValueError(f"unknown backend {config.backend!r}")
+    if config.vertex_round:
+        try:
+            plan = vertex_round(problem, plan)
+        except InfeasibleError:
+            pass  # tight capacity: keep the raw (already feasible) vertex
+    if config.refine:
+        from .refine import refine_plan
+
+        plan = refine_plan(problem, plan)
+    if config.validate:
+        report = check_plan(problem, plan.rho_bps, rel_tol=1e-5)
+        if not report.feasible:
+            raise InfeasibleError(
+                f"{config.backend} produced an infeasible plan "
+                f"(worst violation {report.worst():.3g})"
+            )
+    return plan
+
+
+def schedule(
+    requests: Sequence[TransferRequest],
+    traces: TraceSet,
+    capacity_gbps: float,
+    power: PowerModel = DEFAULT_POWER_MODEL,
+    config: LinTSConfig = LinTSConfig(),
+) -> Plan:
+    """End-to-end: requests + forecasts -> feasible carbon-minimal plan."""
+    return solve(build(requests, traces, capacity_gbps, power), config)
+
+
+def thread_plan(problem: ScheduleProblem, plan: Plan) -> np.ndarray:
+    """Algorithm 1 line 24: throughput plan -> thread plan (Eq. 4)."""
+    return plan.threads(problem)

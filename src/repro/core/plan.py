@@ -1,0 +1,39 @@
+"""Plan representation shared by LinTS and all heuristic schedulers."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from .power import GBPS
+from .problem import ScheduleProblem
+
+
+@dataclasses.dataclass
+class Plan:
+    """A throughput plan: rho[i, j] bits/s for request i in slot j."""
+
+    rho_bps: np.ndarray
+    algorithm: str
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def threads(self, problem: ScheduleProblem) -> np.ndarray:
+        """Thread plan via Eq. 4 (clipped at theta_max)."""
+        rho_gbps = np.asarray(self.rho_bps) / GBPS
+        return np.asarray(problem.power.threads(rho_gbps, problem.l_gbps))
+
+    def bits_delivered(self, problem: ScheduleProblem) -> np.ndarray:
+        return self.rho_bps.sum(axis=1) * problem.slot_seconds
+
+    def active_slots(self) -> int:
+        return int((self.rho_bps > 0).any(axis=0).sum())
+
+    def objective(self, problem: ScheduleProblem) -> float:
+        """The LP objective sum(c * rho) (arbitrary units, for solver parity)."""
+        return float((problem.cost * self.rho_bps).sum())
+
+
+class InfeasibleError(RuntimeError):
+    """Raised when a scheduler cannot meet every deadline under capacity."""

@@ -1,0 +1,95 @@
+"""Throughput/power models of the paper (Eqs. 1-7).
+
+Unit conventions (paper §III-A / §IV-A):
+  * throughput ``rho`` and bandwidth limit ``L`` are in **Gbps** inside this
+    module (the paper's scale constants ``s_rho = 1/24``, ``s_P = 1/50``
+    only make sense with L expressed in Gbps and P in watts);
+  * power is in watts; threads are continuous (the LP relaxation).
+
+The rest of the framework works in bits/s; :data:`GBPS` converts.
+
+Note on Eq. 4: the paper prints ``theta(rho) = 1/(L s_P) * rho/(L - rho)``,
+but inverting Eq. 1 gives ``1/(L s_rho)``.  We use ``s_rho`` (the round-trip
+``theta -> rho -> theta`` identity is covered by tests); see DESIGN.md
+§Fidelity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+GBPS = 1.0e9  # bits/s per Gbps
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerModel:
+    """Parameters of Eqs. 1-7 (paper defaults from §IV-A)."""
+
+    p_max_w: float = 100.0
+    p_min_w: float = 88.0
+    s_rho: float = 1.0 / 24.0   # throughput scale  [1/(Gbps * threads)]
+    s_p: float = 1.0 / 50.0     # power scale       [1/(W * threads)]
+    theta_max: float = 32.0     # measured thread range in the paper (4..32)
+
+    @property
+    def delta_p_w(self) -> float:  # Eq. 2
+        return self.p_max_w - self.p_min_w
+
+    # --- Eq. 1: threads -> throughput -------------------------------------
+    def throughput_gbps(self, theta, l_gbps: float):
+        xp = np if _use_np(theta) else jnp
+        theta = xp.asarray(theta)
+        return l_gbps * (1.0 - 1.0 / (self.s_rho * l_gbps * theta + 1.0))
+
+    # --- Eq. 3: threads -> power ------------------------------------------
+    def power_w(self, theta):
+        dp = self.delta_p_w
+        active = theta > 0
+        p = dp * (1.0 - 1.0 / (self.s_p * dp * theta + 1.0)) + self.p_min_w
+        # The simulator charges zero power for empty slots (paper §III-C).
+        return jnp.where(active, p, 0.0) if not _use_np(theta) else np.where(active, p, 0.0)
+
+    # --- Eq. 4 (corrected): throughput -> threads --------------------------
+    def threads(self, rho_gbps, l_gbps: float, clip: bool = True):
+        xp = np if _use_np(rho_gbps) else jnp
+        rho = xp.asarray(rho_gbps)
+        denom = xp.maximum(l_gbps - rho, 1e-12)
+        theta = (1.0 / (l_gbps * self.s_rho)) * (rho / denom)
+        if clip:
+            theta = xp.clip(theta, 0.0, self.theta_max)
+        return theta
+
+    # --- Eq. 6: exact power as a function of throughput ---------------------
+    def power_of_rho_exact_w(self, rho_gbps, l_gbps: float):
+        xp = np if _use_np(rho_gbps) else jnp
+        rho = xp.asarray(rho_gbps)
+        dp = self.delta_p_w
+        k = (self.s_p * dp) / (self.s_rho * l_gbps)  # Eq. 5
+        p = self.p_max_w + dp * (rho - l_gbps) / ((k - 1.0) * rho + l_gbps)
+        return xp.where(rho > 0, p, 0.0)
+
+    # --- Eq. 7: linearized power (the LP objective's physical basis) --------
+    def power_of_rho_linear_w(self, rho_gbps, l_gbps: float):
+        xp = np if _use_np(rho_gbps) else jnp
+        rho = xp.asarray(rho_gbps)
+        p = (self.delta_p_w / l_gbps) * rho + self.p_min_w
+        return xp.where(rho > 0, p, 0.0)
+
+    # --- derived: the executable per-request rate ceiling -------------------
+    def rate_cap_gbps(self, l_gbps: float) -> float:
+        """Max throughput achievable with ``theta_max`` threads (Eq. 1).
+
+        Plans are bounded by this instead of the raw L so Eq. 4 never asks
+        for infinite threads (DESIGN.md §Fidelity).
+        """
+        return float(self.throughput_gbps(np.float64(self.theta_max), l_gbps))
+
+
+def _use_np(x) -> bool:
+    return isinstance(x, (float, int, np.ndarray, np.generic, list, tuple))
+
+
+DEFAULT_POWER_MODEL = PowerModel()

@@ -1,0 +1,147 @@
+"""Transfer-scheduling problem construction (paper §III-A/B).
+
+A :class:`ScheduleProblem` is the dense tensor form of the paper's LP:
+
+    minimize    sum_ij  c[i,j] * rho[i,j]
+    subject to  slot_seconds * sum_j rho[i,j] >= size_bits[i]   (byte/"time-slot")
+                sum_i rho[i,j] <= capacity_bps                  (shared bandwidth)
+                0 <= rho[i,j] <= rate_cap_bps * mask[i,j]       (input + deadline)
+
+The deadline constraint is encoded *structurally* via ``mask`` (the paper
+encodes it "through the dimensions of the throughput vector"); masked-out
+cells are fixed at zero.  ``rate_cap_bps`` is ``rho(theta_max)`` rather than
+the raw bottleneck L so every plan converts to a finite thread count
+(DESIGN.md §Fidelity).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .power import GBPS, DEFAULT_POWER_MODEL, PowerModel
+from .trace import TraceSet
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferRequest:
+    """One inter-datacenter transfer request J_i with deadline D_i."""
+
+    size_gb: float                    # J_i, gigabytes
+    deadline_slots: int               # D_i, slots from origin (exclusive)
+    path: tuple[str, ...]             # zones of src, intermediates, dst
+    offset_slots: int = 0             # arrival slot
+    request_id: str = ""
+    weights: tuple[float, ...] | None = None  # per-node weights (default equal)
+
+    @property
+    def size_bits(self) -> float:
+        return self.size_gb * 8.0e9
+
+    def __post_init__(self):
+        if self.deadline_slots <= self.offset_slots:
+            raise ValueError(
+                f"request {self.request_id!r}: deadline ({self.deadline_slots}) "
+                f"must exceed offset ({self.offset_slots})"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleProblem:
+    cost: np.ndarray          # (n_jobs, n_slots) path-combined gCO2/kWh
+    mask: np.ndarray          # (n_jobs, n_slots) bool — slot usable by job
+    size_bits: np.ndarray     # (n_jobs,)
+    deadlines: np.ndarray     # (n_jobs,) int
+    offsets: np.ndarray       # (n_jobs,) int
+    capacity_bps: float       # shared per-slot limit L (bits/s)
+    rate_cap_bps: float       # per-job per-slot ceiling rho(theta_max) (bits/s)
+    slot_seconds: float
+    power: PowerModel = DEFAULT_POWER_MODEL
+
+    @property
+    def n_jobs(self) -> int:
+        return int(self.cost.shape[0])
+
+    @property
+    def n_slots(self) -> int:
+        return int(self.cost.shape[1])
+
+    @property
+    def l_gbps(self) -> float:
+        return self.capacity_bps / GBPS
+
+    def dim_rho(self) -> int:
+        """The paper's ``dim(rho) = sum_i D_i`` (masked cell count)."""
+        return int(self.mask.sum())
+
+
+def build_problem(
+    requests: Sequence[TransferRequest],
+    traces: TraceSet,
+    capacity_gbps: float,
+    power: PowerModel = DEFAULT_POWER_MODEL,
+) -> ScheduleProblem:
+    """Assemble the dense LP tensors from requests + carbon traces."""
+    if not requests:
+        raise ValueError("need at least one transfer request")
+    n_slots = traces.n_slots
+    n_jobs = len(requests)
+    cost = np.zeros((n_jobs, n_slots), dtype=np.float64)
+    mask = np.zeros((n_jobs, n_slots), dtype=bool)
+    size_bits = np.zeros(n_jobs)
+    deadlines = np.zeros(n_jobs, dtype=np.int64)
+    offsets = np.zeros(n_jobs, dtype=np.int64)
+    for i, req in enumerate(requests):
+        if req.deadline_slots > n_slots:
+            raise ValueError(
+                f"request {req.request_id!r} deadline {req.deadline_slots} exceeds "
+                f"trace horizon {n_slots}"
+            )
+        cost[i] = traces.path_intensity(req.path, req.weights)
+        mask[i, req.offset_slots : req.deadline_slots] = True
+        size_bits[i] = req.size_bits
+        deadlines[i] = req.deadline_slots
+        offsets[i] = req.offset_slots
+    cost = np.where(mask, cost, 0.0)
+    rate_cap_bps = power.rate_cap_gbps(capacity_gbps) * GBPS
+    return ScheduleProblem(
+        cost=cost,
+        mask=mask,
+        size_bits=size_bits,
+        deadlines=deadlines,
+        offsets=offsets,
+        capacity_bps=capacity_gbps * GBPS,
+        rate_cap_bps=rate_cap_bps,
+        slot_seconds=traces.slot_seconds,
+        power=power,
+    )
+
+
+def paper_workload(
+    n_jobs: int = 200,
+    seed: int = 0,
+    path: tuple[str, ...] = ("US-NM", "US-WY", "US-SD"),
+    size_range_gb: tuple[float, float] = (10.0, 50.0),
+    deadline_range_h: tuple[int, int] = (48, 71),
+    slots_per_hour: int = 4,
+) -> list[TransferRequest]:
+    """The paper's evaluation workload (§IV-A "Transfer requests").
+
+    200 requests queued at the origin (t=0), 10-50 GB, deadlines 48-71 h.
+    The default path is source + intermediate + destination (§IV-A
+    "Simulator"); longer paths (up to 8 nodes) are supported via ``path``.
+    """
+    rng = np.random.default_rng(seed)
+    sizes = rng.uniform(*size_range_gb, size=n_jobs)
+    deadlines_h = rng.integers(deadline_range_h[0], deadline_range_h[1] + 1, size=n_jobs)
+    return [
+        TransferRequest(
+            size_gb=float(sizes[i]),
+            deadline_slots=int(deadlines_h[i]) * slots_per_hour,
+            path=path,
+            request_id=f"req-{i:04d}",
+        )
+        for i in range(n_jobs)
+    ]

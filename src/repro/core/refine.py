@@ -1,0 +1,118 @@
+"""LinTS+ : emission-aware plan refinement (beyond-paper optimization).
+
+The paper's LP minimizes sum(c * rho) — the *linearized* power proxy (Eq. 7).
+The simulator, however, charges the exact concave curve (Eq. 3): an active
+cell pays ~P_min regardless of throughput, so per-bit emissions at partial
+throughput are 2-3x those of a full cell.  The LP is indifferent; measured
+against strong capacity-sharing baselines this costs LinTS ~5-8% (see
+EXPERIMENTS.md §Paper).
+
+Because cell emission c * P(rho) is concave increasing in rho, each job's
+exact-emission-optimal allocation (holding other jobs fixed) has at most ONE
+partial cell: k-1 slots at the rate cap plus one remainder.  LinTS+ therefore
+re-optimizes jobs round-robin:
+
+  1. release the job's current allocation;
+  2. choose k-1 full cells greedily by c among slots with headroom;
+  3. place the remainder at the slot minimizing c * P(remainder-rate),
+     considering topping up *after* full placement;
+  4. keep the move only if the job's true emission decreases.
+
+Rounds repeat until no job improves (typically 2-3 rounds).  The result
+stays feasible (same bytes, same caps/capacity) and never emits more than
+the input plan.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .plan import Plan
+from .power import GBPS
+from .problem import ScheduleProblem
+
+
+def _cell_emission(problem: ScheduleProblem, c, rho_bps):
+    """Exact per-cell emission (gCO2) at throughput rho (scalar or array)."""
+    theta = problem.power.threads(np.asarray(rho_bps) / GBPS, problem.l_gbps)
+    p = problem.power.power_w(np.asarray(theta))
+    return p * problem.slot_seconds / 3.6e6 * c
+
+
+def _job_emission(problem, cost_row, rho_row):
+    return float(np.sum(_cell_emission(problem, cost_row, rho_row)))
+
+
+def refine_plan(problem: ScheduleProblem, plan: Plan,
+                max_rounds: int = 4) -> Plan:
+    rho = np.array(plan.rho_bps, dtype=np.float64)
+    dt = problem.slot_seconds
+    cap_bits = problem.rate_cap_bps * dt
+    slot_cap = problem.capacity_bps
+    n_jobs, _ = rho.shape
+
+    improved_total = 0.0
+    for _ in range(max_rounds):
+        improved = False
+        slot_used = rho.sum(axis=0)
+        for i in range(n_jobs):
+            cols = np.nonzero(problem.mask[i])[0]
+            if cols.size == 0:
+                continue
+            need_bits = rho[i].sum() * dt
+            if need_bits <= 1.0:
+                continue
+            cur_e = _job_emission(problem, problem.cost[i], rho[i])
+            # Headroom with this job's own allocation released.
+            head = np.minimum(
+                slot_cap - (slot_used - rho[i]), problem.rate_cap_bps
+            )[cols]
+            head = np.maximum(head, 0.0)
+            order = np.argsort(problem.cost[i, cols], kind="stable")
+            # Greedy: full cells at the cheapest slots with full headroom,
+            # then the remainder at its emission-optimal slot.
+            new_row = np.zeros_like(rho[i])
+            remaining = need_bits
+            used_slots = []
+            for oi in order:
+                j = cols[oi]
+                h_bits = head[oi] * dt
+                if remaining <= 1.0:
+                    break
+                if h_bits + 1e-6 >= cap_bits and remaining >= cap_bits:
+                    new_row[j] = problem.rate_cap_bps
+                    remaining -= cap_bits
+                    used_slots.append(oi)
+            if remaining > 1.0:
+                # Place the remainder: candidates are free slots (rate =
+                # remainder) or nothing (if no slot fits, fall back).
+                best_j, best_e = -1, np.inf
+                for oi in order:
+                    j = cols[oi]
+                    if new_row[j] > 0:
+                        continue
+                    h_bits = head[oi] * dt
+                    if h_bits + 1e-6 < remaining:
+                        continue
+                    e = float(_cell_emission(
+                        problem, problem.cost[i, j], remaining / dt))
+                    if e < best_e:
+                        best_e, best_j = e, j
+                if best_j < 0:
+                    continue  # cannot restructure; keep current allocation
+                new_row[best_j] = remaining / dt
+                remaining = 0.0
+            new_e = _job_emission(problem, problem.cost[i], new_row)
+            if new_e < cur_e - 1e-9:
+                slot_used = slot_used - rho[i] + new_row
+                rho[i] = new_row
+                improved = True
+                improved_total += cur_e - new_e
+        if not improved:
+            break
+
+    meta = dict(plan.meta)
+    meta["refined"] = True
+    meta["refine_gain_gco2"] = improved_total
+    meta["objective_refined"] = float((problem.cost * rho).sum())
+    return Plan(rho, plan.algorithm + "+", meta)

@@ -1,0 +1,143 @@
+"""Spatiotemporal LinTS (the paper's §V future work, implemented).
+
+"With additional constraints, LinTS can be extended for spatiotemporal
+scheduling" — here each request carries *candidate routes* (e.g. alternative
+replica destinations or overlay paths a la CADRE), and the LP jointly picks
+when AND which way to send:
+
+    variables   rho[i, p, j] >= 0      (request i, candidate path p, slot j)
+    minimize    sum c[i,p,j] * rho[i,p,j]
+    subject to  dt * sum_{p,j} rho[i,p,j] >= J_i          (bytes, any mix)
+                sum_{i,p: link in path} rho[i,p,j] <= L_link  (per-link capacity)
+                0 <= rho <= rate_cap
+
+This stays a pure LP (no integer path choice needed: splitting a transfer
+across routes is allowed and strictly helps the objective).  Implementation
+reuses the dense temporal machinery by expanding each (request, path) pair
+into a pseudo-job and adding shared byte constraints + per-link capacities.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import numpy as np
+import scipy.sparse as sp
+from scipy.optimize import linprog
+
+from .plan import InfeasibleError, Plan
+from .power import DEFAULT_POWER_MODEL, GBPS, PowerModel
+from .trace import TraceSet
+
+
+@dataclasses.dataclass(frozen=True)
+class SpatialRequest:
+    size_gb: float
+    deadline_slots: int
+    candidate_paths: tuple[tuple[str, ...], ...]   # each a tuple of zones
+    offset_slots: int = 0
+    request_id: str = ""
+
+    @property
+    def size_bits(self) -> float:
+        return self.size_gb * 8.0e9
+
+
+@dataclasses.dataclass
+class SpatialPlan:
+    rho_bps: np.ndarray              # (n_jobs, n_paths_max, n_slots)
+    path_share: np.ndarray           # (n_jobs, n_paths_max) fraction of bytes
+    objective: float
+    meta: dict
+
+
+def _links(path: Sequence[str]):
+    return [tuple(sorted((path[k], path[k + 1]))) for k in range(len(path) - 1)]
+
+
+def solve_spatiotemporal(
+    requests: Sequence[SpatialRequest],
+    traces: TraceSet,
+    link_capacity_gbps: Mapping[tuple[str, str], float] | float,
+    power: PowerModel = DEFAULT_POWER_MODEL,
+) -> SpatialPlan:
+    n_slots = traces.n_slots
+    dt = traces.slot_seconds
+    n_jobs = len(requests)
+    n_paths = max(len(r.candidate_paths) for r in requests)
+
+    # Per-(job, path) combined carbon cost; +inf-cost masking via bounds.
+    cost = np.zeros((n_jobs, n_paths, n_slots))
+    active = np.zeros((n_jobs, n_paths, n_slots), dtype=bool)
+    all_links: dict[tuple[str, str], float] = {}
+    for i, req in enumerate(requests):
+        for p, path in enumerate(req.candidate_paths):
+            cost[i, p] = traces.path_intensity(path)
+            active[i, p, req.offset_slots:req.deadline_slots] = True
+            for link in _links(path):
+                if isinstance(link_capacity_gbps, Mapping):
+                    cap = link_capacity_gbps.get(link)
+                    if cap is None:
+                        raise KeyError(f"no capacity for link {link}")
+                else:
+                    cap = float(link_capacity_gbps)
+                all_links[link] = cap
+
+    idx = np.flatnonzero(active.ravel())
+    n_var = idx.size
+    ii, pp, jj = np.unravel_index(idx, active.shape)
+    c = cost.ravel()[idx]
+    scale = max(np.abs(c).mean(), 1e-30)
+
+    # Byte rows: one per request over all its (path, slot) vars.
+    byte_rows = sp.csr_matrix(
+        (np.full(n_var, -dt), (ii, np.arange(n_var))), shape=(n_jobs, n_var)
+    )
+    b_byte = -np.array([r.size_bits for r in requests])
+
+    # Link-capacity rows: one per (link, slot).
+    link_ids = {link: k for k, link in enumerate(sorted(all_links))}
+    rows, cols = [], []
+    for v in range(n_var):
+        req = requests[ii[v]]
+        for link in _links(req.candidate_paths[pp[v]]):
+            rows.append(link_ids[link] * n_slots + jj[v])
+            cols.append(v)
+    cap_rows = sp.csr_matrix(
+        (np.ones(len(rows)), (rows, cols)),
+        shape=(len(link_ids) * n_slots, n_var),
+    )
+    b_cap = np.concatenate([
+        np.full(n_slots, all_links[link] * GBPS)
+        for link in sorted(all_links)
+    ])
+
+    # Rate cap per variable from the tightest link on its path.
+    ub = np.empty(n_var)
+    for v in range(n_var):
+        req = requests[ii[v]]
+        tightest = min(all_links[l] for l in _links(req.candidate_paths[pp[v]]))
+        ub[v] = power.rate_cap_gbps(tightest) * GBPS
+
+    res = linprog(
+        c / scale,
+        A_ub=sp.vstack([byte_rows, cap_rows], format="csr"),
+        b_ub=np.concatenate([b_byte, b_cap]),
+        bounds=np.stack([np.zeros(n_var), ub], axis=1),
+        method="highs",
+    )
+    if not res.success:
+        raise InfeasibleError(f"spatiotemporal LP failed: {res.message}")
+    rho = np.zeros((n_jobs, n_paths, n_slots))
+    rho.ravel()[idx] = res.x
+    bits_per_path = rho.sum(axis=2) * dt
+    share = bits_per_path / np.maximum(bits_per_path.sum(axis=1, keepdims=True), 1e-30)
+    return SpatialPlan(
+        rho_bps=rho,
+        path_share=share,
+        objective=float((cost * rho).sum()),
+        meta={"n_variables": int(n_var),
+              "n_links": len(link_ids),
+              "solver_iterations": int(getattr(res, "nit", -1))},
+    )

@@ -1,0 +1,1 @@
+from .pipeline import DataState, SyntheticTokens, TokenFile, make_source  # noqa: F401

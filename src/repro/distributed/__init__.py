@@ -1,0 +1,9 @@
+from .sharding import (  # noqa: F401
+    batch_specs,
+    cache_specs,
+    named,
+    opt_specs,
+    param_specs,
+    struct_with_sharding,
+    tree_specs,
+)

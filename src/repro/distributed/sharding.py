@@ -1,0 +1,313 @@
+"""Sharding rules: parameter/optimizer/batch/cache PartitionSpecs.
+
+Logical axes: ``fsdp`` (ZeRO-3-style parameter sharding, mapped to the mesh
+``data`` axis), ``tensor`` (TP, mapped to ``model``), ``batch`` (mapped to
+``("pod", "data")`` when a pod axis exists — the pod axis is pure data
+parallelism with hierarchical reduction).  Rules are regexes over parameter
+paths; stacked (scanned) stages get a leading ``None`` automatically
+(detected by rank).  Non-divisible dims (e.g. 40 heads on 16-way TP) rely
+on GSPMD padding — flagged in the roofline notes, not an error.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (regex over param path, logical spec). First match wins; default replicate.
+PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed/table$", ("tensor", "fsdp")),
+    (r"head/w$", ("fsdp", "tensor")),
+    (r"attn/(wq|wk|wv)$", ("fsdp", "tensor")),
+    (r"attn/(bq|bk|bv)$", ("tensor",)),
+    (r"attn/wo$", ("tensor", "fsdp")),
+    (r"attn/w_dkv$", ("fsdp", None)),
+    (r"attn/(w_uk|w_uv)$", (None, "tensor")),
+    (r"moe/router$", ("fsdp", None)),
+    (r"moe/(w_gate|w_up)$", ("tensor", "fsdp", None)),
+    (r"moe/w_down$", ("tensor", None, "fsdp")),
+    (r"(mlp|shared)/(w_up|w_gate)$", ("fsdp", "tensor")),
+    (r"(mlp|shared)/w_down$", ("tensor", "fsdp")),
+    (r"mixer/w_in$", ("fsdp", "tensor")),
+    (r"mixer/conv_w$", (None, "tensor")),
+    (r"mixer/conv_b$", ("tensor",)),
+    (r"mixer/w_out$", ("tensor", "fsdp")),
+]
+
+# Cache rules give *candidate* specs in preference order: the first whose
+# sharded dims all divide the mesh axis sizes wins (e.g. 8 KV heads can't
+# split 16-way TP -> shard cache length over `tensor` instead; MQA kv=1
+# likewise).  (rep, B, L, H, dh) layout for kv; see blocks.block_cache.
+CACHE_RULES_BATCHED: list[tuple[str, list[tuple]]] = [
+    (r"kv/(k|v)$", [
+        (None, "batch", None, "tensor", None),
+        (None, "batch", "tensor", None, None),
+        (None, "batch", None, None, "tensor"),
+    ]),
+    # MLA compressed cache: shard LENGTH, not rank — the rank dim is
+    # contracted by both absorbed-decode einsums, so rank sharding makes
+    # GSPMD all-gather the whole cache per step (537 MB x 26 layers on
+    # deepseek decode_32k); length sharding psums only (B,H,r) slivers.
+    (r"kv/(ckv|kr)$", [
+        (None, "batch", "tensor", None),
+        (None, "batch", None, "tensor"),
+    ]),
+    (r"ssm_cache/conv$", [(None, "batch", None, "tensor")]),
+    (r"ssm_cache/ssm$", [
+        (None, "batch", "tensor", None, None),
+        (None, "batch", None, None, "tensor"),
+    ]),
+]
+
+# batch=1 long-context decode: shard the sequence/cache-length dim instead.
+CACHE_RULES_SEQ: list[tuple[str, list[tuple]]] = [
+    (r"kv/(k|v)$", [
+        (None, None, "fsdp", "tensor", None),
+        (None, None, "fsdp", None, "tensor"),
+        (None, None, "fsdp", None, None),
+    ]),
+    (r"kv/(ckv|kr)$", [
+        (None, None, "fsdp", "tensor"),
+        (None, None, "fsdp", None),
+    ]),
+    (r"ssm_cache/conv$", [(None, None, None, "tensor")]),
+    (r"ssm_cache/ssm$", [
+        (None, None, "tensor", None, None),
+        (None, None, None, None, "tensor"),
+    ]),
+]
+
+
+def axis_map(mesh: Mesh) -> dict[str, Any]:
+    has_pod = "pod" in mesh.axis_names
+    return {
+        "fsdp": "data",
+        "tensor": "model",
+        "batch": ("pod", "data") if has_pod else "data",
+        None: None,
+    }
+
+
+def path_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(parts)
+
+
+def _logical_to_spec(logical: Sequence, amap) -> P:
+    return P(*(amap[a] for a in logical))
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _divisible(spec: P, shape, mesh: Mesh) -> bool:
+    for dim, axis in zip(shape, tuple(spec)):
+        if axis is not None and dim % _axis_size(mesh, axis):
+            return False
+    return True
+
+
+def _drop_indivisible(spec: P, shape, mesh: Mesh) -> P:
+    """Replicate any dim that doesn't divide its mesh axes (jit arguments
+    must shard evenly; GSPMD padding only applies to intermediates)."""
+    parts = []
+    for dim, axis in zip(shape, tuple(spec)):
+        parts.append(axis if axis is None or dim % _axis_size(mesh, axis) == 0
+                     else None)
+    return P(*parts)
+
+
+def spec_for(path: str, shape, rules, amap, mesh: Mesh) -> P:
+    ndim = len(shape)
+    for pattern, logical in rules:
+        if re.search(pattern, path):
+            candidates = logical if isinstance(logical, list) else [logical]
+            chosen = None
+            for cand in candidates:
+                cand = tuple(cand)
+                if ndim == len(cand) + 1:      # stacked (scanned) leading axis
+                    cand = (None,) + cand
+                if ndim != len(cand):
+                    raise ValueError(
+                        f"rule {pattern!r} rank {len(cand)} vs leaf {path} "
+                        f"rank {ndim}"
+                    )
+                spec = _logical_to_spec(cand, amap)
+                if chosen is None:
+                    chosen = spec              # fallback: first candidate
+                if _divisible(spec, shape, mesh):
+                    return spec
+            return _drop_indivisible(chosen, shape, mesh)
+    return P()  # replicate (norm scales, biases, scalars)
+
+
+def tree_specs(tree, mesh: Mesh, rules) -> Any:
+    amap = axis_map(mesh)
+
+    def leaf_spec(path, leaf):
+        return spec_for(path_str(path), leaf.shape, rules, amap, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, tree)
+
+
+def param_specs(params_or_shapes, mesh: Mesh, inference: bool = False):
+    """Parameter shardings.
+
+    ``inference=True`` drops the ZeRO/FSDP axis: weights live TP-sharded and
+    data-replicated, so decode steps read them straight from HBM instead of
+    all-gathering ~all parameters every token (deepseek decode_32k: 17 GB
+    of per-step all-gathers -> ~0; see EXPERIMENTS.md §Perf).
+    """
+    if not inference:
+        return tree_specs(params_or_shapes, mesh, PARAM_RULES)
+    amap = dict(axis_map(mesh))
+    amap["fsdp"] = None
+
+    def leaf_spec(path, leaf):
+        return spec_for(path_str(path), leaf.shape, PARAM_RULES, amap, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_or_shapes)
+
+
+def opt_specs(opt_shapes, p_specs, mesh: Mesh):
+    """Optimizer state mirrors parameter sharding.
+
+    adamw: m/v copy the param spec.  adamw8bit: codes copy the param spec;
+    per-block scales drop the last axis's sharding.
+    """
+    def scale_spec(spec: P) -> P:
+        parts = tuple(spec)
+        return P(*(parts[:-1] + (None,))) if parts else P()
+
+    out: dict[str, Any] = {}
+    for key in opt_shapes:
+        if key == "count":
+            out["count"] = P()
+        elif key in ("m", "v"):
+            out[key] = p_specs
+        elif key == "moments":
+            out["moments"] = jax.tree.map(
+                lambda spec: {
+                    "m_q": spec, "m_s": scale_spec(spec), "v": spec,
+                },
+                p_specs,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+        else:
+            raise KeyError(key)
+    return out
+
+
+def batch_specs(mesh: Mesh, has_embeds: bool, seq_shard: bool = False):
+    amap = axis_map(mesh)
+    b_ax = amap["batch"]
+    if seq_shard:  # batch=1 long-context: shard sequence over fsdp
+        tok = P(None, amap["fsdp"])
+    else:
+        tok = P(b_ax, None)
+    specs = {"tokens": tok, "labels": tok}
+    if has_embeds:
+        specs["embeds"] = P(*tuple(tok) + (None,))
+    return specs
+
+
+def cache_specs(cache_shapes, mesh: Mesh, batched: bool):
+    rules = CACHE_RULES_BATCHED if batched else CACHE_RULES_SEQ
+    return tree_specs(cache_shapes, mesh, rules)
+
+
+def named(tree_specs_, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs_,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints.
+#
+# Without explicit constraints GSPMD is free to run the whole model in a
+# batch-replicated / feature-sharded regime (it did: qwen train_4k ended up
+# all-reducing 86 GB score tensors).  Model code calls ``constrain_batch`` /
+# ``constrain_logits`` at block boundaries; the launcher activates the specs
+# for the duration of tracing via ``activation_sharding(mesh)``.
+# ---------------------------------------------------------------------------
+
+_ACT_AXES: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_axes", default=None
+)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, batch: bool = True):
+    """Enable activation constraints while tracing/lowering under ``mesh``."""
+    amap = axis_map(mesh)
+    token = _ACT_AXES.set(
+        {"batch": amap["batch"] if batch else None, "tensor": amap["tensor"]}
+    )
+    try:
+        yield
+    finally:
+        _ACT_AXES.reset(token)
+
+
+def constrain_batch(x):
+    """Pin (B, ...) activations to batch-sharded, feature-replicated."""
+    axes = _ACT_AXES.get()
+    if axes is None or axes["batch"] is None:
+        return x
+    spec = P(axes["batch"], *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_logits(x):
+    """Pin (B, S, V) logits to batch x vocab sharding."""
+    axes = _ACT_AXES.get()
+    if axes is None or axes["batch"] is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(axes["batch"], None, axes["tensor"])
+    )
+
+
+def constrain_heads(x):
+    """Pin (B, S, H, dh) projections to batch x head sharding.
+
+    Without this, a head count that doesn't divide the TP axis (qwen: 40 on
+    16) makes GSPMD split the *contraction* dim (head_dim) instead and
+    all-reduce every (B, H, S, S) score tensor.  Padded head sharding
+    (40 -> 48) wastes <= 20% attention compute but zero collectives.
+    """
+    axes = _ACT_AXES.get()
+    if axes is None or axes["batch"] is None or x.ndim != 4:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(axes["batch"], None, axes["tensor"], None)
+    )
+
+
+def struct_with_sharding(shapes, specs, mesh: Mesh):
+    """Attach NamedShardings to ShapeDtypeStructs (dry-run inputs)."""
+    return jax.tree.map(
+        lambda s, spec: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, spec)
+        ),
+        shapes,
+        specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+The paper's compute is its LP solve and its emissions simulator; both reduce
+to one-pass (jobs x slots) tile pipelines on TPU (see DESIGN.md §2):
+
+  pdhg_step   fused PDHG primal update + partial row/col reductions
+  emissions   fused plan -> gCO2 evaluation (Eqs. 3-4 + trace weighting)
+
+``ops`` holds the jit'd public wrappers, ``ref`` the pure-jnp oracles used
+by the allclose tests.  Kernels are validated in interpret mode on CPU and
+are NOT used inside dry-run step functions (custom calls would hide FLOPs
+from ``cost_analysis``; DESIGN.md §6).
+"""
+
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: fused plan-emissions evaluation (simulator hot loop).
+
+The simulator converts a throughput plan to threads (Eq. 4), threads to
+power (Eq. 3, the *non-linear* curve), then charges carbon per (job, slot)
+cell against the path-combined intensity trace.  For fleet-scale what-if
+sweeps (many plans x many noise draws) this is a large elementwise +
+reduction pipeline; the kernel computes it in one VMEM pass per tile,
+emitting per-block partial sums (finished by the wrapper).
+
+Power-model parameters are Python floats baked into the kernel at trace
+time (they are fixed per PowerModel, so no extra operand traffic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 128
+BLOCK_C = 256
+
+
+def _emissions_kernel(
+    rho_ref, cost_ref, out_ref,
+    *, slot_seconds, l_gbps, s_rho, s_p, p_min_w, p_max_w, theta_max,
+):
+    rho = rho_ref[...]
+    denom = jnp.maximum(l_gbps - rho, 1e-12)
+    theta = jnp.clip((1.0 / (l_gbps * s_rho)) * rho / denom, 0.0, theta_max)
+    dp = p_max_w - p_min_w
+    p = dp * (1.0 - 1.0 / (s_p * dp * theta + 1.0)) + p_min_w
+    p = jnp.where(theta > 0, p, 0.0)
+    kwh = p * (slot_seconds / 3.6e6)
+    out_ref[0, 0] = jnp.sum(kwh * cost_ref[...])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "slot_seconds", "l_gbps", "s_rho", "s_p", "p_min_w", "p_max_w",
+        "theta_max", "block_r", "block_c", "interpret",
+    ),
+)
+def emissions_total_pallas(
+    rho_gbps,
+    cost,
+    *,
+    slot_seconds: float,
+    l_gbps: float,
+    s_rho: float,
+    s_p: float,
+    p_min_w: float,
+    p_max_w: float,
+    theta_max: float,
+    block_r: int = BLOCK_R,
+    block_c: int = BLOCK_C,
+    interpret: bool = True,
+):
+    """Total gCO2 of a plan. See ``ref.emissions_total_ref``."""
+    n, m = rho_gbps.shape
+    dt = rho_gbps.dtype
+    nb_r = pl.cdiv(n, block_r)
+    nb_c = pl.cdiv(m, block_c)
+    n_pad, m_pad = nb_r * block_r, nb_c * block_c
+
+    def pad2(a):
+        return jnp.pad(a, ((0, n_pad - n), (0, m_pad - m)))
+
+    kernel = functools.partial(
+        _emissions_kernel,
+        slot_seconds=slot_seconds, l_gbps=l_gbps, s_rho=s_rho, s_p=s_p,
+        p_min_w=p_min_w, p_max_w=p_max_w, theta_max=theta_max,
+    )
+    partials = pl.pallas_call(
+        kernel,
+        grid=(nb_r, nb_c),
+        in_specs=[
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb_r, nb_c), dt),
+        interpret=interpret,
+    )(pad2(rho_gbps), pad2(cost))
+    return partials.sum()

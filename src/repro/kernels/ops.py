@@ -1,0 +1,51 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret=None`` auto-selects: compiled on TPU, interpret elsewhere (this
+container is CPU-only; interpret mode executes the kernel body in Python for
+correctness validation, per the kernel-development workflow).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from ..core.power import PowerModel
+from . import emissions as _emissions
+from . import pdhg_step as _pdhg_step
+
+
+def _auto_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def pdhg_cell_update(x, c, ub, u, v, tau, *, interpret: bool | None = None):
+    """Fused PDHG primal update; returns (x_new, row_sum(xbar), col_sum(xbar))."""
+    return _pdhg_step.pdhg_cell_update_pallas(
+        x, c, ub, u, v, tau, interpret=_auto_interpret(interpret)
+    )
+
+
+def emissions_total(
+    rho_gbps,
+    cost,
+    *,
+    power: PowerModel,
+    l_gbps: float,
+    slot_seconds: float,
+    interpret: bool | None = None,
+):
+    """Total plan emissions (gCO2) under the non-linear power curve."""
+    return _emissions.emissions_total_pallas(
+        rho_gbps,
+        cost,
+        slot_seconds=float(slot_seconds),
+        l_gbps=float(l_gbps),
+        s_rho=float(power.s_rho),
+        s_p=float(power.s_p),
+        p_min_w=float(power.p_min_w),
+        p_max_w=float(power.p_max_w),
+        theta_max=float(power.theta_max),
+        interpret=_auto_interpret(interpret),
+    )

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: kernel tests sweep shapes/dtypes and
+``assert_allclose`` kernel outputs against these functions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pdhg_cell_update_ref(x, c, ub, u, v, tau):
+    """One fused PDHG primal update + extrapolated-iterate reductions.
+
+    Args:
+      x:  (n, m) current primal iterate.
+      c:  (n, m) cost matrix (zero outside the mask).
+      ub: (n, m) per-cell upper bound (0 outside the mask).
+      u:  (n,)  byte-constraint duals (>= 0).
+      v:  (m,)  capacity-constraint duals (>= 0).
+      tau: scalar primal step size.
+
+    Returns:
+      (x_new, row_sum(x_bar), col_sum(x_bar)) with x_bar = 2*x_new - x.
+    """
+    g = c - u[:, None] + v[None, :]
+    x_new = jnp.clip(x - tau * g, 0.0, ub)
+    x_bar = 2.0 * x_new - x
+    return x_new, x_bar.sum(axis=1), x_bar.sum(axis=0)
+
+
+def emissions_total_ref(
+    rho_gbps,
+    cost,
+    *,
+    slot_seconds: float,
+    l_gbps: float,
+    s_rho: float,
+    s_p: float,
+    p_min_w: float,
+    p_max_w: float,
+    theta_max: float,
+):
+    """Simulator emissions of a throughput plan (Eqs. 3-4 + trace weighting).
+
+    Args:
+      rho_gbps: (n, m) per-(job, slot) throughput in Gbps.
+      cost:     (n, m) path-combined carbon intensity (gCO2/kWh).
+
+    Returns: scalar total gCO2.
+    """
+    rho = rho_gbps
+    denom = jnp.maximum(l_gbps - rho, 1e-12)
+    theta = jnp.clip((1.0 / (l_gbps * s_rho)) * rho / denom, 0.0, theta_max)
+    dp = p_max_w - p_min_w
+    p = dp * (1.0 - 1.0 / (s_p * dp * theta + 1.0)) + p_min_w
+    p = jnp.where(theta > 0, p, 0.0)
+    kwh = p * slot_seconds / 3.6e6
+    return jnp.sum(kwh * cost)

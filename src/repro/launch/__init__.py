@@ -1,0 +1,7 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: ``dryrun`` must be executed as a fresh process (it sets XLA device-
+count flags before importing jax); do not import it from here.
+"""
+
+from .mesh import make_local_mesh, make_production_mesh  # noqa: F401

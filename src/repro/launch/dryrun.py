@@ -1,0 +1,205 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers + compiles the step function against ShapeDtypeStruct inputs
+     (no allocation anywhere),
+  3. records memory_analysis(), cost_analysis() FLOPs/bytes, and
+     per-collective byte totals parsed from the post-SPMD optimized HLO,
+  4. writes one JSON artifact per cell to --out (consumed by
+     benchmarks/roofline.py and EXPERIMENTS.md).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b \
+      --shape train_4k --mesh both --out artifacts/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import SHAPES, registry, shapes_for
+from ..models import lm as lm_mod
+from . import specs as specs_mod
+from .hlo_analysis import analyze_hlo
+from .mesh import make_production_mesh
+
+
+def parse_overrides(pairs: list[str]) -> dict:
+    """--set entries: 'model.<field>=<v>' (ModelConfig), 'opt_<field>=<v>'
+    (OptimizerConfig) or '<field>=<v>' (TrainConfig).  Values are parsed as
+    int/float/bool when possible."""
+    out: dict = {}
+    for pair in pairs or []:
+        key, _, val = pair.partition("=")
+        for cast in (int, float):
+            try:
+                val = cast(val)
+                break
+            except (TypeError, ValueError):
+                continue
+        if val in ("true", "false"):
+            val = val == "true"
+        if val == "none":
+            val = None
+        if key.startswith("model."):
+            out.setdefault("model", {})[key[6:]] = val
+        else:
+            out[key] = val
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             overrides: dict | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = specs_mod.input_specs(arch, shape, mesh,
+                                 overrides=dict(overrides or {}))
+    t0 = time.time()
+    lowered = specs_mod.lower_cell(cell, mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            if hasattr(ma, attr):
+                mem[attr] = int(getattr(ma, attr))
+        mem["repr"] = str(ma)
+    except Exception as e:  # CPU backend may not implement it
+        mem["error"] = f"{type(e).__name__}: {e}"
+
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:
+        cost = {"error": f"{type(e).__name__}: {e}"}
+
+    # Loop-aware analysis of the optimized per-device module (scan bodies
+    # multiplied by known_trip_count — raw cost_analysis counts them once).
+    hlo = compiled.as_text()
+    hlo_cost = analyze_hlo(hlo)
+    coll = {
+        "per_device_bytes": hlo_cost["collective_bytes"],
+        "counts": hlo_cost["collective_counts"],
+        "total_per_device_bytes": hlo_cost["total_collective_bytes"],
+    }
+
+    cfg = cell.cfg
+    params_shapes = jax.eval_shape(
+        lambda k: lm_mod.init_params(k, cfg), jax.random.PRNGKey(0)
+    )
+    import numpy as np
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params_shapes))
+    n_active = lm_mod.active_param_count(params_shapes, cfg)
+
+    art = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "kind": cell.meta["kind"],
+        "tokens_per_call": cell.meta["tokens"],
+        "params_total": int(n_params),
+        "params_active": int(n_active),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "cost_analysis": cost,          # raw XLA numbers (loop bodies x1)
+        "hlo_analysis": {               # loop-aware (authoritative)
+            "flops": hlo_cost["flops"],
+            "bytes_accessed": hlo_cost["bytes_accessed"],
+            "transcendentals": hlo_cost["transcendentals"],
+        },
+        "collectives": coll,
+        "hlo_bytes_len": len(hlo),
+    }
+    return art
+
+
+def artifact_path(out_dir: str, arch: str, shape: str, multi_pod: bool) -> str:
+    mesh = "multi" if multi_pod else "single"
+    return os.path.join(out_dir, f"{arch}__{shape}__{mesh}.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=registry.list_archs())
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true",
+                    help="run every assigned (arch x shape) cell")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--set", action="append", dest="overrides", default=[],
+                    help="config override, e.g. model.attn_impl=blocked, "
+                         "remat=dots, opt_grad_reduce_dtype=bfloat16")
+    ap.add_argument("--tag", default="",
+                    help="artifact filename suffix for perf experiments")
+    args = ap.parse_args()
+    overrides = parse_overrides(args.overrides)
+
+    os.makedirs(args.out, exist_ok=True)
+    if args.all:
+        cells = [(a, s) for a in registry.list_archs() for s in shapes_for(a)]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        if args.shape not in shapes_for(args.arch):
+            ap.error(f"{args.arch} skips {args.shape} (sub-quadratic rule; "
+                     f"see DESIGN.md §4)")
+        cells = [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch, shape in cells:
+        for multi_pod in meshes:
+            path = artifact_path(args.out, arch, shape, multi_pod)
+            if args.tag:
+                path = path.replace(".json", f"__{args.tag}.json")
+            if os.path.exists(path) and not args.force:
+                print(f"[skip] {path}")
+                continue
+            tag = f"{arch} x {shape} x {'2x16x16' if multi_pod else '16x16'}"
+            if args.tag:
+                tag += f" [{args.tag}]"
+            print(f"[dryrun] {tag} ...", flush=True)
+            try:
+                art = run_cell(arch, shape, multi_pod, overrides)
+            except Exception:
+                failures += 1
+                print(f"[FAIL] {tag}\n{traceback.format_exc()}", flush=True)
+                continue
+            with open(path, "w") as f:
+                json.dump(art, f, indent=1)
+            ha = art["hlo_analysis"]
+            print(
+                f"[ok] {tag}: compile={art['compile_s']}s "
+                f"flops/dev={ha['flops']:.3e} "
+                f"bytes/dev={ha['bytes_accessed']:.3e} "
+                f"coll/dev={art['collectives']['total_per_device_bytes']:.3e}B",
+                flush=True,
+            )
+    if failures:
+        raise SystemExit(f"{failures} dry-run cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,427 @@
+"""Loop-aware roofline analysis of post-SPMD optimized HLO.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits a
+``while`` body ONCE unless the loop got unrolled, so anything scanned over
+layers (our whole model zoo) undercounts FLOPs, bytes, and — critically —
+collective bytes by the layer count.  The optimized HLO text, however,
+carries ``backend_config={"known_trip_count":{"n":"26"}}`` on every scan
+loop, so an analysis that multiplies through the call graph is exact.
+
+The analyzer:
+  * builds a symbol table (op name -> shape) across all computations,
+  * accumulates per-computation local costs:
+      - flops: dot (2 * prod(result) * prod(contracting dims)),
+        elementwise/reduce (1 flop/element), others 0;
+      - bytes: operands + results of every op in *unfused* computations
+        (fusion bodies execute in registers; the fusion op itself accounts
+        its operands/results — mirrors HloCostAnalysis conventions);
+      - collective bytes/counts by type (max of result/operand bytes);
+  * propagates multipliers through the call graph: fusion/call/conditional
+    x1, while body/condition x known_trip_count.
+
+Validated against analytic FLOP counts per architecture (tests) and used
+by launch/dryrun.py for the roofline artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "token": 0,
+}
+
+SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|s4|u4|pred|token)"
+    r"\[([0-9,]*)\]"
+)
+# "  %name = <result> opname(operands), attrs" — opname is letters/dashes.
+OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s([a-z][a-z0-9\-]*)\((.*)$"
+)
+COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{")
+CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "negate", "abs", "sign", "floor", "ceil", "round",
+    "logistic", "select", "compare", "and", "or", "xor", "not", "atan2",
+    "clamp", "cosine", "sine", "remainder", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic",
+}
+REDUCE_LIKE = {"reduce", "reduce-window"}
+FREE = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id", "rng-bit-generator",
+}
+
+
+def _shapes_bytes(text: str) -> int:
+    return sum(
+        DTYPE_BYTES[m.group(1)] * _numel(m.group(2))
+        for m in SHAPE_RE.finditer(text)
+    )
+
+
+def _numel(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def _shapes_elems(text: str) -> int:
+    return sum(_numel(m.group(2)) for m in SHAPE_RE.finditer(text))
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_counts: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    edges: list = dataclasses.field(default_factory=list)  # (callee, mult, fused)
+    # Deferred fusion byte accounting: (op_name, operand_text, callee, result_bytes)
+    pending_fusions: list = dataclasses.field(default_factory=list)
+
+
+def _top_level_operands(operand_t: str) -> list[str]:
+    """Split an operand list on commas not nested in (), {} or []."""
+    parts, depth, cur = [], 0, []
+    for ch in operand_t:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
+def _split_result_operands(rest: str):
+    """rest = everything after '(' of the op; operands end at the matching
+    ')' (attrs follow).  Returns (operand_text, attr_text)."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i], rest[i + 1:]
+    return rest, ""
+
+
+class HloProgram:
+    def __init__(self, text: str):
+        self.symbols: dict[str, str] = {}      # op name -> result type text
+        self.comps: dict[str, CompCost] = {}
+        self.fusion_bodies: set[str] = set()
+        self.entry: str | None = None
+        self._parse(text)
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        lines = text.splitlines()
+        # Pass 1: symbol table + computation spans.
+        comp = None
+        comp_lines: dict[str, list[str]] = {}
+        for line in lines:
+            m = COMP_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                comp = m.group(1)
+                comp_lines[comp] = []
+                if line.lstrip().startswith("ENTRY"):
+                    self.entry = comp
+                continue
+            if comp is None:
+                continue
+            if line.strip() == "}":
+                comp = None
+                continue
+            comp_lines[comp].append(line)
+            om = OP_RE.match(line)
+            if om:
+                self.symbols[om.group(1)] = om.group(2)
+
+        # Pass 2: per-computation costs.
+        self._comp_lines = comp_lines
+        for name, clines in comp_lines.items():
+            cost = CompCost()
+            for line in clines:
+                self._accumulate(cost, line)
+            self.comps[name] = cost
+        for cost in self.comps.values():
+            for callee, _, via_fusion in cost.edges:
+                if via_fusion:
+                    self.fusion_bodies.add(callee)
+        # Pass 3: fusion byte accounting (needs every body parsed).
+        self._param_access_cache: dict[str, dict[int, float | None]] = {}
+        for cost in self.comps.values():
+            for name, operand_t, callee, result_bytes in cost.pending_fusions:
+                cost.bytes += self._fusion_bytes(
+                    name, operand_t, callee, result_bytes
+                )
+
+    # ------------------------------------------------------------------
+    def _param_access(self, comp: str) -> dict[int, float | None]:
+        """Per-parameter effective read bytes inside a fusion body.
+
+        A parameter consumed only by (dynamic-)slice/gather ops costs the
+        slice bytes; anything else costs the full parameter (None marker).
+        """
+        if comp in self._param_access_cache:
+            return self._param_access_cache[comp]
+        lines = self._comp_lines.get(comp, [])
+        param_names: dict[str, int] = {}
+        for line in lines:
+            om = OP_RE.match(line)
+            if om and om.group(3) == "parameter":
+                idx = int(re.search(r"parameter\((\d+)\)", line).group(1))
+                param_names[om.group(1)] = idx
+        access: dict[int, float | None] = {i: 0.0 for i in param_names.values()}
+        for line in lines:
+            om = OP_RE.match(line)
+            if not om or om.group(3) == "parameter":
+                continue
+            _, result_t, op, rest = om.groups()
+            operand_t, _ = _split_result_operands(rest)
+            for nm in OPERAND_NAME_RE.findall(operand_t):
+                if nm not in param_names:
+                    continue
+                idx = param_names[nm]
+                if access[idx] is None:
+                    continue
+                if op in ("dynamic-slice", "slice", "gather"):
+                    access[idx] += float(_shapes_bytes(result_t))
+                else:
+                    access[idx] = None  # full read
+        self._param_access_cache[comp] = access
+        return access
+
+    def _fusion_bytes(self, name: str, operand_t: str, callee: str | None,
+                      result_bytes: float) -> float:
+        operands = _top_level_operands(operand_t)
+        access = self._param_access(callee) if callee else {}
+        eff: list[float] = []
+        for i, op_text in enumerate(operands):
+            full = self._operand_bytes(op_text)
+            a = access.get(i, None)
+            eff.append(full if a is None else min(a, full))
+        if "dynamic-update-slice" in name:
+            # In-place aliased update of a donated buffer (one layer of a
+            # stacked KV cache): traffic is the update slice read + write,
+            # not the whole buffer.
+            others = [e for e, op_text in zip(eff, operands)
+                      if abs(self._operand_bytes(op_text) - result_bytes) > 0.5]
+            if len(others) < len(eff):
+                return 2.0 * sum(others)
+        return result_bytes + sum(eff)
+
+    # ------------------------------------------------------------------
+    def _operand_bytes(self, operand_text: str) -> float:
+        inline = _shapes_bytes(operand_text)
+        if inline:
+            return float(inline)
+        total = 0.0
+        for nm in OPERAND_NAME_RE.findall(operand_text):
+            typ = self.symbols.get(nm)
+            if typ:
+                total += _shapes_bytes(typ)
+        return total
+
+    def _accumulate(self, cost: CompCost, line: str) -> None:
+        om = OP_RE.match(line)
+        if not om:
+            return
+        _, result_t, op, rest = om.groups()
+        operand_t, attr_t = _split_result_operands(rest)
+        base = op[:-6] if op.endswith("-start") else op
+        if base.endswith("-done") or base.endswith("-update"):
+            return
+        if base in FREE:
+            return
+
+        result_bytes = float(_shapes_bytes(result_t))
+        result_elems = float(_shapes_elems(result_t))
+
+        # Call-graph edges.
+        if base == "while":
+            trip = 1.0
+            tm = TRIP_RE.search(attr_t)
+            if tm:
+                trip = float(tm.group(1))
+            bm, cm = BODY_RE.search(attr_t), COND_RE.search(attr_t)
+            if bm:
+                cost.edges.append((bm.group(1), trip, False))
+            if cm:
+                cost.edges.append((cm.group(1), trip + 1.0, False))
+            return
+        if base == "fusion":
+            fm = CALLS_RE.search(attr_t)
+            callee = fm.group(1) if fm else None
+            if callee:
+                cost.edges.append((callee, 1.0, True))
+            # Operand byte refinement needs the callee's body (parsed later):
+            # defer to a post-pass (_finalize_fusions).
+            cost.pending_fusions.append(
+                (om.group(1), operand_t, callee, result_bytes)
+            )
+            return
+        if base in ("call", "async-start", "custom-call"):
+            fm = CALLS_RE.search(attr_t) or TO_APPLY_RE.search(attr_t)
+            if fm:
+                cost.edges.append((fm.group(1), 1.0, False))
+            cost.bytes += result_bytes + self._operand_bytes(operand_t)
+            return
+        if base == "conditional":
+            for branch in re.findall(r"branch_computations=\{([^}]*)\}", attr_t):
+                for nm in OPERAND_NAME_RE.findall(branch):
+                    cost.edges.append((nm, 1.0, False))
+            cost.bytes += result_bytes + self._operand_bytes(operand_t)
+            return
+
+        # Sliced access: traffic is the slice, not the sliced-into operand
+        # (mirrors HloCostAnalysis; a DUS into a 24-layer stacked KV cache
+        # moves one layer's bytes, not the whole cache).
+        if base in ("dynamic-slice", "slice"):
+            cost.bytes += 2.0 * result_bytes
+            return
+        if base == "dynamic-update-slice":
+            ops_split = _top_level_operands(operand_t)
+            upd = self._operand_bytes(ops_split[1]) if len(ops_split) > 1 else 0.0
+            cost.bytes += 2.0 * upd
+            return
+        if base == "gather":
+            cost.bytes += 2.0 * result_bytes
+            return
+        if base == "scatter":
+            ops_split = _top_level_operands(operand_t)
+            upd = self._operand_bytes(ops_split[2]) if len(ops_split) > 2 else result_bytes
+            cost.bytes += 3.0 * upd
+            return
+
+        # Collectives.
+        if base in COLLECTIVES:
+            nbytes = max(result_bytes, self._operand_bytes(operand_t))
+            cost.coll_bytes[base] += nbytes
+            cost.coll_counts[base] += 1.0
+            cost.bytes += result_bytes + self._operand_bytes(operand_t)
+            return
+
+        # FLOPs.
+        if base == "dot":
+            contract = 1.0
+            cm = LHS_CONTRACT_RE.search(attr_t)
+            lhs_name = OPERAND_NAME_RE.search(operand_t)
+            if cm and lhs_name:
+                lhs_t = self.symbols.get(lhs_name.group(1), "")
+                sm = SHAPE_RE.search(lhs_t)
+                if sm:
+                    dims = [int(d) for d in sm.group(2).split(",") if d]
+                    for idx in (int(i) for i in cm.group(1).split(",") if i):
+                        if idx < len(dims):
+                            contract *= dims[idx]
+            cost.flops += 2.0 * result_elems * contract
+        elif base in ELEMENTWISE:
+            cost.flops += result_elems
+            if base in ("exponential", "tanh", "log", "logistic", "rsqrt",
+                        "sqrt", "power", "cosine", "sine"):
+                cost.transcendentals += result_elems
+        elif base in REDUCE_LIKE:
+            cost.flops += self._operand_bytes(operand_t) / 4.0  # ~elems
+        elif base == "convolution":
+            cost.flops += 2.0 * result_elems  # lower bound; convs unused here
+
+        cost.bytes += result_bytes + self._operand_bytes(operand_t)
+
+    # ------------------------------------------------------------------
+    def totals(self) -> dict:
+        """Propagate multipliers from the entry through the call graph."""
+        if self.entry is None:
+            raise ValueError("no ENTRY computation found")
+        # Reachable sub-graph (a DAG: HLO computations cannot recurse).
+        reachable = [self.entry]
+        seen = {self.entry}
+        i = 0
+        while i < len(reachable):
+            comp = reachable[i]
+            i += 1
+            for callee, _, _ in self.comps.get(comp, CompCost()).edges:
+                if callee not in seen and callee in self.comps:
+                    seen.add(callee)
+                    reachable.append(callee)
+        # Kahn topological order restricted to reachable comps.
+        indeg: dict[str, int] = {c: 0 for c in reachable}
+        for comp in reachable:
+            for callee, _, _ in self.comps[comp].edges:
+                if callee in indeg:
+                    indeg[callee] += 1
+        frontier = [c for c in reachable if indeg[c] == 0]
+        order: list[str] = []
+        while frontier:
+            comp = frontier.pop()
+            order.append(comp)
+            for callee, _, _ in self.comps[comp].edges:
+                if callee in indeg:
+                    indeg[callee] -= 1
+                    if indeg[callee] == 0:
+                        frontier.append(callee)
+        mult: dict[str, float] = defaultdict(float)
+        mult[self.entry] = 1.0
+        for comp in order:
+            for callee, factor, _ in self.comps[comp].edges:
+                if callee in indeg:
+                    mult[callee] += mult[comp] * factor
+
+        flops = bytes_ = trans = 0.0
+        coll_b: dict[str, float] = defaultdict(float)
+        coll_c: dict[str, float] = defaultdict(float)
+        for comp in order:
+            c = self.comps[comp]
+            m = mult[comp]
+            flops += m * c.flops
+            trans += m * c.transcendentals
+            if comp not in self.fusion_bodies:
+                bytes_ += m * c.bytes
+            for k, v in c.coll_bytes.items():
+                coll_b[k] += m * v
+            for k, v in c.coll_counts.items():
+                coll_c[k] += m * v
+        return {
+            "flops": flops,
+            "bytes_accessed": bytes_,
+            "transcendentals": trans,
+            "collective_bytes": dict(coll_b),
+            "collective_counts": dict(coll_c),
+            "total_collective_bytes": sum(coll_b.values()),
+        }
+
+
+def analyze_hlo(text: str) -> dict:
+    return HloProgram(text).totals()

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the
+``pod`` axis is data-parallel across pods (DCN), with gradient reduction
+hierarchical: reduce-scatter within pod over ICI, then cross-pod.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state; the dry-run sets the 512-device XLA flag before
+importing anything.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices but only {len(devices)} "
+            f"available — run under XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={need} (see launch/dryrun.py)"
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Best-effort mesh over whatever devices exist (tests/examples)."""
+    n = len(jax.devices())
+    model = model_parallel
+    while model > 1 and n % model:
+        model //= 2
+    return jax.make_mesh((n // model, model), ("data", "model"))

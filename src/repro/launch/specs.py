@@ -1,0 +1,190 @@
+"""Per-cell step functions + fully-sharded abstract inputs for the dry-run.
+
+For every (arch x shape) cell this module builds:
+  * the step function to lower (train_step / prefill / decode),
+  * ``ShapeDtypeStruct`` stand-ins for every input with ``NamedSharding``
+    attached (weak-type-correct, shardable, zero allocation),
+  * donation indices (state/cache donated — real deployments run in-place;
+    memory analysis is meaningless otherwise).
+
+``input_specs`` is the public entry point required by the dry-run contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, OptimizerConfig, TrainConfig, registry
+from ..configs.base import ModelConfig, ShapeSpec
+from ..distributed import sharding as shd
+from ..models import lm
+from ..runtime.elastic import state_shardings
+from ..serve.engine import decode_one
+from ..train import abstract_state, make_train_step
+
+CACHE_DTYPE = jnp.bfloat16
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape: str
+    fn: Callable                    # positional args match ``args``
+    args: tuple                     # ShapeDtypeStructs with shardings
+    donate: tuple[int, ...]
+    out_shardings: Any              # pytree or None (auto)
+    cfg: ModelConfig
+    meta: dict[str, Any]
+
+
+def train_config_for(arch: str, overrides: dict | None = None) -> TrainConfig:
+    spec = registry.get(arch)
+    opt = OptimizerConfig(name=spec.optimizer)
+    tcfg = TrainConfig(optimizer=opt)
+    if overrides:
+        opt_over = {k[4:]: v for k, v in overrides.items() if k.startswith("opt_")}
+        tc_over = {k: v for k, v in overrides.items() if not k.startswith("opt_")}
+        if opt_over:
+            opt = dataclasses.replace(opt, **opt_over)
+        tcfg = dataclasses.replace(tcfg, optimizer=opt, **tc_over)
+    return tcfg
+
+
+def _batch_structs(cfg: ModelConfig, ss: ShapeSpec, mesh: Mesh):
+    amap = shd.axis_map(mesh)
+    b_ax = amap["batch"]
+    b, s = ss.global_batch, ss.seq_len
+    tok_spec = P(b_ax, None)
+    batch: dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.embedding_inputs:
+        batch["embeds"] = jax.ShapeDtypeStruct(
+            (b, s, cfg.d_model), jnp.bfloat16,
+            sharding=NamedSharding(mesh, P(b_ax, None, None)),
+        )
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct(
+            (b, s), jnp.int32, sharding=NamedSharding(mesh, tok_spec)
+        )
+    batch["labels"] = jax.ShapeDtypeStruct(
+        (b, s), jnp.int32, sharding=NamedSharding(mesh, tok_spec)
+    )
+    return batch
+
+
+def _params_structs(cfg: ModelConfig, mesh: Mesh, key, inference: bool = False):
+    shapes = jax.eval_shape(lambda k: lm.init_params(k, cfg), key)
+    specs = shd.param_specs(shapes, mesh, inference=inference)
+    return shd.struct_with_sharding(shapes, specs, mesh), specs
+
+
+def _cache_structs(cfg: ModelConfig, batch: int, capacity: int, mesh: Mesh,
+                   batched: bool):
+    shapes = jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, batch, capacity, CACHE_DTYPE)
+    )
+    specs = shd.cache_specs(shapes, mesh, batched=batched)
+    return shd.struct_with_sharding(shapes, specs, mesh), specs
+
+
+def input_specs(arch: str, shape: str, mesh: Mesh,
+                overrides: dict | None = None) -> CellSpec:
+    """Build the (step fn, abstract sharded inputs) for one dry-run cell."""
+    ss = SHAPES[shape]
+    cfg = registry.get(arch).model()
+    if overrides and "model" in overrides:
+        cfg = dataclasses.replace(cfg, **overrides.pop("model"))
+    key = jax.random.PRNGKey(0)
+
+    if ss.kind == "train":
+        tcfg = dataclasses.replace(
+            train_config_for(arch, overrides),
+            global_batch=ss.global_batch, seq_len=ss.seq_len,
+        )
+        state_shapes = abstract_state(key, cfg, tcfg)
+        shards = state_shardings(state_shapes, mesh)
+        state_structs = jax.tree.map(
+            lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+            state_shapes, shards,
+        )
+        batch = _batch_structs(cfg, ss, mesh)
+        fn = make_train_step(cfg, tcfg)
+        return CellSpec(
+            arch=arch, shape=shape, fn=fn, args=(state_structs, batch),
+            donate=(0,), out_shardings=(shards, None), cfg=cfg,
+            meta={"kind": "train", "tokens": ss.global_batch * ss.seq_len,
+                  "optimizer": tcfg.optimizer.name},
+        )
+
+    # TP-only (no-FSDP) inference params measured WORSE on this analyzer
+    # (replication raised per-device flops; the big all-gather was the MLA
+    # cache, not weights) — keep FSDP default, expose the knob.
+    inference_sharding = bool((overrides or {}).pop("inference_params", False))
+    params_structs, _ = _params_structs(cfg, mesh, key,
+                                        inference=inference_sharding)
+    amap = shd.axis_map(mesh)
+    b_ax = amap["batch"]
+
+    if ss.kind == "prefill":
+        cache_structs, cache_spec = _cache_structs(
+            cfg, ss.global_batch, ss.seq_len, mesh, batched=True
+        )
+
+        def fn(params, batch, cache):
+            logits, new_cache = lm.prefill(
+                params, cfg, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"), cache=cache, last_only=True,
+            )
+            return logits, new_cache
+
+        batch = _batch_structs(cfg, ss, mesh)
+        batch.pop("labels")
+        return CellSpec(
+            arch=arch, shape=shape, fn=fn,
+            args=(params_structs, batch, cache_structs), donate=(2,),
+            out_shardings=None, cfg=cfg,
+            meta={"kind": "prefill", "tokens": ss.global_batch * ss.seq_len},
+        )
+
+    # decode: one new token against a seq_len-deep cache.
+    batched = ss.global_batch > 1
+    cache_structs, _ = _cache_structs(
+        cfg, ss.global_batch, ss.seq_len, mesh, batched=batched
+    )
+    tok_sharding = NamedSharding(mesh, P(b_ax, None) if batched else P(None, None))
+    len_sharding = NamedSharding(mesh, P(b_ax) if batched else P(None))
+    tokens = jax.ShapeDtypeStruct((ss.global_batch, 1), jnp.int32,
+                                  sharding=tok_sharding)
+    lengths = jax.ShapeDtypeStruct((ss.global_batch,), jnp.int32,
+                                   sharding=len_sharding)
+
+    def decode_fn(params, tokens, cache, lengths):
+        return decode_one(params, cfg, tokens, cache, lengths)
+
+    return CellSpec(
+        arch=arch, shape=shape, fn=decode_fn,
+        args=(params_structs, tokens, cache_structs, lengths), donate=(2,),
+        out_shardings=None, cfg=cfg,
+        meta={"kind": "decode", "tokens": ss.global_batch},
+    )
+
+
+def lower_cell(cell: CellSpec, mesh: Mesh):
+    jitted = jax.jit(
+        cell.fn,
+        donate_argnums=cell.donate,
+        out_shardings=cell.out_shardings,
+    )
+    # Activation constraints pay off when activations are large (train /
+    # prefill).  Decode activations are (B, 1, d) slivers: constraining them
+    # just inserts reshards (granite/gemma decode measured ~2x collective
+    # regressions), and batch=1 long-context shards sequence instead.
+    ss = SHAPES[cell.shape]
+    batched = ss.global_batch > 1 and ss.kind != "decode"
+    with mesh, shd.activation_sharding(mesh, batch=batched):
+        return jitted.lower(*cell.args)

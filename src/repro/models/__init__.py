@@ -1,0 +1,12 @@
+"""Model zoo: layers, attention (GQA/MLA), MoE, Mamba2/SSD, stage-based LM."""
+
+from . import attention, blocks, frontends, layers, lm, mamba2, mla, moe  # noqa: F401
+from .lm import (  # noqa: F401
+    active_param_count,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    param_count,
+    prefill,
+)

@@ -1,0 +1,306 @@
+"""Attention: MHA/GQA/MQA with RoPE, sliding windows, KV caches, and both a
+materialized-scores ("einsum") and a flash-style blocked ("blocked") softmax.
+
+Layout conventions:
+  activations  x          (B, S, d_model)
+  queries      q          (B, S, Hq, dh)
+  keys/values  k, v       (B, S, Hkv, dh)
+  KV cache     k/v        (B, L, Hkv, dh)   L = capacity (window for local)
+  positions    (B, S) absolute token positions (RoPE is applied pre-cache,
+               so ring-buffer eviction never needs re-rotation)
+  lengths      (B,) tokens already in cache (decode)
+
+Grouped-query attention never materializes repeated KV heads: queries are
+reshaped to (B, S, Hkv, G, dh) and contracted against the raw KV tensors.
+Scores/softmax accumulate in f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import AttentionConfig, ModelConfig
+from ..distributed.sharding import constrain_heads
+from .layers import apply_rope, dense, dense_init, rms_norm_simple
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def attn_init(key, acfg: AttentionConfig, d_model: int, dtype):
+    ks = jax.random.split(key, 6)
+    h, hkv, dh = acfg.num_heads, acfg.num_kv_heads, acfg.head_dim
+    params = {
+        "wq": dense_init(ks[0], d_model, h * dh, dtype),
+        "wk": dense_init(ks[1], d_model, hkv * dh, dtype),
+        "wv": dense_init(ks[2], d_model, hkv * dh, dtype),
+        "wo": dense_init(ks[3], h * dh, d_model, dtype),
+    }
+    if acfg.qkv_bias:
+        params["bq"] = jnp.zeros((h * dh,), dtype)
+        params["bk"] = jnp.zeros((hkv * dh,), dtype)
+        params["bv"] = jnp.zeros((hkv * dh,), dtype)
+    if acfg.qk_norm:
+        params["q_norm"] = jnp.zeros((dh,), dtype)
+        params["k_norm"] = jnp.zeros((dh,), dtype)
+    return params
+
+
+def make_cache(acfg: AttentionConfig, batch: int, capacity: int, dtype):
+    hkv, dh = acfg.num_kv_heads, acfg.head_dim
+    cap = capacity if acfg.sliding_window is None else min(capacity, acfg.sliding_window)
+    return {
+        "k": jnp.zeros((batch, cap, hkv, dh), dtype),
+        "v": jnp.zeros((batch, cap, hkv, dh), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Score masking
+# ---------------------------------------------------------------------------
+
+def _mask_bias(pos_q, pos_k, window, valid_k=None):
+    """(B, Sq, Sk) additive bias enforcing causality/window/validity."""
+    ok = pos_q[:, :, None] >= pos_k[:, None, :]
+    if window is not None:
+        ok &= (pos_q[:, :, None] - pos_k[:, None, :]) < window
+    if valid_k is not None:
+        ok &= valid_k[:, None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _softcap(scores, cap):
+    return cap * jnp.tanh(scores / cap) if cap is not None else scores
+
+
+# ---------------------------------------------------------------------------
+# Core attention (einsum / blocked)
+# ---------------------------------------------------------------------------
+
+def attention_einsum(q, k, v, pos_q, pos_k, *, window=None, softcap=None,
+                     valid_k=None, compute_dtype=jnp.bfloat16,
+                     expand_kv: bool = True, softmax_dtype="float32"):
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    if expand_kv and g > 1:
+        # Sharding-friendly GQA: expand KV to full heads so every einsum
+        # keeps one plain head axis.  The grouped (hkv, g) form makes GSPMD
+        # give up on batch sharding when hkv doesn't divide the TP axis
+        # (8 KV heads on 16-way TP) and all-reduce whole score tensors
+        # (86 GB/device on qwen train_4k — see EXPERIMENTS.md §Perf).  The
+        # expanded copies cost (B,S,H,dh) bf16 — trivial next to scores.
+        k = constrain_heads(jnp.repeat(k, g, axis=2))
+        v = constrain_heads(jnp.repeat(v, g, axis=2))
+        q = constrain_heads(q)
+        hkv, g = h, 1
+    q5 = q.reshape(b, sq, hkv, g, dh).astype(compute_dtype)
+    sdt = jnp.dtype(softmax_dtype)
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q5, k.astype(compute_dtype),
+        preferred_element_type=sdt,
+    ) / np.sqrt(dh)
+    scores = _softcap(scores, softcap)
+    bias = _mask_bias(pos_q, pos_k, window, valid_k).astype(sdt)
+    scores = scores + bias[:, None, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(compute_dtype))
+    return out.reshape(b, sq, h, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def attention_blocked(q, k, v, pos_q, pos_k, *, window=None, softcap=None,
+                      valid_k=None, compute_dtype=jnp.bfloat16,
+                      block_q=512, block_kv=1024, expand_kv: bool = True):
+    """Flash-style online-softmax attention: O(S * block_kv) live memory.
+
+    All query blocks advance together; a ``lax.scan`` walks KV blocks
+    maintaining (running max, normalizer, weighted accumulator).
+    """
+    b, sq, h, dh = q.shape
+    if expand_kv and h // k.shape[2] > 1:
+        k = jnp.repeat(k, h // k.shape[2], axis=2)  # see attention_einsum
+        v = jnp.repeat(v, h // v.shape[2], axis=2)
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]  # v head dim may differ from dh (MLA)
+    g = h // hkv
+    bq = min(block_q, sq)
+    bkv = min(block_kv, skv)
+    nq, nkv = -(-sq // bq), -(-skv // bkv)
+    pad_q, pad_kv = nq * bq - sq, nkv * bkv - skv
+
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    pos_qp = jnp.pad(pos_q, ((0, 0), (0, pad_q)), constant_values=-1)
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    pos_kp = jnp.pad(pos_k, ((0, 0), (0, pad_kv)), constant_values=np.iinfo(np.int32).max)
+    validp = (
+        jnp.pad(valid_k, ((0, 0), (0, pad_kv)), constant_values=False)
+        if valid_k is not None
+        else None
+    )
+
+    q6 = qp.reshape(b, nq, bq, hkv, g, dh).astype(compute_dtype)
+    k4 = kp.reshape(b, nkv, bkv, hkv, dh).astype(compute_dtype)
+    v4 = vp.reshape(b, nkv, bkv, hkv, dv).astype(compute_dtype)
+    pos_q3 = pos_qp.reshape(b, nq, bq)
+    pos_k3 = pos_kp.reshape(b, nkv, bkv)
+    valid3 = validp.reshape(b, nkv, bkv) if validp is not None else None
+
+    m0 = jnp.full((b, nq, bq, hkv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, nq, bq, hkv, g), jnp.float32)
+    acc0 = jnp.zeros((b, nq, bq, hkv, g, dv), jnp.float32)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kj, vj, pkj, vkj = inputs
+        s = jnp.einsum("bnqkgd,bskd->bnqkgs", q6, kj,
+                       preferred_element_type=jnp.float32) / np.sqrt(dh)
+        s = _softcap(s, softcap)
+        ok = pos_q3[:, :, :, None] >= pkj[:, None, None, :]
+        if window is not None:
+            ok &= (pos_q3[:, :, :, None] - pkj[:, None, None, :]) < window
+        if vkj is not None:
+            ok &= vkj[:, None, None, :]
+        s = s + jnp.where(ok, 0.0, NEG_INF)[:, :, :, None, None, :]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # Renormalize the running accumulator; exp(NEG_INF - NEG_INF) guard.
+        corr = jnp.exp(jnp.maximum(m - m_new, -80.0))
+        p = jnp.exp(jnp.maximum(s - m_new[..., None], -80.0))
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bnqkgs,bskd->bnqkgd", p.astype(compute_dtype), vj,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(
+        step,
+        (m0, l0, acc0),
+        (
+            jnp.moveaxis(k4, 1, 0),
+            jnp.moveaxis(v4, 1, 0),
+            jnp.moveaxis(pos_k3, 1, 0),
+            jnp.moveaxis(valid3, 1, 0) if valid3 is not None else None,
+        ),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.reshape(b, nq * bq, h, dv)[:, :sq]
+    return out.astype(compute_dtype)
+
+
+def attend(q, k, v, pos_q, pos_k, *, mcfg: ModelConfig, acfg: AttentionConfig,
+           valid_k=None, compute_dtype=jnp.bfloat16):
+    impl = mcfg.attn_impl
+    if impl == "auto":
+        impl = "blocked" if q.shape[1] >= mcfg.blocked_attn_threshold else "einsum"
+    fn = attention_blocked if impl == "blocked" else attention_einsum
+    # Expanded-KV GQA pays (B, S_kv, H, dh) copies to win shardability: right
+    # for train/prefill (fresh K/V, S_q = S_kv), catastrophic for decode
+    # (repeating a 32k-deep cache 5x regressed GQA decode cells 20-50x in
+    # collective bytes — EXPERIMENTS.md §Perf-fleet).  Grouped form for S_q=1.
+    expand = mcfg.gqa_expand_kv and q.shape[1] > 1
+    kwargs: dict[str, Any] = dict(
+        window=acfg.sliding_window, softcap=acfg.logit_softcap,
+        valid_k=valid_k, compute_dtype=compute_dtype,
+        expand_kv=expand,
+    )
+    if fn is attention_blocked:
+        kwargs.update(block_q=mcfg.attn_block_q, block_kv=mcfg.attn_block_kv)
+    else:
+        kwargs.update(softmax_dtype=mcfg.softmax_dtype)
+    return fn(q, k, v, pos_q, pos_k, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+def _project_qkv(params, acfg, x, positions, compute_dtype):
+    b, s, _ = x.shape
+    h, hkv, dh = acfg.num_heads, acfg.num_kv_heads, acfg.head_dim
+    q = dense(x, params["wq"], compute_dtype)
+    k = dense(x, params["wk"], compute_dtype)
+    v = dense(x, params["wv"], compute_dtype)
+    if acfg.qkv_bias:
+        q = q + params["bq"].astype(compute_dtype)
+        k = k + params["bk"].astype(compute_dtype)
+        v = v + params["bv"].astype(compute_dtype)
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    if acfg.qk_norm:
+        q = rms_norm_simple(q, params["q_norm"])
+        k = rms_norm_simple(k, params["k_norm"])
+    q = apply_rope(q, positions, acfg.rope_theta)
+    k = apply_rope(k, positions, acfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(params, acfg: AttentionConfig, mcfg: ModelConfig, x, positions,
+               cache=None, lengths=None, mode: str = "train"):
+    """Returns (out (B,S,d_model), new_cache)."""
+    compute_dtype = jnp.dtype(mcfg.compute_dtype)
+    q, k, v = _project_qkv(params, acfg, x, positions, compute_dtype)
+    b, s = x.shape[0], x.shape[1]
+
+    if mode == "train":
+        out = attend(q, k, v, positions, positions, mcfg=mcfg, acfg=acfg,
+                     compute_dtype=compute_dtype)
+        new_cache = None
+    elif mode == "prefill":
+        out = attend(q, k, v, positions, positions, mcfg=mcfg, acfg=acfg,
+                     compute_dtype=compute_dtype)
+        new_cache = _prefill_cache(cache, k, v)
+    elif mode == "decode":
+        assert s == 1 and cache is not None and lengths is not None
+        cap = cache["k"].shape[1]
+        slot = (lengths % cap).astype(jnp.int32)
+        bidx = jnp.arange(b)
+        ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+        new_lengths = lengths + 1
+        idx = jnp.arange(cap)[None, :]
+        # Validity: slots written so far (all of them once the ring wraps).
+        valid = idx < jnp.minimum(new_lengths, cap)[:, None]
+        # Absolute position held by ring slot `idx` given the newest token
+        # (at absolute position positions[:,0]) just landed in `slot`:
+        # walking backwards from `slot`, each step is one token older.
+        pos_k = positions[:, 0:1] - ((slot[:, None] - idx) % cap)
+        out = attend(q, ck, cv, positions, pos_k, mcfg=mcfg, acfg=acfg,
+                     valid_k=valid, compute_dtype=compute_dtype)
+        new_cache = {"k": ck, "v": cv}
+    else:
+        raise ValueError(mode)
+
+    out = out.reshape(b, s, -1)
+    return dense(out, params["wo"], compute_dtype), new_cache
+
+
+def _prefill_cache(cache, k, v):
+    """Write a prefilled (B,S,..) KV into a (B,L,..) cache (ring for local)."""
+    if cache is None:
+        return None
+    cap = cache["k"].shape[1]
+    s = k.shape[1]
+    if s <= cap:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), 0, axis=1
+        )
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), 0, axis=1
+        )
+        return {"k": ck, "v": cv}
+    # Keep the last `cap` entries, placed at their ring slots.
+    tail_k, tail_v = k[:, s - cap:], v[:, s - cap:]
+    slots = (jnp.arange(cap) + (s - cap)) % cap
+    ck = cache["k"].at[:, slots].set(tail_k.astype(cache["k"].dtype))
+    cv = cache["v"].at[:, slots].set(tail_v.astype(cache["v"].dtype))
+    return {"k": ck, "v": cv}

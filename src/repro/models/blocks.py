@@ -1,0 +1,100 @@
+"""Residual blocks: attention+MLP, attention+MoE, and Mamba2 mixers.
+
+Every block has a uniform signature so stages can scan over heterogeneous
+groups:
+
+    block_apply(params, bcfg, mcfg, x, positions, cache, lengths, mode)
+        -> (x, new_cache, aux)
+
+``aux`` is a dict of scalar auxiliary losses (MoE load-balance/z-loss),
+summed across layers by the LM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import BlockConfig, ModelConfig
+from . import attention as attn_mod
+from . import mamba2 as mamba_mod
+from . import mla as mla_mod
+from . import moe as moe_mod
+from .layers import mlp_apply, mlp_init, norm_apply, norm_init
+
+ZERO_AUX = {"load_balance": jnp.float32(0.0), "router_z": jnp.float32(0.0)}
+
+
+def block_init(key, bcfg: BlockConfig, mcfg: ModelConfig, dtype):
+    d = mcfg.d_model
+    ks = jax.random.split(key, 4)
+    params: dict = {}
+    if bcfg.kind == "mamba":
+        params["ln"] = norm_init(d, mcfg.norm, dtype)
+        params["mixer"] = mamba_mod.mamba_init(ks[0], bcfg.ssm, d, dtype)
+        return params
+    acfg = bcfg.attention
+    params["ln1"] = norm_init(d, mcfg.norm, dtype)
+    init_fn = mla_mod.mla_init if acfg.is_mla else attn_mod.attn_init
+    params["attn"] = init_fn(ks[0], acfg, d, dtype)
+    params["ln2"] = norm_init(d, mcfg.norm, dtype)
+    if bcfg.kind == "moe":
+        params["moe"] = moe_mod.moe_init(ks[1], bcfg.moe, d, dtype)
+    else:
+        params["mlp"] = mlp_init(ks[1], d, bcfg.mlp_dim, dtype, gated=bcfg.mlp_gated)
+    if mcfg.post_norm:
+        params["post_ln1"] = norm_init(d, mcfg.norm, dtype)
+        params["post_ln2"] = norm_init(d, mcfg.norm, dtype)
+    return params
+
+
+def block_cache(bcfg: BlockConfig, mcfg: ModelConfig, batch: int, capacity: int,
+                dtype):
+    if bcfg.kind == "mamba":
+        return {"ssm_cache": mamba_mod.make_ssm_cache(bcfg.ssm, mcfg.d_model, batch, dtype)}
+    acfg = bcfg.attention
+    if acfg.is_mla:
+        return {"kv": mla_mod.make_mla_cache(acfg, batch, capacity, dtype)}
+    return {"kv": attn_mod.make_cache(acfg, batch, capacity, dtype)}
+
+
+def block_apply(params, bcfg: BlockConfig, mcfg: ModelConfig, x, positions,
+                cache=None, lengths=None, mode: str = "train"):
+    compute_dtype = jnp.dtype(mcfg.compute_dtype)
+    eps, kind = mcfg.norm_eps, mcfg.norm
+
+    def pre(p, h):
+        return norm_apply(p, h, kind, eps, compute_dtype)
+
+    if bcfg.kind == "mamba":
+        inner_cache = cache["ssm_cache"] if cache is not None else None
+        y, new_inner = mamba_mod.mamba_apply(
+            params["mixer"], bcfg.ssm, mcfg.d_model, pre(params["ln"], x),
+            cache=inner_cache, mode=mode, compute_dtype=compute_dtype,
+        )
+        new_cache = {"ssm_cache": new_inner} if cache is not None else None
+        return x + y, new_cache, dict(ZERO_AUX)
+
+    acfg = bcfg.attention
+    apply_fn = mla_mod.mla_apply if acfg.is_mla else attn_mod.attn_apply
+    inner_cache = cache["kv"] if cache is not None else None
+    y, new_kv = apply_fn(
+        params["attn"], acfg, mcfg, pre(params["ln1"], x), positions,
+        cache=inner_cache, lengths=lengths, mode=mode,
+    )
+    if mcfg.post_norm:
+        y = norm_apply(params["post_ln1"], y, kind, eps, compute_dtype)
+    x = x + y
+
+    h = pre(params["ln2"], x)
+    if bcfg.kind == "moe":
+        y, aux = moe_mod.moe_apply(params["moe"], bcfg.moe, h, compute_dtype,
+                                   activation=bcfg.activation)
+    else:
+        y = mlp_apply(params["mlp"], h, compute_dtype, gated=bcfg.mlp_gated,
+                      activation=bcfg.activation)
+        aux = dict(ZERO_AUX)
+    if mcfg.post_norm:
+        y = norm_apply(params["post_ln2"], y, kind, eps, compute_dtype)
+    new_cache = {"kv": new_kv} if cache is not None else None
+    return x + y, new_cache, aux

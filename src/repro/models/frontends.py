@@ -1,0 +1,30 @@
+"""Modality-frontend stubs for [vlm]/[audio] architectures.
+
+Per the assignment, these architectures are their transformer BACKBONE only:
+``input_specs()`` supplies *precomputed* patch/frame embeddings.  The stubs
+here generate deterministic synthetic embeddings with the right statistics
+so smoke tests and examples can run end-to-end without a vision tower or
+EnCodec codec.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def patch_embeddings(key, batch: int, seq: int, d_model: int,
+                     dtype=jnp.bfloat16):
+    """Pixtral stub: ViT patch embeddings, unit-ish RMS like real towers."""
+    return jax.random.normal(key, (batch, seq, d_model)).astype(dtype)
+
+
+def frame_embeddings(key, batch: int, seq: int, d_model: int,
+                     dtype=jnp.bfloat16):
+    """MusicGen stub: summed EnCodec codebook embeddings per frame."""
+    return (jax.random.normal(key, (batch, seq, d_model)) * 0.5).astype(dtype)
+
+
+def codec_labels(key, batch: int, seq: int, vocab: int = 2048):
+    """MusicGen stub: next-frame EnCodec token targets."""
+    return jax.random.randint(key, (batch, seq), 0, vocab, dtype=jnp.int32)

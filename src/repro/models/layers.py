@@ -1,0 +1,123 @@
+"""Shared model layers: initializers, norms, RoPE, (gated) MLPs, embeddings.
+
+Functional style: each layer is an ``init(key, ...) -> params`` plus an
+``apply(params, x, ...)`` pair over plain-dict pytrees (no framework dep).
+Compute runs in ``cfg.compute_dtype`` (bf16 by default) with f32 params and
+f32 softmax/norm accumulation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init, stddev = scale or 1/sqrt(in_dim)."""
+    std = (1.0 / np.sqrt(in_dim)) if scale is None else scale
+    w = jax.random.truncated_normal(key, -3.0, 3.0, (in_dim, out_dim)) * std
+    return w.astype(dtype)
+
+
+def dense(x, w, compute_dtype):
+    return jnp.einsum(
+        "...d,df->...f", x.astype(compute_dtype), w.astype(compute_dtype)
+    )
+
+
+# --- norms ------------------------------------------------------------------
+
+def norm_init(d: int, kind: str, dtype):
+    if kind == "rms":
+        return {"scale": jnp.zeros((d,), dtype)}        # (1 + scale) convention
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def norm_apply(params, x, kind: str, eps: float, compute_dtype):
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        rms = jnp.sqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        out = xf / rms * (1.0 + params["scale"].astype(jnp.float32))
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        out = (xf - mu) / jnp.sqrt(var + eps)
+        out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(
+            jnp.float32
+        )
+    return out.astype(compute_dtype)
+
+
+def rms_norm_simple(x, scale, eps: float = 1e-6):
+    """Scale-only RMS norm over the last axis (used inside Mamba/QK-norm)."""
+    xf = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf / rms * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# --- rotary embeddings --------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    exponents = np.arange(0, head_dim, 2, dtype=np.float64) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    inv_freq = jnp.asarray(rope_frequencies(dh, theta), jnp.float32)
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., S, dh/2)
+    angles = angles[..., None, :]  # add head axis -> (..., S, 1, dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- MLP ---------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, hidden: int, dtype, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    params = {"w_up": dense_init(ks[0], d_model, hidden, dtype)}
+    if gated:
+        params["w_gate"] = dense_init(ks[1], d_model, hidden, dtype)
+    params["w_down"] = dense_init(ks[2], hidden, d_model, dtype)
+    return params
+
+
+def mlp_apply(params, x, compute_dtype, gated: bool = True, activation: str = "silu"):
+    act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+    up = dense(x, params["w_up"], compute_dtype)
+    if gated:
+        up = act(dense(x, params["w_gate"], compute_dtype)) * up
+    else:
+        up = act(up)
+    return dense(up, params["w_down"], compute_dtype)
+
+
+# --- embeddings ---------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int, dtype):
+    w = jax.random.normal(key, (vocab, d_model)) * (1.0 / np.sqrt(d_model))
+    return {"table": w.astype(dtype)}
+
+
+def embed_apply(params, tokens, compute_dtype, scale: float | None = None):
+    x = jnp.take(params["table"], tokens, axis=0).astype(compute_dtype)
+    return x * scale if scale is not None else x
+
+
+def unembed_apply(params, x, compute_dtype):
+    """Logits in f32 (stable softmax/CE)."""
+    return jnp.einsum(
+        "...d,vd->...v", x.astype(compute_dtype), params["table"].astype(compute_dtype)
+    ).astype(jnp.float32)
+
+
+def head_init(key, d_model: int, vocab: int, dtype):
+    return {"w": dense_init(key, d_model, vocab, dtype)}
+
+
+def head_apply(params, x, compute_dtype):
+    return dense(x, params["w"], compute_dtype).astype(jnp.float32)

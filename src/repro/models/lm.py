@@ -1,0 +1,217 @@
+"""Stage-based decoder LM assembly.
+
+Parameters/caches are organized per stage:
+
+    params["stage_{i}"] = {
+        "blocks": {"{b}": <pytree stacked over stage.repeat>},   # scanned
+        "shared": {"{b}": <pytree>},                             # zamba2-style
+    }
+    cache["stage_{i}"]  = {"{b}": <cache pytree stacked over repeat>}
+
+Each stage executes as one ``lax.scan`` over its repeats (bounded compile
+time at 88 layers); a repeat applies the stage's block group in order.
+Shared blocks reuse closure parameters but still receive per-repeat cache
+slices.  Gradient checkpointing wraps the per-repeat group function.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, Stage
+from ..distributed.sharding import constrain_batch, constrain_logits
+from .blocks import ZERO_AUX, block_apply, block_cache, block_init
+from .layers import (
+    embed_apply,
+    embed_init,
+    head_apply,
+    head_init,
+    norm_apply,
+    norm_init,
+    unembed_apply,
+)
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": "recompute_all",
+    "dots": "dots",
+}
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    n_stage = len(cfg.stages)
+    keys = jax.random.split(key, n_stage + 2)
+    params: dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype)
+    }
+    for si, stage in enumerate(cfg.stages):
+        skey = keys[1 + si]
+        # NOTE: empty sub-dicts are omitted (leafless containers do not
+        # survive checkpoint save/restore round trips).
+        sp: dict[str, Any] = {"blocks": {}, "shared": {}}
+        bkeys = jax.random.split(skey, len(stage.blocks))
+        for bi, bcfg in enumerate(stage.blocks):
+            if bcfg.shared:
+                sp["shared"][str(bi)] = block_init(bkeys[bi], bcfg, cfg, dtype)
+            else:
+                rep_keys = jax.random.split(bkeys[bi], stage.repeat)
+                sp["blocks"][str(bi)] = jax.vmap(
+                    lambda k, b=bcfg: block_init(k, b, cfg, dtype)
+                )(rep_keys)
+        params[f"stage_{si}"] = {k: v for k, v in sp.items() if v}
+    params["final_norm"] = norm_init(cfg.d_model, cfg.norm, dtype)
+    if not cfg.tie_embeddings:
+        params["head"] = head_init(keys[-1], cfg.d_model, cfg.vocab_size, dtype)
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int, dtype=jnp.bfloat16):
+    cache: dict[str, Any] = {}
+    for si, stage in enumerate(cfg.stages):
+        sc = {}
+        for bi, bcfg in enumerate(stage.blocks):
+            one = block_cache(bcfg, cfg, batch, capacity, dtype)
+            sc[str(bi)] = jax.tree.map(
+                lambda a: jnp.zeros((stage.repeat,) + a.shape, a.dtype), one
+            )
+        cache[f"stage_{si}"] = sc
+    return cache
+
+
+def _add_aux(a, b):
+    return {k: a[k] + b[k] for k in a}
+
+
+def _run_stage(sparams, stage: Stage, cfg: ModelConfig, x, positions,
+               stage_cache, lengths, mode: str, remat: str):
+    has_cache = stage_cache is not None
+
+    def group_fn(x, aux, blk_params, cache_slices):
+        new_caches = {}
+        for bi, bcfg in enumerate(stage.blocks):
+            p = (sparams["shared"][str(bi)] if bcfg.shared
+                 else blk_params[str(bi)])
+            c = cache_slices[str(bi)] if has_cache else None
+            x, nc, a = block_apply(p, bcfg, cfg, x, positions, c, lengths, mode)
+            if has_cache:
+                new_caches[str(bi)] = nc
+            aux = _add_aux(aux, a)
+        return x, aux, new_caches
+
+    if remat == "full":
+        group_fn = jax.checkpoint(group_fn)
+    elif remat == "dots":
+        group_fn = jax.checkpoint(
+            group_fn, policy=jax.checkpoint_policies.checkpoint_dots
+        )
+
+    def body(carry, xs):
+        x, aux = carry
+        blk_params, cache_slices = xs
+        x, aux, new_caches = group_fn(x, aux, blk_params, cache_slices)
+        return (constrain_batch(x), aux), new_caches
+
+    xs = (sparams.get("blocks", {}), stage_cache if has_cache else None)
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, dict(ZERO_AUX)), xs, length=stage.repeat
+    )
+    return x, aux, (new_cache if has_cache else None)
+
+
+def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None,
+            positions=None, lengths=None, cache=None, mode: str = "train",
+            remat: str = "none", last_only: bool = False):
+    """Returns (logits_f32, aux_losses, new_cache).
+
+    ``last_only`` computes logits for the final position only (prefill:
+    (B,1,V) instead of (B,S,V) — at 32k x 262k vocab that's the difference
+    between MBs and TBs of activation).
+    """
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    if embeds is not None:
+        x = embeds.astype(compute_dtype)
+        if cfg.embed_scale is not None:
+            x = x * cfg.embed_scale
+        b, s = x.shape[0], x.shape[1]
+    else:
+        x = embed_apply(params["embed"], tokens, compute_dtype, cfg.embed_scale)
+        b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+    x = constrain_batch(x)
+
+    aux = dict(ZERO_AUX)
+    new_cache: dict[str, Any] = {}
+    for si, stage in enumerate(cfg.stages):
+        sc = cache[f"stage_{si}"] if cache is not None else None
+        x, a, nc = _run_stage(
+            params[f"stage_{si}"], stage, cfg, x, positions, sc, lengths, mode,
+            remat,
+        )
+        aux = _add_aux(aux, a)
+        if cache is not None:
+            new_cache[f"stage_{si}"] = nc
+
+    if last_only:
+        x = x[:, -1:]
+    x = norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps, compute_dtype)
+    if cfg.tie_embeddings:
+        logits = unembed_apply(params["embed"], x, compute_dtype)
+    else:
+        logits = head_apply(params["head"], x, compute_dtype)
+    if cfg.final_logit_softcap is not None:
+        cap = cfg.final_logit_softcap
+        logits = cap * jnp.tanh(logits / cap)
+    logits = constrain_logits(logits)
+    return logits, aux, (new_cache if cache is not None else None)
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, cache=None,
+            positions=None, last_only: bool = False):
+    """Fill the cache with a left-aligned prompt; returns (logits, cache)."""
+    logits, _, new_cache = forward(
+        params, cfg, tokens=tokens, embeds=embeds, positions=positions,
+        cache=cache, mode="prefill", last_only=last_only,
+    )
+    return logits, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, lengths):
+    """One decoding step. tokens (B,1); lengths (B,) tokens already cached."""
+    positions = lengths.astype(jnp.int32)[:, None]
+    logits, _, new_cache = forward(
+        params, cfg, tokens=tokens, positions=positions, lengths=lengths,
+        cache=cache, mode="decode",
+    )
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Parameter accounting (roofline MODEL_FLOPS inputs)
+# ---------------------------------------------------------------------------
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def active_param_count(params, cfg: ModelConfig) -> int:
+    """Parameters touched per token: total minus unrouted expert weights."""
+    total = param_count(params)
+    inactive = 0
+    for si, stage in enumerate(cfg.stages):
+        for bi, bcfg in enumerate(stage.blocks):
+            if bcfg.kind != "moe":
+                continue
+            holder = params[f"stage_{si}"]["shared" if bcfg.shared else "blocks"]
+            moe_params = holder[str(bi)]["moe"]
+            routed = sum(
+                int(moe_params[k].size) for k in ("w_gate", "w_up", "w_down")
+            )
+            frac = 1.0 - bcfg.moe.top_k / bcfg.moe.num_experts
+            inactive += int(routed * frac)
+    return total - inactive

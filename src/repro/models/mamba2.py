@@ -1,0 +1,212 @@
+"""Mamba2 / SSD (state-space duality) mixer — chunked parallel form + the
+recurrent decode step.
+
+TPU adaptation of the SSD algorithm (Dao & Gu, arXiv:2405.21060): the
+sequence is split into chunks of Q tokens.  Within a chunk the dual
+"attention-like" quadratic form runs on the MXU; across chunks a short
+``lax.scan`` carries the (H, P, N) state.  All decay arithmetic is f32
+(exp/cumsum are precision-critical); matmuls run in the compute dtype.
+
+Shapes: d_inner = expand * d_model; H = d_inner / head_dim(P); B/C are
+single-group (n_groups=1), shared across heads.
+
+  parallel (train/prefill):  x (B,S,d) -> y (B,S,d), final ssm/conv state
+  recurrent (decode):        one token, state update in O(H*P*N)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import SSMConfig
+from .layers import dense, dense_init, rms_norm_simple
+
+
+def _dims(scfg: SSMConfig, d_model: int):
+    d_inner = scfg.expand * d_model
+    n_heads = d_inner // scfg.head_dim
+    conv_dim = d_inner + 2 * scfg.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def mamba_init(key, scfg: SSMConfig, d_model: int, dtype):
+    d_inner, n_heads, conv_dim = _dims(scfg, d_model)
+    ks = jax.random.split(key, 6)
+    in_dim = 2 * d_inner + 2 * scfg.d_state + n_heads  # z, x, B, C, dt
+    lo, hi = scfg.a_init_range
+    a = jax.random.uniform(ks[2], (n_heads,), minval=lo, maxval=hi)
+    # dt_bias: softplus^-1 of dt ~ U[1e-3, 1e-1].
+    dt = jnp.exp(
+        jax.random.uniform(ks[3], (n_heads,)) * (np.log(0.1) - np.log(1e-3))
+        + np.log(1e-3)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "w_in": dense_init(ks[0], d_model, in_dim, dtype),
+        "conv_w": (jax.random.normal(ks[1], (scfg.conv_width, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(a).astype(jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm": jnp.zeros((d_inner,), dtype),
+        "w_out": dense_init(ks[4], d_inner, d_model, dtype),
+    }
+
+
+def make_ssm_cache(scfg: SSMConfig, d_model: int, batch: int, dtype):
+    d_inner, n_heads, conv_dim = _dims(scfg, d_model)
+    return {
+        "conv": jnp.zeros((batch, scfg.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, n_heads, scfg.head_dim, scfg.d_state), jnp.float32),
+    }
+
+
+def _split_proj(params, scfg, d_model, x, compute_dtype):
+    d_inner, n_heads, _ = _dims(scfg, d_model)
+    proj = dense(x, params["w_in"], compute_dtype)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner : d_inner + d_inner + 2 * scfg.d_state]
+    dt_raw = proj[..., -n_heads:]
+    return z, xbc, dt_raw
+
+
+def _conv_parallel(params, xbc, conv_state=None):
+    """Causal depthwise conv along S. xbc: (B, S, conv_dim)."""
+    width = params["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        xp[:, i : i + xbc.shape[1]] * params["conv_w"][i].astype(xbc.dtype)
+        for i in range(width)
+    )
+    new_state = xp[:, xp.shape[1] - (width - 1):]
+    return jax.nn.silu(out + params["conv_b"].astype(xbc.dtype)), new_state
+
+
+def _ssd_chunked(xh, dt, a_log, bmat, cmat, chunk, init_state=None):
+    """SSD parallel form.
+
+    xh:   (B, S, H, P) conv'd inputs per head
+    dt:   (B, S, H)    softplus'd step sizes (f32)
+    bmat: (B, S, N), cmat: (B, S, N)
+    Returns y (B, S, H, P) and final state (B, H, P, N) (f32).
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    sc = nc * q
+
+    a = (dt * (-jnp.exp(a_log))[None, None, :]).astype(jnp.float32)  # (B,S,H) <= 0
+    dtx = (xh * dt[..., None]).astype(xh.dtype)                      # dt-weighted input
+    ac = a.reshape(b, nc, q, h)
+    cum = jnp.cumsum(ac, axis=2)                                     # within-chunk cumsum
+    total = cum[:, :, -1]                                            # (B,nc,H)
+
+    xc = dtx.reshape(b, nc, q, h, p)
+    bc = bmat.reshape(b, nc, q, n)
+    cc = cmat.reshape(b, nc, q, n)
+
+    # Intra-chunk (the "attention duality" term): scores_ij = C_i.B_j decay_ij.
+    decay = jnp.exp(
+        jnp.clip(cum[:, :, :, None, :] - cum[:, :, None, :, :], -80.0, 0.0)
+    )  # (B,nc,Qi,Qj,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc, preferred_element_type=jnp.float32)
+    scores = cb[..., None] * decay * causal[None, None, :, :, None]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores.astype(xc.dtype), xc)
+
+    # Chunk summaries: state contribution of each chunk.
+    decay_to_end = jnp.exp(jnp.clip(total[:, :, None, :] - cum, -80.0, 0.0))  # (B,nc,Q,H)
+    chunk_states = jnp.einsum(
+        "bcqn,bcqh,bcqhp->bchpn", bc, decay_to_end.astype(bc.dtype), xc,
+        preferred_element_type=jnp.float32,
+    )  # (B,nc,H,P,N)
+
+    # Inter-chunk recurrence.
+    s0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(state, inputs):
+        cs, tot = inputs  # (B,H,P,N), (B,H)
+        out_prev = state
+        new = state * jnp.exp(tot)[:, :, None, None] + cs
+        return new, out_prev
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(total, 1, 0))
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,H,P,N) entering each chunk
+
+    decay_in = jnp.exp(jnp.clip(cum, -80.0, 0.0))  # (B,nc,Q,H)
+    y_inter = jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp", cc, decay_in.astype(cc.dtype),
+        prev_states.astype(cc.dtype),
+    )
+    y = (y_intra + y_inter).reshape(b, sc, h, p)[:, :s]
+    return y, final
+
+
+def mamba_apply(params, scfg: SSMConfig, d_model: int, x, cache=None,
+                mode: str = "train", compute_dtype=jnp.bfloat16):
+    """x: (B, S, d_model) -> (y, new_cache)."""
+    b, s, _ = x.shape
+    d_inner, n_heads, conv_dim = _dims(scfg, d_model)
+    z, xbc, dt_raw = _split_proj(params, scfg, d_model, x, compute_dtype)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+
+    if mode in ("train", "prefill"):
+        xbc_c, conv_state = _conv_parallel(params, xbc, None)
+        xh = xbc_c[..., :d_inner].reshape(b, s, n_heads, scfg.head_dim)
+        bmat = xbc_c[..., d_inner : d_inner + scfg.d_state]
+        cmat = xbc_c[..., d_inner + scfg.d_state:]
+        y, final_state = _ssd_chunked(
+            xh, dt, params["a_log"], bmat, cmat, scfg.chunk
+        )
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            new_cache = {"conv": conv_state.astype(cache["conv"].dtype),
+                         "ssm": final_state}
+    elif mode == "decode":
+        assert s == 1 and cache is not None
+        conv_hist = jnp.concatenate(
+            [cache["conv"].astype(xbc.dtype), xbc], axis=1
+        )  # (B, width, conv_dim)
+        w = params["conv_w"].astype(xbc.dtype)
+        xbc_c = jax.nn.silu(
+            jnp.einsum("bwc,wc->bc", conv_hist, w) + params["conv_b"].astype(xbc.dtype)
+        )[:, None, :]
+        xh = xbc_c[..., :d_inner].reshape(b, 1, n_heads, scfg.head_dim)
+        bmat = xbc_c[..., d_inner : d_inner + scfg.d_state]
+        cmat = xbc_c[..., d_inner + scfg.d_state:]
+        a = jnp.exp(dt[:, 0] * (-jnp.exp(params["a_log"]))[None, :])  # (B,H)
+        dbx = jnp.einsum(
+            "bn,bhp->bhpn", bmat[:, 0].astype(jnp.float32),
+            (xh[:, 0] * dt[:, 0, :, None]).astype(jnp.float32),
+        )
+        state = cache["ssm"] * a[:, :, None, None] + dbx
+        y = jnp.einsum("bhpn,bn->bhp", state, cmat[:, 0].astype(jnp.float32))
+        y = y[:, None].astype(compute_dtype).reshape(b, 1, n_heads, scfg.head_dim)
+        new_cache = {"conv": conv_hist[:, 1:].astype(cache["conv"].dtype),
+                     "ssm": state}
+    else:
+        raise ValueError(mode)
+
+    y = y + (xh * params["d_skip"][None, None, :, None].astype(xh.dtype))
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm_simple(y * jax.nn.silu(z), params["norm"])
+    return dense(y, params["w_out"], compute_dtype), new_cache

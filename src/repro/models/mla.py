@@ -1,0 +1,120 @@
+"""Multi-head Latent Attention (DeepSeek-V2), TPU-adapted.
+
+Prefill/train run the "naive" path (decompress K/V per head — one big
+matmul, MXU-friendly).  Decode runs the **absorbed** path: the up-projections
+W_uk / W_uv are folded into the query/output sides so attention works
+directly against the compressed ``ckv`` cache:
+
+    score(i, t) = q_nope_i · (W_uk ckv_t)  +  q_rope_i · k_rope_t
+                = (W_uk^T q_nope_i) · ckv_t + q_rope_i · k_rope_t
+
+so the KV cache is only ``kv_lora_rank + qk_rope_dim`` floats per token
+(576 for v2-lite vs 2 * 16 * 192 = 6144 uncompressed) — the paper-fidelity
+reason MLA exists, and the reason its long-context decode roofline is
+memory-light.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import AttentionConfig, ModelConfig
+from .attention import attend
+from .layers import apply_rope, dense, dense_init, rms_norm_simple
+
+
+def mla_init(key, acfg: AttentionConfig, d_model: int, dtype):
+    h = acfg.num_heads
+    r, nope, rope, vdim = (
+        acfg.kv_lora_rank, acfg.qk_nope_dim, acfg.qk_rope_dim, acfg.v_head_dim,
+    )
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], d_model, h * (nope + rope), dtype),
+        "w_dkv": dense_init(ks[1], d_model, r + rope, dtype),
+        "ckv_norm": jnp.zeros((r,), dtype),
+        "w_uk": dense_init(ks[2], r, h * nope, dtype),
+        "w_uv": dense_init(ks[3], r, h * vdim, dtype),
+        "wo": dense_init(ks[4], h * vdim, d_model, dtype),
+    }
+
+
+def make_mla_cache(acfg: AttentionConfig, batch: int, capacity: int, dtype):
+    return {
+        "ckv": jnp.zeros((batch, capacity, acfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, capacity, acfg.qk_rope_dim), dtype),
+    }
+
+
+def _project(params, acfg, x, positions, compute_dtype):
+    b, s, _ = x.shape
+    h = acfg.num_heads
+    nope, rope = acfg.qk_nope_dim, acfg.qk_rope_dim
+    q = dense(x, params["wq"], compute_dtype).reshape(b, s, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, acfg.rope_theta)
+    dkv = dense(x, params["w_dkv"], compute_dtype)
+    ckv = rms_norm_simple(dkv[..., : acfg.kv_lora_rank], params["ckv_norm"])
+    # Shared (MQA-style) rotary key: one per token, broadcast over heads.
+    kr = dkv[..., acfg.kv_lora_rank:]
+    kr = apply_rope(kr[:, :, None, :], positions, acfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, ckv, kr
+
+
+def mla_apply(params, acfg: AttentionConfig, mcfg: ModelConfig, x, positions,
+              cache=None, lengths=None, mode: str = "train"):
+    compute_dtype = jnp.dtype(mcfg.compute_dtype)
+    b, s, _ = x.shape
+    h = acfg.num_heads
+    r, nope, rope, vdim = (
+        acfg.kv_lora_rank, acfg.qk_nope_dim, acfg.qk_rope_dim, acfg.v_head_dim,
+    )
+    q_nope, q_rope, ckv, kr = _project(params, acfg, x, positions, compute_dtype)
+
+    if mode in ("train", "prefill"):
+        # Naive: decompress per-head K/V, run standard attention.
+        k_nope = dense(ckv, params["w_uk"], compute_dtype).reshape(b, s, h, nope)
+        v = dense(ckv, params["w_uv"], compute_dtype).reshape(b, s, h, vdim)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(kr[:, :, None, :], (b, s, h, rope))], axis=-1)
+        out = attend(q, k, v, positions, positions, mcfg=mcfg, acfg=acfg,
+                     compute_dtype=compute_dtype)
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            ckv_c = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, axis=1)
+            kr_c = jax.lax.dynamic_update_slice_in_dim(
+                cache["kr"], kr.astype(cache["kr"].dtype), 0, axis=1)
+            new_cache = {"ckv": ckv_c, "kr": kr_c}
+    elif mode == "decode":
+        assert s == 1 and cache is not None and lengths is not None
+        cap = cache["ckv"].shape[1]
+        bidx = jnp.arange(b)
+        slot = (lengths % cap).astype(jnp.int32)
+        ckv_c = cache["ckv"].at[bidx, slot].set(ckv[:, 0].astype(cache["ckv"].dtype))
+        kr_c = cache["kr"].at[bidx, slot].set(kr[:, 0].astype(cache["kr"].dtype))
+        # Absorb W_uk into the query side: q_c (b,1,h,r).
+        w_uk = params["w_uk"].astype(compute_dtype).reshape(r, h, nope)
+        q_c = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)
+        scores = (
+            jnp.einsum("bshr,btr->bhst", q_c, ckv_c.astype(compute_dtype),
+                       preferred_element_type=jnp.float32)
+            + jnp.einsum("bshp,btp->bhst", q_rope, kr_c.astype(compute_dtype),
+                         preferred_element_type=jnp.float32)
+        ) / np.sqrt(nope + rope)
+        idx = jnp.arange(cap)[None, :]
+        valid = idx < jnp.minimum(lengths + 1, cap)[:, None]
+        scores = jnp.where(valid[:, None, None, :], scores, -2.0e38)
+        probs = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
+        ctx_c = jnp.einsum("bhst,btr->bshr", probs, ckv_c.astype(compute_dtype))
+        # Absorb W_uv into the output side.
+        w_uv = params["w_uv"].astype(compute_dtype).reshape(r, h, vdim)
+        out = jnp.einsum("bshr,rhv->bshv", ctx_c, w_uv)
+        new_cache = {"ckv": ckv_c, "kr": kr_c}
+    else:
+        raise ValueError(mode)
+
+    out = out.reshape(b, s, h * vdim)
+    return dense(out, params["wo"], compute_dtype), new_cache

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts FFN: GShard-style top-k dispatch/combine einsums.
+
+TPU adaptation: expert routing is expressed as dense one-hot dispatch and
+combine einsums over (groups, group_size, experts, capacity) — no
+gather/scatter, so GSPMD shards it cleanly (experts over the ``model``
+axis = expert parallelism, groups over ``data``) and the collective
+schedule (all-to-all equivalents) is visible to the roofline.  Group size
+bounds the one-hot's memory: dispatch bytes ~= tokens * top_k * group_size
+* capacity_factor, so small groups (512 tokens) keep it ~GBs at 1M-token
+batches.
+
+Tokens above per-expert capacity C = ceil(top_k * group / experts * cf)
+are dropped (classic GShard semantics); the load-balance auxiliary loss
+keeps drops rare.  Aux losses (load-balance + router-z) are returned and
+summed across layers by the LM's scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import MoEConfig
+from .layers import dense, dense_init, mlp_apply, mlp_init
+
+
+def moe_init(key, mcfg: MoEConfig, d_model: int, dtype):
+    ks = jax.random.split(key, 5)
+    e, f = mcfg.num_experts, mcfg.expert_ffn_dim
+    std = 1.0 / np.sqrt(d_model)
+
+    def experts_w(k, shape, fan_in):
+        w = jax.random.truncated_normal(k, -3.0, 3.0, shape) / np.sqrt(fan_in)
+        return w.astype(dtype)
+
+    params = {
+        "router": dense_init(ks[0], d_model, e, dtype, scale=std),
+        "w_gate": experts_w(ks[1], (e, d_model, f), d_model),
+        "w_up": experts_w(ks[2], (e, d_model, f), d_model),
+        "w_down": experts_w(ks[3], (e, f, d_model), f),
+    }
+    if mcfg.num_shared_experts > 0:
+        shared_dim = mcfg.shared_ffn_dim or mcfg.expert_ffn_dim
+        params["shared"] = mlp_init(
+            ks[4], d_model, shared_dim * mcfg.num_shared_experts, dtype
+        )
+    return params
+
+
+def _capacity(mcfg: MoEConfig, group: int) -> int:
+    return max(1, int(np.ceil(mcfg.top_k * group / mcfg.num_experts * mcfg.capacity_factor)))
+
+
+def moe_apply(params, mcfg: MoEConfig, x, compute_dtype, activation: str = "silu"):
+    """x: (B, S, d). Returns (y, aux) with aux = {load_balance, router_z}."""
+    b, s, d = x.shape
+    tokens = b * s
+    group = min(mcfg.group_size, tokens)
+    n_groups = tokens // group
+    assert n_groups * group == tokens, (
+        f"tokens ({tokens}) must divide into groups of {group}"
+    )
+    e, c = mcfg.num_experts, _capacity(mcfg, group)
+    xg = x.reshape(n_groups, group, d)
+
+    logits = dense(xg, params["router"], compute_dtype).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (g, s, e)
+
+    # Sequential top-k slotting (GShard): earlier choices claim capacity first.
+    counts = jnp.zeros((n_groups, 1, e), jnp.float32)
+    dispatch = jnp.zeros((n_groups, group, e, c), compute_dtype)
+    combine = jnp.zeros((n_groups, group, e, c), jnp.float32)
+    remaining = probs
+    for _ in range(mcfg.top_k):
+        idx = jnp.argmax(remaining, axis=-1)                     # (g, s)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)
+        gate = (remaining * onehot).sum(-1)                      # (g, s)
+        remaining = remaining * (1.0 - onehot)
+        pos = jnp.cumsum(onehot, axis=1) - onehot + counts       # (g, s, e)
+        keep = (pos < c) * onehot
+        counts = counts + onehot.sum(axis=1, keepdims=True)
+        slot = jax.nn.one_hot(pos, c, dtype=jnp.float32) * keep[..., None]
+        dispatch = dispatch + slot.astype(compute_dtype)
+        combine = combine + slot * gate[..., None, None]
+
+    # Renormalize gates over the *selected* experts (standard for top-k > 1).
+    denom = jnp.maximum(combine.sum(axis=(2, 3), keepdims=True), 1e-9)
+    combine = (combine / denom).astype(compute_dtype)
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch, xg.astype(compute_dtype))
+    h = jax.nn.silu if activation == "silu" else jax.nn.gelu
+    hidden = h(jnp.einsum("egcd,edf->egcf", expert_in, params["w_gate"].astype(compute_dtype)))
+    hidden = hidden * jnp.einsum("egcd,edf->egcf", expert_in, params["w_up"].astype(compute_dtype))
+    expert_out = jnp.einsum("egcf,efd->egcd", hidden, params["w_down"].astype(compute_dtype))
+    y = jnp.einsum("gsec,egcd->gsd", combine, expert_out)
+
+    if "shared" in params:
+        y = y + mlp_apply(params["shared"], xg, compute_dtype, gated=True,
+                          activation=activation)
+
+    # Aux losses: Switch/GShard load balance + router z-loss.
+    frac_tokens = dispatch.astype(jnp.float32).sum(axis=(1, 3)) / (group * mcfg.top_k)
+    frac_probs = probs.mean(axis=1)                              # (g, e)
+    load_balance = e * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    router_z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    aux = {
+        "load_balance": mcfg.router_aux_weight * load_balance,
+        "router_z": mcfg.router_z_weight * router_z,
+    }
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,12 @@
+"""Optimizers + distributed-optimization utilities."""
+
+from .adamw import (  # noqa: F401
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    dequantize_block,
+    global_norm,
+    learning_rate,
+    quantize_block,
+)
+from .compress import compressed_allreduce_mean, make_compressed_psum  # noqa: F401

@@ -1,0 +1,151 @@
+"""Optimizers: AdamW and block-quantized 8-bit AdamW (for 400B-class models).
+
+Plain-pytree implementation (no external deps): optimizer state is a dict
+{"m": ..., "v": ..., "count": ...} mirroring the parameter tree, so it
+checkpoints/reshards with the same machinery as params.
+
+Quantized Adam ("adamw8bit") stores the first moment as int8 codes +
+per-block f32 absmax scales (blocks along the last axis) and the second
+moment in bf16.  m tolerates absolute (block-relative) error — it only
+steers direction; v sits under a square root in the denominator, so it
+needs *relative* precision at every magnitude (linear int8 zeroes small-v
+coords and their updates m/sqrt(v)+eps explode — measured cos(direction)
+0.3 vs 0.999 for this scheme).  ~3 bytes/param of optimizer state instead
+of 8: at 256 chips this is the difference between llama4-maverick fitting
+in 16 GB HBM or not (DESIGN.md §5).  Codes keep the parameter's shape, so
+sharding specs carry over unchanged; scales drop the last axis's sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import OptimizerConfig
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def learning_rate(cfg: OptimizerConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(cfg.warmup_steps, 1))
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    if cfg.schedule == "cosine":
+        decay = 0.5 * (1.0 + jnp.cos(np.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - frac
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# Block quantization (8-bit moments)
+# ---------------------------------------------------------------------------
+
+def quantize_block(x, block: int):
+    """int8 symmetric quantization along the last axis in blocks."""
+    *lead, last = x.shape
+    nb = -(-last // block)
+    pad = nb * block - last
+    xp = jnp.pad(x.astype(jnp.float32), [(0, 0)] * len(lead) + [(0, pad)])
+    xb = xp.reshape(*lead, nb, block)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0 + 1e-30
+    codes = jnp.round(xb / scale[..., None]).astype(jnp.int8)
+    codes = codes.reshape(*lead, nb * block)[..., :last]
+    return codes, scale.astype(jnp.float32)
+
+
+def dequantize_block(codes, scale, block: int):
+    *lead, last = codes.shape
+    nb = scale.shape[-1]
+    pad = nb * block - last
+    cp = jnp.pad(codes, [(0, 0)] * len(lead) + [(0, pad)])
+    xb = cp.reshape(*lead, nb, block).astype(jnp.float32) * scale[..., None]
+    return xb.reshape(*lead, nb * block)[..., :last]
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params, cfg: OptimizerConfig):
+    if cfg.name == "adamw8bit":
+        def init_leaf(p):
+            codes, scale = quantize_block(jnp.zeros_like(p, jnp.float32), cfg.quant_block)
+            return {"m_q": codes, "m_s": scale,
+                    "v": jnp.zeros(p.shape, jnp.bfloat16)}
+
+        moments = jax.tree.map(init_leaf, params)
+        return {"moments": moments, "count": jnp.zeros((), jnp.int32)}
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, opt_state, params, cfg: OptimizerConfig, step):
+    """Returns (new_params, new_opt_state, stats)."""
+    lr = learning_rate(cfg, step)
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.grad_clip_norm > 0:
+        grads, grad_norm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    else:
+        grad_norm = global_norm(grads)
+    count = opt_state["count"] + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    if cfg.name == "adamw8bit":
+        def upd(p, g, mo):
+            m = dequantize_block(mo["m_q"], mo["m_s"], cfg.quant_block)
+            v = mo["v"].astype(jnp.float32)
+            m = cfg.b1 * m + (1.0 - cfg.b1) * g
+            v = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+            upd = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            mq, ms = quantize_block(m, cfg.quant_block)
+            return new_p, {"m_q": mq, "m_s": ms, "v": v.astype(jnp.bfloat16)}
+
+        p_leaves, treedef = jax.tree.flatten(params)
+        g_leaves = treedef.flatten_up_to(grads)
+        mo_leaves = treedef.flatten_up_to(opt_state["moments"])
+        results = [upd(p, g, mo) for p, g, mo in zip(p_leaves, g_leaves, mo_leaves)]
+        new_params = jax.tree.unflatten(treedef, [r[0] for r in results])
+        new_moments = jax.tree.unflatten(treedef, [r[1] for r in results])
+        new_state = {"moments": new_moments, "count": count}
+    else:
+        def upd(p, g, m, v):
+            m = cfg.b1 * m + (1.0 - cfg.b1) * g
+            v = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        flat = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_params, new_state, {"grad_norm": grad_norm, "lr": lr}

@@ -1,0 +1,88 @@
+"""Error-feedback int8 gradient all-reduce (bandwidth-compressed DP sync).
+
+Classic two-phase compressed all-reduce (QSGD/1-bit-Adam lineage), written
+with ``shard_map`` + explicit collectives so the wire format really is int8:
+
+  1. each worker quantizes its local gradient (blockwise int8 + f32 scales),
+     keeping the quantization error as local *error feedback* added to the
+     next step's gradient (unbiased in the long run);
+  2. ``all_to_all`` exchanges int8 shards (each worker receives its 1/W
+     slice from everyone)  -> wire bytes = N int8;
+  3. workers dequantize + sum their slice in f32, requantize the reduced
+     slice, and ``all_gather`` it (wire bytes = N int8 again).
+
+Total wire traffic ~ 2N bytes vs ~8N for an f32 ring all-reduce (4x),
+at the cost of one extra quantization error absorbed by error feedback.
+A cheaper always-safe option is bf16 reduction (2x), exposed via
+``OptimizerConfig.grad_reduce_dtype`` in the main train step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import dequantize_block, quantize_block
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def compressed_allreduce_mean(grad_flat, error, axis_name: str, world: int,
+                              block: int = 256):
+    """Mean-all-reduce a flat f32 vector in int8 wire format (inside shard_map).
+
+    Args:
+      grad_flat: (N,) f32 local gradient (same N on every worker).
+      error:     (N,) f32 error-feedback carry.
+    Returns (mean_grad (N,), new_error (N,)).
+    """
+    n = grad_flat.shape[0]
+    comp = grad_flat + error
+    n_pad = _ceil_to(_ceil_to(n, block), world * block)
+    comp_p = jnp.pad(comp, (0, n_pad - n))
+
+    codes, scales = quantize_block(comp_p[None, :], block)      # (1, n_pad), (1, nb)
+    deq_local = dequantize_block(codes, scales, block)[0]
+    new_error = comp_p - deq_local                               # local EF residual
+
+    shard = n_pad // world
+    # Phase 1: all_to_all int8 codes (+ f32 scales for the matching blocks).
+    codes_w = codes[0].reshape(world, shard)
+    scales_w = scales[0].reshape(world, shard // block)
+    codes_x = jax.lax.all_to_all(codes_w, axis_name, 0, 0, tiled=False)
+    scales_x = jax.lax.all_to_all(scales_w, axis_name, 0, 0, tiled=False)
+    # Phase 2: local dequant-sum of my slice across all workers.
+    contrib = dequantize_block(codes_x, scales_x, block)         # (world, shard) f32
+    reduced = contrib.sum(axis=0) / world
+    # Phase 3: requantize reduced slice, all_gather int8.
+    r_codes, r_scales = quantize_block(reduced[None, :], block)
+    g_codes = jax.lax.all_gather(r_codes[0], axis_name)          # (world, shard) int8
+    g_scales = jax.lax.all_gather(r_scales[0], axis_name)
+    mean_full = dequantize_block(g_codes, g_scales, block).reshape(n_pad)
+    return mean_full[:n], new_error[:n]
+
+
+def make_compressed_psum(mesh, axis_name: str = "data", block: int = 256):
+    """shard_map-wrapped compressed mean-all-reduce over one mesh axis.
+
+    Operates on replicated flat vectors (demo/testing entry point; the
+    production train step reaches the same effect via
+    ``grad_reduce_dtype='bfloat16'`` which XLA lowers natively).
+    """
+    world = mesh.shape[axis_name]
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    @jax.jit
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+        check_rep=False,
+    )
+    def reduce_fn(grad_flat, error):
+        return compressed_allreduce_mean(grad_flat, error, axis_name, world, block)
+
+    return reduce_fn

@@ -1,0 +1,2 @@
+from .elastic import MeshPlan, plan_mesh, reshard_state, state_shardings  # noqa: F401
+from .health import FailureInjector, HeartbeatMonitor, WorkerStatus  # noqa: F401

@@ -1,0 +1,71 @@
+"""Elastic scaling: pick a new mesh for a changed device count and reshard.
+
+When workers die (or capacity is added), training restarts from the latest
+committed checkpoint on a new mesh.  ``plan_mesh`` chooses the largest
+usable device count and a (data, model) factorization that preserves the
+model-parallel degree when possible (TP degree is a property of the model
+fit, DP absorbs elasticity).  ``reshard_state`` re-places a host checkpoint
+under the new mesh's shardings; the data pipeline re-shards by giving each
+of the new DP ranks a fresh disjoint substream from the restored cursor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh
+
+from ..distributed import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+    dropped_devices: int
+
+    def build(self, devices=None) -> Mesh:
+        devs = devices if devices is not None else jax.devices()
+        n = 1
+        for s in self.shape:
+            n *= s
+        return jax.make_mesh(self.shape, self.axis_names,
+                             devices=devs[:n])
+
+
+def plan_mesh(n_devices: int, prefer_model: int = 16,
+              multi_pod_threshold: int = 512) -> MeshPlan:
+    """Largest power-of-two (data, model) grid within n_devices.
+
+    TP degree is preserved at ``prefer_model`` whenever enough devices
+    remain (model fit is a hard constraint; DP absorbs elasticity);
+    stragglers beyond the power-of-two grid are dropped (kept warm as
+    spares in a real deployment).
+    """
+    usable = 1
+    while usable * 2 <= n_devices:
+        usable *= 2
+    model = min(prefer_model, usable)
+    data = usable // model
+    if usable >= multi_pod_threshold and data % 2 == 0:
+        return MeshPlan((2, data // 2, model), ("pod", "data", "model"),
+                        n_devices - usable)
+    return MeshPlan((data, model), ("data", "model"), n_devices - usable)
+
+
+def state_shardings(state_shapes, mesh: Mesh):
+    """NamedShardings for a {"params","opt","step"} train-state tree."""
+    from jax.sharding import PartitionSpec as P
+
+    p_specs = shd.param_specs(state_shapes["params"], mesh)
+    o_specs = shd.opt_specs(state_shapes["opt"], p_specs, mesh)
+    specs = {"params": p_specs, "opt": o_specs, "step": P()}
+    return shd.named(specs, mesh)
+
+
+def reshard_state(host_state, state_shapes, new_mesh: Mesh):
+    """Place a host (numpy) checkpointed train state onto a new mesh."""
+    shardings = state_shardings(state_shapes, new_mesh)
+    return jax.tree.map(lambda leaf, sh: jax.device_put(leaf, sh),
+                        host_state, shardings)

@@ -1,0 +1,86 @@
+"""Worker health: heartbeats, straggler detection, failure injection.
+
+At 1000+ nodes the control plane must (a) notice dead workers fast
+(heartbeat timeouts), (b) notice *slow* workers before they stall the
+synchronous step (straggler z-scores over a sliding window), and (c) be
+testable without real failures (injector).  This module is pure host-side
+bookkeeping — the training loop feeds it wall-clock step times.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import statistics
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class WorkerStatus:
+    alive: bool
+    last_seen: float
+    mean_step_s: float
+    is_straggler: bool
+
+
+class HeartbeatMonitor:
+    def __init__(self, n_workers: int, timeout_s: float = 60.0,
+                 window: int = 16, straggler_factor: float = 2.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.n = n_workers
+        self.timeout_s = timeout_s
+        self.factor = straggler_factor
+        self.clock = clock
+        self.last_seen = [clock()] * n_workers
+        self.steps: list[collections.deque] = [
+            collections.deque(maxlen=window) for _ in range(n_workers)
+        ]
+
+    def beat(self, worker: int, step_time_s: float) -> None:
+        self.last_seen[worker] = self.clock()
+        self.steps[worker].append(step_time_s)
+
+    def _medians(self) -> list[float]:
+        return [statistics.median(s) if s else 0.0 for s in self.steps]
+
+    def dead_workers(self) -> list[int]:
+        now = self.clock()
+        return [w for w in range(self.n)
+                if now - self.last_seen[w] > self.timeout_s]
+
+    def stragglers(self) -> list[int]:
+        """Workers whose median step time exceeds factor x fleet median."""
+        meds = self._medians()
+        have = [m for m in meds if m > 0]
+        if len(have) < max(2, self.n // 2):
+            return []
+        fleet = statistics.median(have)
+        if fleet <= 0:
+            return []
+        return [w for w, m in enumerate(meds) if m > self.factor * fleet]
+
+    def status(self) -> list[WorkerStatus]:
+        meds = self._medians()
+        dead = set(self.dead_workers())
+        strag = set(self.stragglers())
+        return [
+            WorkerStatus(
+                alive=w not in dead, last_seen=self.last_seen[w],
+                mean_step_s=meds[w], is_straggler=w in strag,
+            )
+            for w in range(self.n)
+        ]
+
+
+class FailureInjector:
+    """Deterministic fault schedule for tests/examples.
+
+    events: {step: ("kill"| "slow", worker_id)}
+    """
+
+    def __init__(self, events: dict[int, tuple[str, int]]):
+        self.events = dict(events)
+
+    def at(self, step: int) -> tuple[str, int] | None:
+        return self.events.get(step)

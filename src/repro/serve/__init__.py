@@ -1,0 +1,1 @@
+from .engine import ServingEngine, decode_one, prefill_step  # noqa: F401

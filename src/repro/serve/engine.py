@@ -1,0 +1,170 @@
+"""Serving engine: continuous batching over a slot-based KV cache.
+
+Design (vLLM-style, TPU-adapted):
+  * a fixed ``(max_batch, max_len)`` cache pytree lives on device; requests
+    occupy slots; admission = bucket-padded prefill written into the slot;
+  * one jitted decode step advances *all* active slots each tick (inactive
+    slots run too — their logits are discarded; on TPU a fixed-shape step
+    beats reshape/recompile);
+  * bucket-padded prefill is exact: junk cache entries beyond the true
+    prompt length sit at positions >= lengths and are masked by validity,
+    and the first generated token overwrites slot ``lengths``.
+
+The engine is also the substrate for the serve-shape dry-run cells
+(prefill_32k / decode_32k / long_500k lower these step functions).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import lm
+
+
+def prefill_step(params, cfg: ModelConfig, tokens, cache, embeds=None):
+    """Left-aligned prompt prefill. Returns (last_logits, cache)."""
+    logits, new_cache = lm.prefill(
+        params, cfg, tokens=tokens, embeds=embeds, cache=cache
+    )
+    return logits, new_cache
+
+
+def decode_one(params, cfg: ModelConfig, tokens, cache, lengths):
+    return lm.decode_step(params, cfg, tokens, cache, lengths)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    output: list[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig, max_batch: int, max_len: int,
+                 eos_id: int | None = None, temperature: float = 0.0,
+                 seed: int = 0, cache_dtype=jnp.bfloat16):
+        self.params = params
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.cache = lm.init_cache(cfg, max_batch, max_len, cache_dtype)
+        self.lengths = jnp.zeros((max_batch,), jnp.int32)
+        self.last_tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        self.slots: list[Request | None] = [None] * max_batch
+        self.queue: list[Request] = []
+        self.finished: dict[int, Request] = {}
+        self._next_rid = 0
+        self._decode = jax.jit(
+            lambda p, t, c, l: decode_one(p, cfg, t, c, l)
+        )
+        self._prefill_cache: dict[int, Callable] = {}
+        # SSM state integrates *every* prefill token, so bucket padding would
+        # pollute it (attention masks junk via `lengths`; recurrences can't).
+        self._exact_prefill = any(
+            b.kind == "mamba" for st in cfg.stages for b in st.blocks
+        )
+
+    # ------------------------------------------------------------------ API
+    def submit(self, prompt: list[int], max_new_tokens: int = 32) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, list(prompt), max_new_tokens))
+        return rid
+
+    def run(self, max_steps: int = 10_000) -> dict[int, list[int]]:
+        steps = 0
+        while (self.queue or any(self.slots)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return {rid: r.output for rid, r in self.finished.items()}
+
+    # ----------------------------------------------------------------- loop
+    def step(self) -> None:
+        self._admit()
+        if any(self.slots):
+            self._decode_tick()
+
+    def _bucket(self, n: int) -> int:
+        if self._exact_prefill:
+            return n
+        b = 16
+        while b < n:
+            b *= 2
+        return min(b, self.max_len)
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefill_cache:
+            cfg = self.cfg
+            self._prefill_cache[bucket] = jax.jit(
+                lambda p, t, c: prefill_step(p, cfg, t, c)
+            )
+        return self._prefill_cache[bucket]
+
+    def _admit(self) -> None:
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            n = len(req.prompt)
+            bucket = self._bucket(n)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :n] = req.prompt
+            one_cache = lm.init_cache(self.cfg, 1, self.max_len,
+                                      jax.tree.leaves(self.cache)[0].dtype)
+            logits, one_cache = self._prefill_fn(bucket)(
+                self.params, jnp.asarray(toks), one_cache
+            )
+            # Write the single-request cache into the batched slot (batch is
+            # axis 1 of every stacked cache leaf).
+            self.cache = jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, axis=1
+                ),
+                self.cache, one_cache,
+            )
+            first = self._sample(logits[:, n - 1])
+            self.lengths = self.lengths.at[slot].set(n)
+            self.last_tokens = self.last_tokens.at[slot, 0].set(first[0])
+            req.slot = slot
+            req.output.append(int(first[0]))
+            self.slots[slot] = req
+
+    def _decode_tick(self) -> None:
+        logits, self.cache = self._decode(
+            self.params, self.last_tokens, self.cache, self.lengths
+        )
+        next_tokens = self._sample(logits[:, 0])
+        self.lengths = self.lengths + jnp.asarray(
+            [1 if r is not None else 0 for r in self.slots], jnp.int32
+        )
+        self.last_tokens = next_tokens[:, None]
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(next_tokens[slot])
+            req.output.append(tok)
+            hit_eos = self.eos_id is not None and tok == self.eos_id
+            full = int(self.lengths[slot]) + 1 >= self.max_len
+            if len(req.output) >= req.max_new_tokens or hit_eos or full:
+                req.done = True
+                self.finished[req.rid] = req
+                self.slots[slot] = None
+
+    def _sample(self, logits):
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / self.temperature).astype(jnp.int32)

@@ -1,0 +1,7 @@
+from .step import (  # noqa: F401
+    abstract_state,
+    cross_entropy,
+    init_state,
+    make_loss_fn,
+    make_train_step,
+)

@@ -1,0 +1,7 @@
+from .manager import (  # noqa: F401
+    CheckpointReplicator,
+    Datacenter,
+    ManagedTransfer,
+    Topology,
+    TransferManager,
+)

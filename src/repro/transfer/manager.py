@@ -1,0 +1,245 @@
+"""Inter-datacenter transfer management: LinTS as a first-class service.
+
+This is the paper's deployment story inside the training framework: the
+checkpoint manager's commit hook enqueues replication transfers (size =
+actual checkpoint bytes, deadline = replication SLA); the TransferManager
+plans them with LinTS against per-zone carbon forecasts and executes the
+plan slot-by-slot on a simulated WAN, charging emissions on the *actual*
+(noisy) trace and tracking SLA compliance.
+
+Beyond-paper: reactive replanning — §IV-C notes congestion can break plans
+and leaves replanning to future work; we implement it (``replan_on_drift``):
+when executed progress falls behind plan by more than ``drift_tol``, the
+remaining bytes are rescheduled over the remaining horizon.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Sequence
+
+import numpy as np
+
+from ..core import lints
+from ..core.plan import InfeasibleError
+from ..core.power import DEFAULT_POWER_MODEL, GBPS, PowerModel
+from ..core.problem import TransferRequest, build_problem
+from ..core.simulator import JOULES_PER_KWH
+from ..core.trace import TraceSet
+
+
+@dataclasses.dataclass(frozen=True)
+class Datacenter:
+    name: str
+    zone: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    datacenters: tuple[Datacenter, ...]
+    # (src, dst) -> tuple of zones traversed (src zone ... dst zone)
+    routes: dict[tuple[str, str], tuple[str, ...]]
+
+    def path(self, src: str, dst: str) -> tuple[str, ...]:
+        try:
+            return self.routes[(src, dst)]
+        except KeyError:
+            raise KeyError(f"no route {src} -> {dst}") from None
+
+
+@dataclasses.dataclass
+class ManagedTransfer:
+    request_id: str
+    size_gb: float
+    path: tuple[str, ...]
+    deadline_slot: int       # absolute slot index
+    submitted_slot: int
+    remaining_bits: float
+    done_slot: int | None = None
+    emissions_g: float = 0.0
+    violated: bool = False
+
+
+class TransferManager:
+    def __init__(
+        self,
+        topology: Topology,
+        forecast: TraceSet,
+        actual: TraceSet | None = None,
+        capacity_gbps: float = 1.0,
+        power: PowerModel = DEFAULT_POWER_MODEL,
+        config: lints.LinTSConfig = lints.LinTSConfig(),
+        replan_on_drift: bool = True,
+        drift_tol: float = 0.10,
+    ):
+        self.topology = topology
+        self.forecast = forecast
+        self.actual = actual or forecast
+        self.capacity_gbps = capacity_gbps
+        self.power = power
+        self.config = config
+        self.replan_on_drift = replan_on_drift
+        self.drift_tol = drift_tol
+        self.slot = 0
+        self.transfers: dict[str, ManagedTransfer] = {}
+        self._plan_rho: dict[str, np.ndarray] = {}   # rid -> (n_slots,) bps
+        self._plan_last_slot: dict[str, int] = {}
+        self._ids = itertools.count()
+        self._needs_plan = False
+
+    def capacity_bps_free(self, j: int) -> float:
+        """Unplanned capacity at slot j (for best-effort tail completion)."""
+        used = sum(
+            float(r[j]) for r in self._plan_rho.values()
+            if j < len(r)
+        )
+        return max(0.0, self.capacity_gbps * GBPS - used)
+
+    # ------------------------------------------------------------------ API
+    def enqueue(self, size_gb: float, src: str, dst: str,
+                deadline_slots: int, request_id: str | None = None) -> str:
+        rid = request_id or f"xfer-{next(self._ids):05d}"
+        deadline = min(self.slot + deadline_slots, self.forecast.n_slots)
+        if deadline <= self.slot:
+            raise ValueError("deadline beyond trace horizon or non-positive")
+        self.transfers[rid] = ManagedTransfer(
+            request_id=rid, size_gb=size_gb,
+            path=self.topology.path(src, dst), deadline_slot=deadline,
+            submitted_slot=self.slot,
+            remaining_bits=size_gb * 8.0e9,
+        )
+        self._needs_plan = True
+        return rid
+
+    def pending(self) -> list[ManagedTransfer]:
+        return [t for t in self.transfers.values() if t.done_slot is None]
+
+    # ----------------------------------------------------------------- plan
+    def replan(self) -> None:
+        # Transfers already past their deadline stay violated; replanning
+        # only covers those that can still meet their SLA.
+        live = [t for t in self.pending()
+                if t.remaining_bits > 1.0 and t.deadline_slot > self.slot]
+        self._plan_rho = {}
+        self._needs_plan = False
+        if not live:
+            return
+        reqs = [
+            TransferRequest(
+                size_gb=t.remaining_bits / 8.0e9,
+                deadline_slots=t.deadline_slot,
+                offset_slots=self.slot,
+                path=t.path,
+                request_id=t.request_id,
+            )
+            for t in live
+        ]
+        problem = build_problem(reqs, self.forecast, self.capacity_gbps,
+                                self.power)
+        plan = lints.solve(problem, self.config)
+        self._plan_last_slot = {}
+        for i, t in enumerate(live):
+            self._plan_rho[t.request_id] = plan.rho_bps[i]
+            nz = np.flatnonzero(plan.rho_bps[i])
+            self._plan_last_slot[t.request_id] = int(nz[-1]) if nz.size else -1
+
+    # ----------------------------------------------------------------- tick
+    def tick(self, congestion: float = 1.0) -> None:
+        """Advance one slot; execute the plan under a congestion factor."""
+        if self._needs_plan:
+            self.replan()
+        dt = self.forecast.slot_seconds
+        j = self.slot
+        drifted = False
+        for t in self.pending():
+            planned = self._plan_rho.get(t.request_id)
+            rho = (
+                float(planned[j])
+                if planned is not None and j < self.forecast.n_slots
+                else 0.0
+            )
+            past_plan = j > self._plan_last_slot.get(t.request_id, -1)
+            if rho <= 0.0 and past_plan and t.remaining_bits > 1.0 \
+                    and j < t.deadline_slot:
+                # Congestion left residual bits beyond the planned slots.
+                substantial = t.remaining_bits > self.drift_tol * t.size_gb * 8e9
+                if self.replan_on_drift and substantial and congestion >= 0.7:
+                    drifted = True   # re-optimize the tail for carbon
+                    continue
+                # Slivers (or congested links) finish best-effort at full
+                # rate: replanning them costs ~P_min per extra active slot.
+                rho = min(self.power.rate_cap_gbps(self.capacity_gbps) * GBPS,
+                          self.capacity_bps_free(j))
+            if rho <= 0.0:
+                if j >= t.deadline_slot and t.remaining_bits > 1.0:
+                    t.violated = True
+                continue
+            achieved = rho * congestion
+            moved = min(achieved * dt, t.remaining_bits)
+            # Emissions: threads for the *achieved* throughput, actual trace.
+            theta = float(self.power.threads(achieved / GBPS,
+                                             self.capacity_gbps))
+            p_w = float(self.power.power_w(np.float64(theta)))
+            ci = float(self.actual.path_intensity(t.path)[j])
+            t.emissions_g += p_w * dt / JOULES_PER_KWH * ci
+            t.remaining_bits -= moved
+            if t.remaining_bits <= 1.0:
+                t.done_slot = j
+            elif achieved < rho * (1.0 - self.drift_tol):
+                drifted = True
+        self.slot += 1
+        # Replan only once the link has (mostly) recovered: during a uniform
+        # congestion incident shifting work to other still-congested slots
+        # just adds P_min-hours — grind through, then re-optimize the tail
+        # (this is §IV-C's "monitoring service" in minimal form).
+        if drifted and self.replan_on_drift and congestion >= 0.7:
+            try:
+                self.replan()
+            except InfeasibleError:
+                pass  # keep executing the stale plan; SLA tracking will flag
+        for t in self.pending():
+            if self.slot >= t.deadline_slot and t.remaining_bits > 1.0:
+                t.violated = True
+
+    def run_until_idle(self, max_slots: int | None = None,
+                       congestion_fn=None) -> None:
+        limit = max_slots or self.forecast.n_slots
+        while self.pending() and self.slot < limit:
+            c = congestion_fn(self.slot) if congestion_fn else 1.0
+            self.tick(congestion=c)
+
+    # --------------------------------------------------------------- report
+    def report(self) -> dict:
+        done = [t for t in self.transfers.values() if t.done_slot is not None]
+        return {
+            "total_emissions_kg": sum(t.emissions_g for t in self.transfers.values()) / 1000.0,
+            "completed": len(done),
+            "pending": len(self.pending()),
+            "sla_violations": sum(t.violated for t in self.transfers.values()),
+            "mean_completion_slots": (
+                float(np.mean([t.done_slot - t.submitted_slot for t in done]))
+                if done else float("nan")
+            ),
+        }
+
+
+class CheckpointReplicator:
+    """Glue: checkpoint commits -> carbon-aware replication transfers."""
+
+    def __init__(self, manager: TransferManager, src_dc: str,
+                 replica_dcs: Sequence[str], deadline_slots: int = 96):
+        self.manager = manager
+        self.src = src_dc
+        self.replicas = tuple(replica_dcs)
+        self.deadline_slots = deadline_slots
+        self.requests: list[str] = []
+
+    def __call__(self, step: int, nbytes: int) -> None:
+        for dst in self.replicas:
+            rid = self.manager.enqueue(
+                size_gb=nbytes / 1e9, src=self.src, dst=dst,
+                deadline_slots=self.deadline_slots,
+                request_id=f"ckpt-{step:08d}-{dst}",
+            )
+            self.requests.append(rid)

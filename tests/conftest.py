@@ -1,0 +1,48 @@
+"""Shared fixtures. NOTE: no XLA device-count flags here — smoke tests and
+benches must see the real (1-device) topology; only launch/dryrun.py forces
+512 placeholder devices, in its own process."""
+
+import numpy as np
+import pytest
+
+from repro.core import lints, problem, trace
+
+
+@pytest.fixture(scope="session")
+def paper_traces():
+    return trace.make_trace_set(("US-NM", "US-WY", "US-SD"), hours=72, seed=0)
+
+
+@pytest.fixture(scope="session")
+def small_problem(paper_traces):
+    reqs = problem.paper_workload(n_jobs=24, seed=3)
+    return lints.build(reqs, paper_traces, capacity_gbps=0.5)
+
+
+def random_problem(rng: np.random.Generator, n_jobs=None, n_slots=None,
+                   capacity_gbps=None):
+    """Random feasible-ish scheduling problem for property tests."""
+    n_jobs = n_jobs or int(rng.integers(1, 12))
+    n_slots = n_slots or int(rng.integers(16, 64))
+    capacity_gbps = capacity_gbps or float(rng.uniform(0.2, 1.0))
+    zones = ("US-NM", "US-WY", "US-SD")
+    traces = trace.TraceSet(
+        slot_seconds=900.0,
+        zone_slots={
+            z: np.clip(
+                rng.normal(400, 150, size=n_slots), 20.0, None
+            ) for z in zones
+        },
+    )
+    # Keep total demand under ~50% of aggregate capacity for feasibility.
+    budget_gb = 0.5 * capacity_gbps * 1e9 * 900.0 * n_slots / 8e9
+    sizes = rng.uniform(0.2, max(0.4, budget_gb / n_jobs), size=n_jobs)
+    reqs = []
+    for i in range(n_jobs):
+        deadline = int(rng.integers(max(2, n_slots // 2), n_slots + 1))
+        offset = int(rng.integers(0, max(1, deadline - 2)))
+        reqs.append(problem.TransferRequest(
+            size_gb=float(sizes[i]), deadline_slots=deadline,
+            offset_slots=offset, path=zones, request_id=f"r{i}",
+        ))
+    return lints.build(reqs, traces, capacity_gbps)

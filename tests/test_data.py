@@ -1,0 +1,80 @@
+"""Data pipeline: determinism, resume, shard disjointness, memmap corpus."""
+
+import numpy as np
+import pytest
+
+from repro.data import SyntheticTokens, TokenFile
+
+
+def test_deterministic_across_instances():
+    a = SyntheticTokens(100, 16, 4, seed=1)
+    b = SyntheticTokens(100, 16, 4, seed=1)
+    for _ in range(3):
+        ba, bb = a.next_batch(), b.next_batch()
+        np.testing.assert_array_equal(ba["tokens"], bb["tokens"])
+        np.testing.assert_array_equal(ba["labels"], bb["labels"])
+
+
+def test_resume_from_state():
+    a = SyntheticTokens(100, 16, 4, seed=2)
+    a.next_batch(); a.next_batch()
+    state = a.get_state()
+    want = a.next_batch()
+
+    b = SyntheticTokens(100, 16, 4, seed=2)
+    b.set_state(state)
+    got = b.next_batch()
+    np.testing.assert_array_equal(want["tokens"], got["tokens"])
+
+
+def test_shards_disjoint_and_sized():
+    shards = [
+        SyntheticTokens(100, 16, 8, shard_index=i, shard_count=2, seed=3)
+        for i in range(2)
+    ]
+    b0, b1 = shards[0].next_batch(), shards[1].next_batch()
+    assert b0["tokens"].shape == (4, 16)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_labels_shifted_by_one():
+    src = SyntheticTokens(100, 16, 2, seed=4)
+    b = src.next_batch()
+    # labels[t] is the next token after tokens[t] within the same sequence:
+    # verify via regenerating (tokens[1:] == labels[:-1]).
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_markov_structure_learnable():
+    """Consecutive-token mutual structure >> uniform (so training can show
+    loss going down)."""
+    src = SyntheticTokens(64, 256, 2, seed=5)
+    b = src.next_batch()
+    toks, labs = b["tokens"], b["labels"]
+    diffs = (labs - toks) % 64
+    # The shift alphabet has 64 values but transitions are deterministic
+    # 90% of the time -> diff entropy must be far below log2(64).
+    _, counts = np.unique(diffs, return_counts=True)
+    p = counts / counts.sum()
+    entropy = -(p * np.log2(p)).sum()
+    assert entropy < 5.7
+
+
+def test_token_file_roundtrip(tmp_path):
+    path = str(tmp_path / "corpus.bin")
+    data = np.arange(9 * 17, dtype=np.int32)
+    TokenFile.write(path, data)
+    tf = TokenFile(path, seq_len=16, global_batch=2)
+    b = tf.next_batch()
+    assert b["tokens"].shape == (2, 16)
+    np.testing.assert_array_equal(b["tokens"][0], data[:16])
+    np.testing.assert_array_equal(b["labels"][0], data[1:17])
+
+
+def test_token_file_shards(tmp_path):
+    path = str(tmp_path / "corpus.bin")
+    TokenFile.write(path, np.arange(4 * 17, dtype=np.int32))
+    s0 = TokenFile(path, 16, 2, shard_index=0, shard_count=2)
+    s1 = TokenFile(path, 16, 2, shard_index=1, shard_count=2)
+    b0, b1 = s0.next_batch(), s1.next_batch()
+    assert not np.array_equal(b0["tokens"], b1["tokens"])

@@ -1,0 +1,107 @@
+"""LP solver correctness: SciPy backend (paper-faithful) vs JAX PDHG (ours).
+
+The PDHG solver is validated against the HiGHS oracle: same objective
+(within tolerance), feasible plans, on both the paper's workload shape and
+random problems.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_problem
+from repro.core import lints
+from repro.core.feasibility import check_plan, workload_feasible
+from repro.core.pdhg import PDHGConfig, normalize_problem, pdhg_solve, solve_pdhg, vertex_round
+from repro.core.scipy_backend import solve_scipy
+
+PD_CFG = PDHGConfig(max_iters=30_000, check_every=200, tol=2e-5)
+
+
+def test_scipy_plan_feasible(small_problem):
+    plan = solve_scipy(small_problem)
+    report = check_plan(small_problem, plan.rho_bps)
+    assert report.feasible, report
+    assert plan.meta["n_variables"] == small_problem.dim_rho()
+
+
+def test_pdhg_matches_scipy_objective(small_problem):
+    ref = solve_scipy(small_problem)
+    got = solve_pdhg(small_problem, PD_CFG)
+    assert check_plan(small_problem, got.rho_bps).feasible
+    assert got.meta["objective"] <= ref.meta["objective"] * 1.005 + 1e-9
+
+
+def test_vertex_round_keeps_feasibility_and_objective(small_problem):
+    raw = solve_pdhg(small_problem, PD_CFG)
+    rounded = vertex_round(small_problem, raw)
+    assert check_plan(small_problem, rounded.rho_bps).feasible
+    ref = solve_scipy(small_problem)
+    assert rounded.meta["objective_rounded"] <= ref.meta["objective"] * 1.02
+    # Rounding concentrates: no more active cells than before.
+    assert (rounded.rho_bps > 0).sum() <= (raw.rho_bps > 0).sum()
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_pdhg_feasible_and_near_optimal_random(seed):
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng)
+    ok, _ = workload_feasible(prob)
+    if not ok:
+        return  # generator aims for feasible; skip rare infeasible draws
+    ref = solve_scipy(prob)
+    got = solve_pdhg(prob, PD_CFG)
+    assert check_plan(prob, got.rho_bps).feasible
+    rel = (got.meta["objective"] - ref.meta["objective"]) / max(
+        abs(ref.meta["objective"]), 1e-9
+    )
+    assert rel <= 0.01
+
+
+def test_pdhg_kernel_path_matches_jnp_path(small_problem):
+    cfg_k = PDHGConfig(max_iters=4000, check_every=200, use_kernel=True)
+    cfg_j = PDHGConfig(max_iters=4000, check_every=200, use_kernel=False)
+    a = solve_pdhg(small_problem, cfg_k)
+    b = solve_pdhg(small_problem, cfg_j)
+    assert a.meta["objective"] == pytest.approx(b.meta["objective"], rel=1e-3)
+
+
+def test_lints_api_backends_agree(small_problem):
+    sp = lints.solve(small_problem, lints.LinTSConfig(backend="scipy"))
+    pd = lints.solve(small_problem, lints.LinTSConfig(backend="pdhg", pdhg=PD_CFG))
+    assert pd.objective(small_problem) <= sp.objective(small_problem) * 1.02
+
+
+def test_infeasible_workload_raises(paper_traces):
+    from repro.core.problem import TransferRequest
+
+    reqs = [TransferRequest(size_gb=1e6, deadline_slots=4,
+                            path=("US-NM",), request_id="huge")]
+    prob = lints.build(reqs, paper_traces, capacity_gbps=0.25)
+    with pytest.raises(lints.InfeasibleError):
+        lints.solve(prob)
+
+
+def test_batched_pdhg_solves_multiple_problems(paper_traces):
+    from repro.core import problem as prob_mod
+    from repro.core.pdhg import pdhg_solve_batch
+    import jax.numpy as jnp
+
+    probs = [
+        lints.build(prob_mod.paper_workload(n_jobs=6, seed=s), paper_traces, 0.5)
+        for s in range(3)
+    ]
+    tensors = [normalize_problem(p) for p in probs]
+    c = jnp.stack([t[0] for t in tensors])
+    ub = jnp.stack([t[1] for t in tensors])
+    br = jnp.stack([t[2] for t in tensors])
+    bc = jnp.stack([t[3] for t in tensors])
+    xs, _ = pdhg_solve_batch(c, ub, br, bc, max_iters=20_000)
+    for i, p in enumerate(probs):
+        rho = np.asarray(xs[i], np.float64) * p.rate_cap_bps
+        from repro.core.feasibility import repair_plan
+        rho = repair_plan(p, rho)
+        ref = solve_scipy(p)
+        got_obj = float((p.cost * rho).sum())
+        assert got_obj <= ref.meta["objective"] * 1.02

@@ -1,0 +1,115 @@
+"""Per-arch smoke tests (assignment requirement): a REDUCED config of each
+family runs one forward + one train step on CPU, asserting output shapes and
+no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import OptimizerConfig, TrainConfig, registry
+from repro.models import lm
+from repro.train import init_state, make_train_step
+
+ARCHS = registry.list_archs()
+
+
+def _batch(cfg, key, b=2, s=32):
+    kt, ke = jax.random.split(key)
+    batch = {"labels": jax.random.randint(kt, (b, s), 0, cfg.vocab_size)}
+    if cfg.embedding_inputs:
+        batch["embeds"] = jax.random.normal(ke, (b, s, cfg.d_model),
+                                            jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(ke, (b, s), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = registry.get(arch).model(reduced=True)
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(key, cfg)
+    b, s = 2, 32
+    batch = _batch(cfg, key, b, s)
+    logits, aux, _ = lm.forward(
+        params, cfg, tokens=batch.get("tokens"), embeds=batch.get("embeds")
+    )
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert logits.dtype == jnp.float32
+    assert np.isfinite(np.asarray(logits)).all()
+    for v in aux.values():
+        assert np.isfinite(float(v))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    spec = registry.get(arch)
+    cfg = spec.model(reduced=True)
+    tcfg = TrainConfig(
+        global_batch=2, seq_len=32,
+        optimizer=OptimizerConfig(name=spec.optimizer, lr=1e-3,
+                                  warmup_steps=1, total_steps=4),
+    )
+    key = jax.random.PRNGKey(1)
+    state = init_state(key, cfg, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    batch = _batch(cfg, key)
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(new_state["step"]) == 1
+    # Parameters actually moved.
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        state["params"], new_state["params"],
+    )
+    assert max(jax.tree.leaves(moved)) > 0.0
+
+
+@pytest.mark.parametrize("arch", ["gemma3-27b", "zamba2-7b", "mamba2-130m",
+                                  "deepseek-v2-lite-16b"])
+def test_remat_matches_no_remat(arch):
+    """Gradient checkpointing must not change the forward value."""
+    cfg = registry.get(arch).model(reduced=True)
+    key = jax.random.PRNGKey(2)
+    params = lm.init_params(key, cfg)
+    batch = _batch(cfg, key)
+    args = dict(tokens=batch.get("tokens"), embeds=batch.get("embeds"))
+    l1, _, _ = lm.forward(params, cfg, **args, remat="none")
+    l2, _, _ = lm.forward(params, cfg, **args, remat="full")
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_full_configs_match_assignment_dims():
+    dims = {
+        "pixtral-12b": (5120, 131072, 40),
+        "deepseek-v2-lite-16b": (2048, 102400, 27),
+        "llama4-maverick-400b-a17b": (5120, 202048, 48),
+        "internlm2-1.8b": (2048, 92544, 24),
+        "qwen2.5-14b": (5120, 152064, 48),
+        "gemma3-27b": (5376, 262144, 62),
+        "granite-34b": (6144, 49152, 88),
+        "zamba2-7b": (3584, 32000, 81),
+        "musicgen-large": (2048, 2048, 48),
+        "mamba2-130m": (768, 50280, 24),
+    }
+    for arch, (d, v, layers) in dims.items():
+        cfg = registry.get(arch).model()
+        assert cfg.d_model == d, arch
+        assert cfg.vocab_size == v, arch
+        assert cfg.n_layers() == layers, arch
+
+
+def test_active_vs_total_params_moe():
+    cfg = registry.get("llama4-maverick-400b-a17b").model(reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    total = lm.param_count(params)
+    active = lm.active_param_count(params, cfg)
+    assert active < total
+    # top-1 of 8 experts -> 7/8 of routed expert params inactive.
+    moe_blk = params["stage_0"]["blocks"]["1"]["moe"]
+    routed = sum(int(moe_blk[k].size) for k in ("w_gate", "w_up", "w_down"))
+    assert total - active == int(routed * 7 / 8)

@@ -1,0 +1,77 @@
+"""Eqs. 1-7: throughput/power model invariants (unit + property tests)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.power import DEFAULT_POWER_MODEL, PowerModel
+
+
+@given(
+    theta=st.floats(0.1, 32.0),
+    l_gbps=st.floats(0.05, 10.0),
+)
+@settings(max_examples=200, deadline=None)
+def test_eq4_inverts_eq1(theta, l_gbps):
+    pm = DEFAULT_POWER_MODEL
+    rho = pm.throughput_gbps(theta, l_gbps)
+    back = pm.threads(np.float64(rho), l_gbps, clip=False)
+    assert back == pytest.approx(theta, rel=1e-6)
+
+
+@given(l_gbps=st.floats(0.05, 5.0))
+@settings(max_examples=50, deadline=None)
+def test_throughput_monotone_and_bounded(l_gbps):
+    pm = DEFAULT_POWER_MODEL
+    thetas = np.linspace(0.0, 64.0, 100)
+    rho = np.asarray(pm.throughput_gbps(thetas, l_gbps))
+    assert np.all(np.diff(rho) >= -1e-12)
+    assert np.all(rho <= l_gbps + 1e-12)
+    assert rho[0] == pytest.approx(0.0)
+
+
+def test_power_monotone_in_threads_and_zero_when_idle():
+    pm = DEFAULT_POWER_MODEL
+    thetas = np.linspace(0.0, 32.0, 50)
+    p = np.asarray(pm.power_w(thetas))
+    assert p[0] == 0.0  # idle slots consume nothing (paper §III-C)
+    assert np.all(p[1:] >= pm.p_min_w - 1e-9)
+    assert np.all(np.diff(p[1:]) >= -1e-9)
+    assert p[-1] <= pm.p_max_w + 1e-9
+    # Paper's own operating point: theta=32 draws ~98.6 W.
+    assert float(pm.power_w(np.float64(32.0))) == pytest.approx(98.62, abs=0.05)
+
+
+def test_linearization_matches_exact_at_endpoints():
+    pm = DEFAULT_POWER_MODEL
+    l = 0.5
+    for rho in (1e-9, l - 1e-9):
+        exact = float(pm.power_of_rho_exact_w(np.float64(rho), l))
+        lin = float(pm.power_of_rho_linear_w(np.float64(rho), l))
+        assert lin == pytest.approx(exact, abs=0.5)
+
+
+@given(l_gbps=st.floats(0.1, 2.0), frac=st.floats(0.01, 0.99))
+@settings(max_examples=100, deadline=None)
+def test_linearization_error_bounded_by_delta_p(l_gbps, frac):
+    pm = DEFAULT_POWER_MODEL
+    rho = np.float64(frac * l_gbps)
+    exact = float(pm.power_of_rho_exact_w(rho, l_gbps))
+    lin = float(pm.power_of_rho_linear_w(rho, l_gbps))
+    assert abs(exact - lin) <= pm.delta_p_w + 1e-6
+
+
+def test_rate_cap_below_limit():
+    pm = DEFAULT_POWER_MODEL
+    for l in (0.25, 0.5, 0.75, 1.0):
+        cap = pm.rate_cap_gbps(l)
+        assert 0.0 < cap < l
+        # threads at the cap equal theta_max exactly
+        assert pm.threads(np.float64(cap), l, clip=False) == pytest.approx(
+            pm.theta_max, rel=1e-6
+        )
+
+
+def test_custom_model_fields():
+    pm = PowerModel(p_max_w=120.0, p_min_w=90.0)
+    assert pm.delta_p_w == 30.0

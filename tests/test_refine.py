@@ -1,0 +1,64 @@
+"""LinTS+ emission-aware refinement: feasibility + improvement guarantees."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_problem
+from repro.core import heuristics, lints
+from repro.core.feasibility import check_plan, workload_feasible
+from repro.core.refine import refine_plan
+from repro.core.simulator import evaluate_plan
+
+
+def test_refine_stays_feasible_and_never_hurts(small_problem):
+    base = lints.solve(small_problem)
+    plus = refine_plan(small_problem, base)
+    assert check_plan(small_problem, plus.rho_bps).feasible
+    e0 = evaluate_plan(small_problem, base).total_gco2
+    e1 = evaluate_plan(small_problem, plus).total_gco2
+    assert e1 <= e0 + 1e-9
+    assert plus.algorithm == "lints+"
+
+
+def test_refine_beats_thresholds_on_paper_workload(paper_traces):
+    from repro.core.problem import build_problem, paper_workload
+
+    reqs = paper_workload(n_jobs=60, seed=0)
+    prob = build_problem(reqs, paper_traces, 0.5)
+    plus = lints.solve(prob, lints.LinTSConfig(refine=True))
+    st_plan = heuristics.single_threshold(prob)
+    e_plus = evaluate_plan(prob, plus).total_gco2
+    e_st = evaluate_plan(prob, st_plan).total_gco2
+    assert e_plus <= e_st
+
+
+def test_refine_concentrates_partial_cells(small_problem):
+    base = lints.solve(small_problem, lints.LinTSConfig(vertex_round=False))
+    plus = refine_plan(small_problem, base)
+    cap = small_problem.rate_cap_bps
+
+    def partials(rho):
+        return int(((rho > 0) & (rho < 0.98 * cap)).sum())
+
+    # At most ~one partial cell per job after refinement.
+    assert partials(plus.rho_bps) <= small_problem.n_jobs + 1
+
+
+@given(seed=st.integers(0, 5000))
+@settings(max_examples=10, deadline=None)
+def test_refine_property_feasible_and_monotone(seed):
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng)
+    if not workload_feasible(prob)[0]:
+        return
+    try:
+        base = lints.solve(prob)
+    except lints.InfeasibleError:
+        return
+    plus = refine_plan(prob, base)
+    assert check_plan(prob, plus.rho_bps).feasible
+    assert (
+        evaluate_plan(prob, plus).total_gco2
+        <= evaluate_plan(prob, base).total_gco2 + 1e-9
+    )

@@ -1,0 +1,101 @@
+"""Fault tolerance: heartbeats, stragglers, elastic mesh planning."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime import FailureInjector, HeartbeatMonitor, plan_mesh
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_dead_worker_detection():
+    clock = FakeClock()
+    mon = HeartbeatMonitor(4, timeout_s=10.0, clock=clock)
+    for w in range(4):
+        mon.beat(w, 1.0)
+    clock.t = 5.0
+    for w in (0, 1, 2):
+        mon.beat(w, 1.0)
+    clock.t = 12.0
+    assert mon.dead_workers() == [3]
+    status = mon.status()
+    assert not status[3].alive and status[0].alive
+
+
+def test_straggler_detection():
+    mon = HeartbeatMonitor(4, straggler_factor=2.0)
+    for _ in range(8):
+        for w in range(4):
+            mon.beat(w, 1.0 if w != 2 else 3.5)
+    assert mon.stragglers() == [2]
+    assert mon.status()[2].is_straggler
+
+
+def test_no_straggler_with_uniform_times():
+    mon = HeartbeatMonitor(8)
+    for _ in range(8):
+        for w in range(8):
+            mon.beat(w, 1.0 + 0.01 * w)
+    assert mon.stragglers() == []
+
+
+def test_failure_injector():
+    inj = FailureInjector({10: ("kill", 3)})
+    assert inj.at(10) == ("kill", 3)
+    assert inj.at(11) is None
+
+
+@given(n=st.integers(1, 4096))
+@settings(max_examples=200, deadline=None)
+def test_plan_mesh_properties(n):
+    plan = plan_mesh(n, prefer_model=16)
+    used = int(np.prod(plan.shape))
+    assert used + plan.dropped_devices == n or used <= n
+    assert used >= 1
+    assert used <= n
+    # model axis preserves preference when divisible
+    model = plan.shape[-1]
+    assert model in (1, 2, 4, 8, 16)
+    if n % 16 == 0 and n >= 16:
+        assert model == 16
+    # multi-pod shape appears at >=512 devices
+    if used >= 512:
+        assert plan.axis_names[0] == "pod"
+
+
+def test_plan_mesh_elastic_shrink():
+    full = plan_mesh(512)
+    assert full.shape == (2, 16, 16)
+    degraded = plan_mesh(511)  # one node lost
+    used = int(np.prod(degraded.shape))
+    assert used == 256  # falls back to the largest clean power-of-two grid
+    assert degraded.shape[-1] == 16
+
+
+def test_build_local_mesh_and_reshard():
+    """End-to-end elastic flow on the 1-device container."""
+    from repro.configs import OptimizerConfig, TrainConfig, registry
+    from repro.runtime import reshard_state
+    from repro.train import abstract_state, init_state
+
+    cfg = registry.get("internlm2-1.8b").model(reduced=True)
+    tcfg = TrainConfig(global_batch=2, seq_len=16,
+                       optimizer=OptimizerConfig(warmup_steps=1, total_steps=2))
+    key = jax.random.PRNGKey(0)
+    state = init_state(key, cfg, tcfg)
+    host = jax.device_get(state)
+    shapes = abstract_state(key, cfg, tcfg)
+    new_mesh = plan_mesh(len(jax.devices())).build()
+    placed = reshard_state(host, shapes, new_mesh)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(placed)):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)
+        )

@@ -1,0 +1,123 @@
+"""Sharding rules: divisibility fallbacks, spec ranks, opt-state mirroring."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import OptimizerConfig, TrainConfig, registry
+from repro.distributed import sharding as shd
+from repro.models import lm
+from repro.optim import adamw
+from repro.train import abstract_state
+
+
+class FakeMesh:
+    """Shape-only stand-in (rule logic never touches devices)."""
+
+    def __init__(self, shape: dict):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH_256 = FakeMesh({"data": 16, "model": 16})
+MESH_512 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _shapes(arch, reduced=False):
+    cfg = registry.get(arch).model(reduced=reduced)
+    return cfg, jax.eval_shape(
+        lambda k: lm.init_params(k, cfg), jax.random.PRNGKey(0)
+    )
+
+
+@pytest.mark.parametrize("arch", registry.list_archs())
+def test_param_specs_rank_and_divisibility(arch):
+    cfg, shapes = _shapes(arch)
+    specs = shd.param_specs(shapes, MESH_256)
+
+    def check(path, leaf, spec):
+        assert len(tuple(spec)) <= len(leaf.shape), (path, spec, leaf.shape)
+        for dim, axis in zip(leaf.shape, tuple(spec)):
+            if axis is None:
+                continue
+            size = (np.prod([MESH_256.shape[a] for a in axis])
+                    if isinstance(axis, tuple) else MESH_256.shape[axis])
+            assert dim % size == 0, (path, spec, leaf.shape)
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: check(shd.path_str(p), l, s), shapes, specs,
+    )
+
+
+def test_big_weights_are_sharded_not_replicated():
+    _, shapes = _shapes("qwen2.5-14b")
+    specs = shd.param_specs(shapes, MESH_256)
+    flat = {
+        shd.path_str(p): s
+        for p, s in jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P))[0]
+    }
+    assert flat["embed/table"] == P("model", "data")
+    assert flat["stage_0/blocks/0/attn/wq"] == P(None, "data", "model")
+    assert flat["stage_0/blocks/0/mlp/w_down"] == P(None, "model", "data")
+
+
+def test_mamba_vocab_fallback_replicates():
+    """mamba2's vocab (50280) doesn't divide 16 -> dim must be replicated."""
+    _, shapes = _shapes("mamba2-130m")
+    specs = shd.param_specs(shapes, MESH_256)
+    emb = specs["embed"]["table"]
+    assert tuple(emb)[0] is None  # vocab dim dropped
+    # w_in output (3352) not divisible by 16 either.
+    win = specs["stage_0"]["blocks"]["0"]["mixer"]["w_in"]
+    assert tuple(win) == (None, "data", None)
+
+
+def test_moe_experts_sharded_over_model():
+    _, shapes = _shapes("llama4-maverick-400b-a17b")
+    specs = shd.param_specs(shapes, MESH_256)
+    wg = specs["stage_0"]["blocks"]["1"]["moe"]["w_gate"]
+    assert tuple(wg) == (None, "model", "data", None)
+
+
+def test_cache_spec_fallbacks():
+    from repro.configs.base import AttentionConfig
+
+    # kv heads = 8 cannot split 16-way TP -> falls back to length sharding.
+    shapes = {
+        "kv": {
+            "k": jax.ShapeDtypeStruct((4, 128, 32768, 8, 128), jnp.bfloat16),
+            "v": jax.ShapeDtypeStruct((4, 128, 32768, 8, 128), jnp.bfloat16),
+        }
+    }
+    specs = shd.cache_specs(shapes, MESH_256, batched=True)
+    assert tuple(specs["kv"]["k"]) == (None, "data", "model", None, None)
+    # kv heads = 16 shards heads directly.
+    shapes16 = {
+        "kv": {"k": jax.ShapeDtypeStruct((4, 128, 32768, 16, 128), jnp.bfloat16)}
+    }
+    specs16 = shd.cache_specs(shapes16, MESH_256, batched=True)
+    assert tuple(specs16["kv"]["k"]) == (None, "data", None, "model", None)
+
+
+def test_opt_specs_mirror_params():
+    cfg = registry.get("internlm2-1.8b").model(reduced=True)
+    tcfg = TrainConfig(global_batch=2, seq_len=16,
+                       optimizer=OptimizerConfig(name="adamw8bit"))
+    shapes = abstract_state(jax.random.PRNGKey(0), cfg, tcfg)
+    p_specs = shd.param_specs(shapes["params"], MESH_256)
+    o_specs = shd.opt_specs(shapes["opt"], p_specs, MESH_256)
+    some_param_spec = p_specs["stage_0"]["blocks"]["0"]["attn"]["wq"]
+    mom = o_specs["moments"]["stage_0"]["blocks"]["0"]["attn"]["wq"]
+    assert mom["m_q"] == some_param_spec
+    assert tuple(mom["m_s"])[-1] is None
+    assert o_specs["count"] == P()
+
+
+def test_batch_axis_includes_pod():
+    amap = shd.axis_map(MESH_512)
+    assert amap["batch"] == ("pod", "data")
+    amap1 = shd.axis_map(MESH_256)
+    assert amap1["batch"] == "data"

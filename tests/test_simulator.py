@@ -1,0 +1,85 @@
+"""Emissions simulator semantics (paper §III-C)."""
+
+import numpy as np
+import pytest
+
+from repro.core import heuristics, lints
+from repro.core.simulator import evaluate_plan, noisy_costs
+from repro.core.plan import Plan
+from repro.core import problem as prob_mod
+from repro.core import trace as trace_mod
+
+
+def test_empty_plan_zero_emissions(small_problem):
+    rho = np.zeros_like(small_problem.cost)
+    rep = evaluate_plan(small_problem, rho)
+    assert rep.total_gco2 == 0.0
+    assert rep.energy_kwh == 0.0
+    assert rep.sla_violations == small_problem.n_jobs
+
+
+def test_emissions_scale_with_intensity(small_problem):
+    plan = heuristics.edf(small_problem)
+    base = evaluate_plan(small_problem, plan, small_problem.cost)
+    double = evaluate_plan(small_problem, plan, 2.0 * small_problem.cost)
+    assert double.total_gco2 == pytest.approx(2 * base.total_gco2, rel=1e-9)
+
+
+def test_active_slot_power_includes_p_min(small_problem):
+    """One tiny-throughput cell still pays ~P_min for the slot."""
+    rho = np.zeros_like(small_problem.cost)
+    i = 0
+    j = int(small_problem.offsets[i])
+    rho[i, j] = small_problem.rate_cap_bps * 1e-3
+    rep = evaluate_plan(small_problem, rho)
+    kwh = rep.energy_kwh
+    p_implied = kwh * 3.6e6 / small_problem.slot_seconds
+    assert p_implied >= small_problem.power.p_min_w * 0.99
+
+
+def test_noisy_costs_shape_and_bias(paper_traces):
+    reqs = prob_mod.paper_workload(n_jobs=5, seed=0)
+    c = noisy_costs(reqs, paper_traces, sigma=0.15, seed=42)
+    clean = np.stack([paper_traces.path_intensity(r.path) for r in reqs])
+    assert c.shape == clean.shape
+    rel = np.abs(c - clean) / clean
+    assert 0.0 < rel.mean() < 0.2
+
+
+def test_per_job_and_per_slot_totals_consistent(small_problem):
+    plan = heuristics.fcfs(small_problem)
+    rep = evaluate_plan(small_problem, plan)
+    assert rep.per_job_gco2.sum() == pytest.approx(rep.total_gco2, rel=1e-9)
+    assert rep.per_slot_gco2.sum() == pytest.approx(rep.total_gco2, rel=1e-9)
+
+
+def test_trace_expansion_and_combination():
+    hourly = np.arange(72, dtype=np.float64)
+    slots = trace_mod.expand_hourly_to_slots(hourly, 4)
+    assert slots.shape == (288,)
+    assert (slots[:4] == 0).all() and (slots[4:8] == 1).all()
+    ts = trace_mod.make_trace_set(("US-NM", "US-WY"), hours=72)
+    combined = ts.path_intensity(("US-NM", "US-WY"))
+    manual = ts.zone_slots["US-NM"] + ts.zone_slots["US-WY"]
+    np.testing.assert_allclose(combined, manual)
+
+
+def test_trace_determinism_and_noise():
+    a = trace_mod.make_trace_set(("US-NM",), seed=7)
+    b = trace_mod.make_trace_set(("US-NM",), seed=7)
+    np.testing.assert_array_equal(a.zone_slots["US-NM"], b.zone_slots["US-NM"])
+    n1 = a.with_noise(0.05, seed=1).zone_slots["US-NM"]
+    n2 = a.with_noise(0.05, seed=1).zone_slots["US-NM"]
+    np.testing.assert_array_equal(n1, n2)
+    assert not np.array_equal(n1, a.zone_slots["US-NM"])
+
+
+def test_electricitymaps_csv_loader(tmp_path):
+    p = tmp_path / "em.csv"
+    p.write_text(
+        "datetime,zone,carbon_intensity\n"
+        "t0,US-NM,400\nt1,US-NM,410\nt0,US-CO,500\nt1,US-CO,520\n"
+    )
+    traces = trace_mod.load_electricitymaps_csv(str(p))
+    np.testing.assert_allclose(traces["US-NM"], [400, 410])
+    np.testing.assert_allclose(traces["US-CO"], [500, 520])

@@ -1,0 +1,81 @@
+"""Spatiotemporal LinTS extension (paper §V future work)."""
+
+import numpy as np
+import pytest
+
+from repro.core.spatial import SpatialRequest, solve_spatiotemporal
+from repro.core.trace import TraceSet
+
+
+def _traces(n_slots=48):
+    rng = np.random.default_rng(0)
+    zones = {
+        "A": np.full(n_slots, 200.0),
+        "HUB-CLEAN": np.full(n_slots, 100.0),
+        "HUB-DIRTY": np.full(n_slots, 900.0),
+        "B": np.full(n_slots, 200.0),
+    }
+    return TraceSet(slot_seconds=900.0, zone_slots=zones)
+
+
+def test_picks_cleaner_route():
+    traces = _traces()
+    req = SpatialRequest(
+        size_gb=20.0, deadline_slots=48,
+        candidate_paths=(("A", "HUB-DIRTY", "B"), ("A", "HUB-CLEAN", "B")),
+        request_id="r0",
+    )
+    plan = solve_spatiotemporal([req], traces, link_capacity_gbps=1.0)
+    # All bytes go over the clean hub.
+    assert plan.path_share[0, 1] > 0.999
+    bits = plan.rho_bps.sum() * 900.0
+    assert bits >= req.size_bits * (1 - 1e-9)
+
+
+def test_splits_when_clean_route_saturates():
+    traces = _traces(n_slots=8)
+    # Clean-route capacity over the horizon: 1 Gbps * 8 * 900 s = 900 GB;
+    # total demand 4 x 300 GB = 1200 GB must spill onto the dirty route.
+    reqs = [
+        SpatialRequest(
+            size_gb=300.0, deadline_slots=8,
+            candidate_paths=(("A", "HUB-DIRTY", "B"), ("A", "HUB-CLEAN", "B")),
+            request_id=f"r{i}",
+        )
+        for i in range(4)
+    ]
+    plan = solve_spatiotemporal(reqs, traces, link_capacity_gbps=1.0)
+    share_clean = plan.path_share[:, 1]
+    # Demand exceeds the clean route's capacity: some traffic must spill.
+    assert share_clean.mean() < 1.0
+    assert share_clean.mean() > 0.3
+    # Per-link capacity respected on the shared clean hub links.
+    clean_rho = plan.rho_bps[:, 1, :].sum(axis=0)
+    assert clean_rho.max() <= 1.0e9 * (1 + 1e-9)
+
+
+def test_capacity_per_link_not_per_path():
+    """Two paths sharing a link must share its capacity."""
+    traces = _traces(n_slots=4)
+    # Both candidates traverse A->HUB-CLEAN; the second hops differ.
+    reqs = [
+        SpatialRequest(
+            size_gb=10.0, deadline_slots=4,
+            candidate_paths=(("A", "HUB-CLEAN", "B"),),
+            request_id=f"r{i}",
+        )
+        for i in range(6)
+    ]
+    plan = solve_spatiotemporal(reqs, traces, link_capacity_gbps=1.0)
+    used = plan.rho_bps[:, 0, :].sum(axis=0)
+    assert used.max() <= 1.0e9 * (1 + 1e-9)
+
+
+def test_infeasible_raises():
+    from repro.core.plan import InfeasibleError
+
+    traces = _traces(n_slots=4)
+    req = SpatialRequest(size_gb=1e5, deadline_slots=4,
+                         candidate_paths=(("A", "B"),))
+    with pytest.raises(InfeasibleError):
+        solve_spatiotemporal([req], traces, link_capacity_gbps=1.0)

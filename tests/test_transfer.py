@@ -1,0 +1,102 @@
+"""Transfer manager: LinTS-in-the-loop replication, SLAs, drift replanning."""
+
+import numpy as np
+import pytest
+
+from repro.core import lints
+from repro.core.trace import make_trace_set
+from repro.transfer import (
+    CheckpointReplicator,
+    Datacenter,
+    Topology,
+    TransferManager,
+)
+
+ZONES = ("US-NM", "US-WY", "US-SC")
+
+
+def _manager(**kw):
+    traces = make_trace_set(ZONES, hours=72, seed=0)
+    topo = Topology(
+        datacenters=(Datacenter("a", "US-NM"), Datacenter("b", "US-SC")),
+        routes={("a", "b"): ZONES, ("b", "a"): ZONES[::-1]},
+    )
+    return TransferManager(topo, traces, capacity_gbps=1.0,
+                           config=lints.LinTSConfig(backend="scipy"), **kw)
+
+
+def test_transfer_completes_before_deadline():
+    tm = _manager()
+    rid = tm.enqueue(size_gb=40.0, src="a", dst="b", deadline_slots=96)
+    tm.run_until_idle()
+    t = tm.transfers[rid]
+    assert t.done_slot is not None and t.done_slot < 96
+    assert not t.violated
+    rep = tm.report()
+    assert rep["sla_violations"] == 0
+    assert rep["total_emissions_kg"] > 0
+
+
+def test_scheduler_prefers_low_carbon_slots():
+    tm = _manager()
+    rid = tm.enqueue(size_gb=10.0, src="a", dst="b", deadline_slots=288)
+    tm.replan()
+    rho = tm._plan_rho[rid]
+    used = rho > 0
+    assert used.any()
+    path_ci = tm.forecast.path_intensity(ZONES)
+    mean_used = path_ci[used].mean()
+    assert mean_used < path_ci.mean()  # picked greener-than-average slots
+
+
+def test_congestion_triggers_replan_and_still_completes():
+    tm = _manager(replan_on_drift=True)
+    tm.enqueue(size_gb=30.0, src="a", dst="b", deadline_slots=200)
+    # 50% congestion for the first 40 slots.
+    tm.run_until_idle(congestion_fn=lambda s: 0.5 if s < 40 else 1.0)
+    rep = tm.report()
+    assert rep["pending"] == 0
+    assert rep["sla_violations"] == 0
+
+
+def test_impossible_deadline_flags_sla():
+    tm = _manager(replan_on_drift=False)
+    tm.enqueue(size_gb=30.0, src="a", dst="b", deadline_slots=40)
+    # Heavy congestion the whole window: the plan cannot deliver.
+    tm.run_until_idle(max_slots=60, congestion_fn=lambda s: 0.05)
+    assert tm.report()["sla_violations"] >= 1
+
+
+def test_multiple_transfers_share_capacity():
+    tm = _manager()
+    for i in range(5):
+        tm.enqueue(size_gb=20.0, src="a", dst="b", deadline_slots=96)
+    tm.replan()
+    total = np.zeros(tm.forecast.n_slots)
+    for rho in tm._plan_rho.values():
+        total += rho
+    assert total.max() <= tm.capacity_gbps * 1e9 * (1 + 1e-9)
+    tm.run_until_idle()
+    assert tm.report()["sla_violations"] == 0
+
+
+def test_checkpoint_replicator_hook(tmp_path):
+    import jax.numpy as jnp
+    from repro.checkpoint import CheckpointManager
+
+    tm = _manager()
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.on_commit = CheckpointReplicator(tm, "a", ["b"], deadline_slots=96)
+    mgr.save(1, {"w": jnp.ones((1024,), jnp.float32)})
+    assert len(tm.pending()) == 1
+    t = tm.pending()[0]
+    assert t.request_id.startswith("ckpt-00000001")
+    assert t.size_gb > 0
+    tm.run_until_idle()
+    assert tm.report()["sla_violations"] == 0
+
+
+def test_unknown_route_raises():
+    tm = _manager()
+    with pytest.raises(KeyError):
+        tm.enqueue(1.0, "a", "nowhere", 96)
