@@ -1,34 +1,137 @@
 """Solver scaling: SciPy/HiGHS (paper) vs JAX PDHG (ours) vs batched PDHG.
 
 The scaling story: HiGHS is great at one 200-job LP; the TPU-native PDHG
-path amortizes across *fleets* of independent scheduling problems (vmap)
-and runs on accelerators.  Also micro-benchmarks the Pallas PDHG cell
-update against its jnp oracle (interpret mode on CPU — correctness, not
-speed, is the claim there).
+path amortizes across *fleets* of independent scheduling problems and runs
+on accelerators.  This bench also measures the chunked VMEM-resident window
+kernel (one Pallas launch per restart window, DESIGN.md §2) against the
+legacy per-iteration cell-update path and the jnp oracle — in interpret
+parity mode on CPU, where the claim is correctness plus launch-count
+reduction (`check_every` launches -> 1 per window), with wall-clock as a
+secondary signal.
+
+Emits machine-readable ``BENCH_solver.json`` at the repo root so the perf
+trajectory is tracked PR-over-PR (DESIGN.md §7).
 """
 
 from __future__ import annotations
+
+import json
+import pathlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lints
 from repro.core.pdhg import (
     PDHGConfig,
+    _window_from_cell,
     normalize_problem,
     pdhg_solve_batch,
+    pdhg_window_ref,
     solve_pdhg,
 )
 from repro.core.problem import build_problem, paper_workload
 from repro.core.scipy_backend import solve_scipy
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 from .common import csv_line, paper_setup, timed
+
+_BENCH_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_solver.json"
+
+
+def _window_bench(n_jobs: int = 200, check_every: int = 100) -> dict:
+    """One restart window, three ways: chunked kernel (1 launch),
+    per-iteration cell kernel (``check_every`` launches), jnp oracle."""
+    reqs, traces = paper_setup(n_jobs)
+    prob = build_problem(reqs, traces, 0.5)
+    c, ub, b_row, b_col, _ = normalize_problem(prob)
+    n, m = c.shape
+    x = jnp.zeros((n, m), jnp.float32)
+    u = jnp.zeros((n,), jnp.float32)
+    v = jnp.zeros((m,), jnp.float32)
+    rs = x.sum(axis=1)
+    cs = x.sum(axis=0)
+    tau = jnp.float32(0.05)
+    sigma = jnp.float32(0.04)
+
+    def chunked():
+        return jax.block_until_ready(ops.pdhg_window(
+            x, c, ub, u, v, rs, cs, b_row, b_col, tau, sigma,
+            n_iters=check_every, interpret=True))
+
+    per_iter_window = jax.jit(_window_from_cell(
+        lambda x_, u_, v_, t_: ops.pdhg_cell_update(x_, c, ub, u_, v_, t_,
+                                                    interpret=True),
+        b_row, b_col, check_every))
+
+    def per_iteration():
+        return jax.block_until_ready(
+            per_iter_window(x, u, v, rs, cs, tau, sigma))
+
+    oracle = jax.jit(lambda: pdhg_window_ref(
+        x, c, ub, u, v, rs, cs, b_row, b_col, tau, sigma, check_every))
+
+    def oracle_run():
+        return jax.block_until_ready(oracle())
+
+    out_c = chunked()          # compile
+    out_p = per_iteration()    # compile
+    out_r = oracle_run()       # compile
+    _, us_c = timed(chunked)
+    _, us_p = timed(per_iteration)
+    _, us_r = timed(oracle_run)
+    err_c = max(float(jnp.abs(a - b).max()) for a, b in zip(out_c, out_r))
+    err_p = max(float(jnp.abs(a - b).max()) for a, b in zip(out_p, out_r))
+    return {
+        "shape": [n, m],
+        "check_every": check_every,
+        "launches_per_window_chunked": 1,
+        "launches_per_window_per_iteration": check_every,
+        "us_per_window_chunked": us_c,
+        "us_per_window_per_iteration": us_p,
+        "us_per_window_oracle": us_r,
+        "windows_per_sec_chunked": 1e6 / us_c if us_c else None,
+        "max_abs_err_chunked_vs_oracle": err_c,
+        "max_abs_err_per_iteration_vs_oracle": err_p,
+    }
+
+
+def _batched_bench(n_problems: int = 8, n_jobs: int = 25) -> dict:
+    """Fleet solve with per-problem early exit (vs one fleet-wide max)."""
+    _, traces = paper_setup(n_jobs)
+    probs = [build_problem(paper_workload(n_jobs, seed=s), traces, 0.5)
+             for s in range(n_problems)]
+    tensors = [normalize_problem(p) for p in probs]
+    c = jnp.stack([t[0] for t in tensors])
+    ub = jnp.stack([t[1] for t in tensors])
+    br = jnp.stack([t[2] for t in tensors])
+    bc = jnp.stack([t[3] for t in tensors])
+
+    def solve():
+        xs, diag = pdhg_solve_batch(c, ub, br, bc, max_iters=10_000,
+                                    check_every=250, use_kernel=False)
+        jax.block_until_ready(xs)
+        return xs, diag
+
+    _, diag = solve()  # compile
+    (_, diag), us_batch = timed(solve)
+    iters = [int(i) for i in np.asarray(diag["iterations"])]
+    return {
+        "n_problems": n_problems,
+        "n_jobs": n_jobs,
+        "us_total": us_batch,
+        "us_per_problem": us_batch / n_problems,
+        "iterations_per_problem": iters,
+        "iterations_fleet_max": max(iters),
+        "converged": [bool(b) for b in np.asarray(diag["converged"])],
+    }
 
 
 def run(quiet: bool = False) -> list[str]:
     lines = []
+    bench: dict = {"bench": "solver_scaling"}
+
+    bench["scaling"] = {}
     for n_jobs in (25, 100, 200, 400):
         reqs, traces = paper_setup(n_jobs)
         prob = build_problem(reqs, traces, 0.5)
@@ -44,47 +147,40 @@ def run(quiet: bool = False) -> list[str]:
             f"pdhg_iters={plan_pd.meta['iterations']};rel_gap={gap:.2e};"
             f"n_var={prob.dim_rho()}"
         )
+        bench["scaling"][str(n_jobs)] = {
+            "scipy_us": us_sp, "pdhg_us": us_pd,
+            "pdhg_iterations": plan_pd.meta["iterations"],
+            "rel_gap": gap, "n_variables": prob.dim_rho(),
+        }
         lines.append(csv_line(f"solver_scaling_{n_jobs}jobs", us_pd, derived))
         if not quiet:
             print(lines[-1], flush=True)
 
-    # Batched PDHG: 8 independent 25-job problems in one vmapped solve.
-    reqs, traces = paper_setup(25)
-    probs = [build_problem(paper_workload(25, seed=s), traces, 0.5)
-             for s in range(8)]
-    tensors = [normalize_problem(p) for p in probs]
-    c = jnp.stack([t[0] for t in tensors])
-    ub = jnp.stack([t[1] for t in tensors])
-    br = jnp.stack([t[2] for t in tensors])
-    bc = jnp.stack([t[3] for t in tensors])
-    _ = pdhg_solve_batch(c, ub, br, bc, max_iters=10_000)  # compile
-    (_, _), us_batch = timed(
-        lambda: jax.block_until_ready(
-            pdhg_solve_batch(c, ub, br, bc, max_iters=10_000)
-        )
-    )
-    lines.append(csv_line("solver_batched_8x25jobs", us_batch,
-                          f"us_per_problem={us_batch / 8:.0f}"))
+    # Chunked window kernel vs per-iteration path (interpret parity mode).
+    w = _window_bench()
+    bench["window"] = w
+    lines.append(csv_line(
+        "pdhg_window_chunked_200x288", w["us_per_window_chunked"],
+        f"per_iter_us={w['us_per_window_per_iteration']:.0f};"
+        f"oracle_us={w['us_per_window_oracle']:.0f};"
+        f"launches=1_vs_{w['launches_per_window_per_iteration']};"
+        f"max_err={w['max_abs_err_chunked_vs_oracle']:.2e}"))
     if not quiet:
         print(lines[-1], flush=True)
 
-    # Pallas kernel micro-bench (interpret mode: correctness-parity check).
-    rng = np.random.default_rng(0)
-    n, m = 200, 288
-    x = jnp.asarray(rng.uniform(0, 1, (n, m)), jnp.float32)
-    cmat = jnp.asarray(rng.uniform(0, 3, (n, m)), jnp.float32)
-    ubm = jnp.ones((n, m), jnp.float32)
-    u = jnp.zeros((n,), jnp.float32)
-    v = jnp.zeros((m,), jnp.float32)
-    out_k, us_k = timed(
-        lambda: jax.block_until_ready(ops.pdhg_cell_update(x, cmat, ubm, u, v, 0.05)))
-    out_r, us_r = timed(
-        lambda: jax.block_until_ready(ref.pdhg_cell_update_ref(x, cmat, ubm, u, v, 0.05)))
-    err = float(jnp.abs(out_k[0] - out_r[0]).max())
-    lines.append(csv_line("pdhg_kernel_interp_200x288", us_k,
-                          f"ref_us={us_r:.0f};max_err={err:.2e}"))
+    # Batched fleet solve: per-problem early-exit iteration counts.
+    b = _batched_bench()
+    bench["batched"] = b
+    iters = ";".join(str(i) for i in b["iterations_per_problem"])
+    lines.append(csv_line(
+        f"solver_batched_{b['n_problems']}x{b['n_jobs']}jobs", b["us_total"],
+        f"us_per_problem={b['us_per_problem']:.0f};iters_per_problem={iters}"))
     if not quiet:
         print(lines[-1], flush=True)
+
+    _BENCH_PATH.write_text(json.dumps(bench, indent=2) + "\n")
+    if not quiet:
+        print(f"wrote {_BENCH_PATH}", flush=True)
     return lines
 
 

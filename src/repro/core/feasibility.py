@@ -108,7 +108,77 @@ def greedy_fill(
     ``rho_init`` seeds pre-existing allocations (used by vertex rounding);
     only the *remaining* bytes of each job are placed.  Returns rho (bps).
     Raises :class:`InfeasibleError` when ``strict`` and a job cannot finish.
+
+    The per-slot walk is vectorized waterfilling: with ``a_k`` the bits
+    available in the k-th ranked slot (cell headroom capped by remaining
+    slot capacity; 0 outside the mask), sequential greedy taking satisfies
+    ``take_k = clip(need - sum(a_1..a_{k-1}), 0, a_k)``, so one cumsum per
+    job replaces the per-slot Python loop.  The job loop itself stays
+    sequential — it carries the shared slot capacity.  Waterfilling
+    assumes *unique* slot indices per ranking (all in-repo rankers
+    comply: ranges, argsorts, permutations); rankings with duplicates —
+    legal under the public :data:`SlotRanker` contract — are detected
+    and routed through the per-slot walk instead, since fancy-indexed
+    ``+=`` collapses duplicate increments.  The loop oracle
+    :func:`greedy_fill_reference` is kept for parity tests.
     """
+    n_jobs, n_slots = problem.cost.shape
+    rho = np.zeros((n_jobs, n_slots)) if rho_init is None else np.array(rho_init, dtype=np.float64)
+    dt = problem.slot_seconds
+    slot_bits_left = problem.capacity_bps * dt - rho.sum(axis=0) * dt
+    cell_cap_bits = problem.rate_cap_bps * dt
+    for i in job_order:
+        need = problem.size_bits[i] - rho[i].sum() * dt
+        if need <= _BIT_TOL:
+            continue
+        ranked = slot_ranker(i)
+        if not isinstance(ranked, (np.ndarray, range)):
+            ranked = list(ranked)
+        cols = np.asarray(ranked, dtype=np.intp)
+        if cols.size and np.unique(cols).size != cols.size:
+            # Duplicate slots: waterfilling's fancy-indexed += would drop
+            # increments — take the per-slot walk for this job instead.
+            for j in cols:
+                if need <= _BIT_TOL:
+                    break
+                if not problem.mask[i, j]:
+                    continue
+                take = min(need, cell_cap_bits - rho[i, j] * dt,
+                           slot_bits_left[j])
+                if take <= 0.0:
+                    continue
+                rho[i, j] += take / dt
+                slot_bits_left[j] -= take
+                need -= take
+        elif cols.size:
+            avail = np.where(
+                problem.mask[i, cols],
+                np.minimum(cell_cap_bits - rho[i, cols] * dt,
+                           slot_bits_left[cols]),
+                0.0,
+            )
+            np.maximum(avail, 0.0, out=avail)
+            cum_before = np.cumsum(avail) - avail
+            take = np.clip(need - cum_before, 0.0, avail)
+            rho[i, cols] += take / dt
+            slot_bits_left[cols] -= take
+            need -= take.sum()
+        if strict and need > _BIT_TOL + 1e-9 * problem.size_bits[i]:
+            raise InfeasibleError(
+                f"job {i}: {need:.4g} bits undeliverable before slot "
+                f"{problem.deadlines[i]} (algorithmic slot choice too restrictive)"
+            )
+    return rho
+
+
+def greedy_fill_reference(
+    problem: ScheduleProblem,
+    job_order: Sequence[int],
+    slot_ranker: SlotRanker,
+    rho_init: np.ndarray | None = None,
+    strict: bool = True,
+) -> np.ndarray:
+    """Per-slot Python-loop oracle for :func:`greedy_fill` (parity tests)."""
     n_jobs, n_slots = problem.cost.shape
     rho = np.zeros((n_jobs, n_slots)) if rho_init is None else np.array(rho_init, dtype=np.float64)
     slot_bits_left = problem.capacity_bps * problem.slot_seconds - rho.sum(axis=0) * problem.slot_seconds
@@ -152,9 +222,17 @@ def repair_plan(problem: ScheduleProblem, rho_bps: np.ndarray) -> np.ndarray:
         scale = np.where(over, problem.capacity_bps / np.maximum(used, 1e-30), 1.0)
         rho = rho * scale[None, :]
 
-    def cheapest(i: int) -> Iterable[int]:
-        cols = np.nonzero(problem.mask[i])[0]
-        return cols[np.argsort(problem.cost[i, cols], kind="stable")]
-
+    ranked = cheapest_slots(problem)
     order = np.argsort(problem.deadlines, kind="stable")
-    return greedy_fill(problem, order, cheapest, rho_init=rho, strict=True)
+    return greedy_fill(problem, order, ranked.__getitem__, rho_init=rho,
+                       strict=True)
+
+
+def cheapest_slots(problem: ScheduleProblem) -> np.ndarray:
+    """(n_jobs, n_slots) cheapest-first slot ranking, one vectorized argsort.
+
+    Unmasked slots sort to the end (they contribute nothing in
+    :func:`greedy_fill`, which zeroes availability outside the mask).
+    """
+    keyed = np.where(problem.mask, problem.cost, np.inf)
+    return np.argsort(keyed, axis=1, kind="stable")

@@ -18,8 +18,14 @@ from typing import Sequence
 
 import numpy as np
 
-from .feasibility import check_plan, workload_feasible
-from .pdhg import PDHGConfig, solve_pdhg, vertex_round
+from .feasibility import check_plan, repair_plan, workload_feasible
+from .pdhg import (
+    PDHGConfig,
+    normalize_problem,
+    pdhg_solve_batch,
+    solve_pdhg,
+    vertex_round,
+)
 from .plan import InfeasibleError, Plan
 from .power import DEFAULT_POWER_MODEL, PowerModel
 from .problem import ScheduleProblem, TransferRequest, build_problem
@@ -94,3 +100,84 @@ def schedule(
 def thread_plan(problem: ScheduleProblem, plan: Plan) -> np.ndarray:
     """Algorithm 1 line 24: throughput plan -> thread plan (Eq. 4)."""
     return plan.threads(problem)
+
+
+def solve_batch(
+    problems: Sequence[ScheduleProblem],
+    config: LinTSConfig = LinTSConfig(backend="pdhg"),
+) -> list[Plan]:
+    """Fleet-scale scheduling: solve many same-shape problems in ONE call.
+
+    Stacks the normalized tensors of every (datacenter-pair) problem and
+    hands the whole fleet to :func:`~repro.core.pdhg.pdhg_solve_batch`,
+    which early-exits each LP individually (per-problem iteration counts
+    land in each plan's meta).  On TPU the restart windows of the entire
+    fleet run as single chunked Pallas launches (DESIGN.md §5).
+    """
+    if config.backend != "pdhg":
+        raise ValueError("solve_batch is the TPU-native fleet path; "
+                         "backend must be 'pdhg'")
+    if not problems:
+        return []
+    shape = problems[0].cost.shape
+    for i, p in enumerate(problems):
+        if p.cost.shape != shape:
+            raise ValueError("solve_batch requires same-shape problems "
+                             f"(got {p.cost.shape} vs {shape})")
+        ok, why = workload_feasible(p)
+        if not ok:
+            raise InfeasibleError(f"workload {i} infeasible: {why}")
+    import jax.numpy as jnp
+
+    tensors = [normalize_problem(p, config.pdhg.dtype) for p in problems]
+    c = jnp.stack([t[0] for t in tensors])
+    ub = jnp.stack([t[1] for t in tensors])
+    br = jnp.stack([t[2] for t in tensors])
+    bc = jnp.stack([t[3] for t in tensors])
+    xs, diag = pdhg_solve_batch(
+        c, ub, br, bc,
+        max_iters=config.pdhg.max_iters,
+        check_every=config.pdhg.check_every,
+        tol=config.pdhg.tol,
+        omega0=config.pdhg.omega0,
+        omega_lo=config.pdhg.omega_bounds[0],
+        omega_hi=config.pdhg.omega_bounds[1],
+        use_kernel=config.pdhg.use_kernel,
+        kernel_interpret=config.pdhg.kernel_interpret,
+    )
+    xs = np.asarray(xs, dtype=np.float64)
+    plans = []
+    for i, p in enumerate(problems):
+        rho = repair_plan(p, xs[i] * p.rate_cap_bps)
+        plan = Plan(
+            rho,
+            "lints",
+            {
+                "backend": "pdhg",
+                "objective": float((p.cost * rho).sum()),
+                "iterations": int(diag["iterations"][i]),
+                "converged": bool(diag["converged"][i]),
+                "primal_residual": float(diag["primal_residual"][i]),
+                "gap": float(diag["gap"][i]),
+                "batch_index": i,
+                "batch_size": len(problems),
+            },
+        )
+        if config.vertex_round:
+            try:
+                plan = vertex_round(p, plan)
+            except InfeasibleError:
+                pass
+        if config.refine:
+            from .refine import refine_plan
+
+            plan = refine_plan(p, plan)
+        if config.validate:
+            report = check_plan(p, plan.rho_bps, rel_tol=1e-5)
+            if not report.feasible:
+                raise InfeasibleError(
+                    f"batched pdhg produced an infeasible plan for problem "
+                    f"{i} (worst violation {report.worst():.3g})"
+                )
+        plans.append(plan)
+    return plans

@@ -24,8 +24,10 @@ residuals for both the current and the running-average iterate, restart from
 whichever is better (PDLP restart-to-average), and re-balance omega from the
 primal/dual residual ratio.  Termination: primal feasibility + duality gap.
 
-The fused cell update (the memory-bound hot loop) optionally runs as a Pallas
-kernel — see ``repro/kernels/pdhg_step.py``.
+The hot loop optionally runs as Pallas kernels (auto-enabled on TPU): the
+chunked window kernel executes an entire restart window VMEM-resident in one
+launch (``repro/kernels/pdhg_window.py``, DESIGN.md §2); the legacy
+per-iteration fused cell update lives in ``repro/kernels/pdhg_step.py``.
 """
 
 from __future__ import annotations
@@ -38,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .feasibility import greedy_fill, repair_plan
+from .feasibility import cheapest_slots, greedy_fill, repair_plan
 from .plan import Plan
 from .problem import ScheduleProblem
 
@@ -51,7 +53,13 @@ class PDHGConfig:
     omega0: float = 1.0          # initial primal weight
     omega_bounds: tuple[float, float] = (1e-2, 1e2)
     dtype: Any = jnp.float32
-    use_kernel: bool = False     # fused Pallas cell update (interpret on CPU)
+    # Pallas path.  ``use_kernel=None`` auto-selects: kernels on TPU, the
+    # pure-jnp oracle loop elsewhere (interpret mode is for correctness
+    # validation, not speed).  ``kernel_mode="window"`` runs one fused
+    # VMEM-resident launch per restart window (DESIGN.md §2); "step" keeps
+    # the legacy per-iteration cell-update kernel.
+    use_kernel: bool | None = None
+    kernel_mode: str = "window"  # "window" (chunked) | "step" (per-iteration)
     kernel_interpret: bool | None = None  # None -> auto (interpret off-TPU)
 
 
@@ -86,6 +94,40 @@ def _cell_update(x, c, ub, u, v, tau):
     return x_new, x_bar.sum(axis=-1), x_bar.sum(axis=-2)
 
 
+def _window_from_cell(cell_update, b_row, b_col, n_iters: int):
+    """Lift a fused cell update into a full restart window.
+
+    Returns ``run(x, u, v, rs, cs, tau, sigma) -> (x, u, v, rs, cs, ax, au,
+    av)`` executing ``n_iters`` PDHG iterations (dual ascent from the
+    carried x_bar sums, projected primal step, running-sum accumulation).
+    This is the semantics of record for the chunked Pallas window kernels
+    (``repro/kernels/pdhg_window.py``).
+    """
+
+    def run(x, u, v, rs, cs, tau, sigma):
+        def inner(_, carry):
+            x, u, v, rs, cs, ax, au, av = carry
+            u = jnp.maximum(0.0, u + sigma * (b_row - rs))
+            v = jnp.maximum(0.0, v + sigma * (cs - b_col))
+            x, rs, cs = cell_update(x, u, v, tau)
+            return (x, u, v, rs, cs, ax + x, au + u, av + v)
+
+        carry = (x, u, v, rs, cs,
+                 jnp.zeros_like(x), jnp.zeros_like(u), jnp.zeros_like(v))
+        return jax.lax.fori_loop(0, n_iters, inner, carry)
+
+    return run
+
+
+def pdhg_window_ref(x, c, ub, u, v, rs, cs, b_row, b_col, tau, sigma,
+                    n_iters: int):
+    """Pure-jnp restart window (the oracle the Pallas kernels must match)."""
+    run = _window_from_cell(
+        lambda x_, u_, v_, t_: _cell_update(x_, c, ub, u_, v_, t_),
+        b_row, b_col, n_iters)
+    return run(x, u, v, rs, cs, tau, sigma)
+
+
 def _kkt(c, ub, b_row, b_col, x, u, v):
     """(primal_residual, duality_gap, primal_obj) — all normalized."""
     rs = x.sum(axis=-1)
@@ -104,9 +146,16 @@ def _kkt(c, ub, b_row, b_col, x, u, v):
     return pr, gap, primal_obj
 
 
+def _resolve_use_kernel(use_kernel: bool | None) -> bool:
+    if use_kernel is None:
+        return jax.default_backend() == "tpu"
+    return use_kernel
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("max_iters", "check_every", "use_kernel", "kernel_interpret"),
+    static_argnames=("max_iters", "check_every", "use_kernel", "kernel_mode",
+                     "kernel_interpret"),
 )
 def pdhg_solve(
     c,
@@ -120,35 +169,48 @@ def pdhg_solve(
     omega0: float = 1.0,
     omega_lo: float = 1e-2,
     omega_hi: float = 1e2,
-    use_kernel: bool = False,
+    use_kernel: bool | None = None,
+    kernel_mode: str = "window",
     kernel_interpret: bool | None = None,
 ):
-    """Core solver on normalized tensors. Returns (x, diagnostics dict)."""
+    """Core solver on normalized tensors. Returns (x, diagnostics dict).
+
+    The hot loop advances one restart window at a time.  With the chunked
+    kernel (``use_kernel`` + ``kernel_mode="window"``) each window is ONE
+    ``pallas_call`` holding the whole problem in VMEM; the "step" mode is
+    the legacy per-iteration cell-update kernel; the jnp path is the
+    oracle.  All three share the identical window/restart math.
+    """
     dtype = c.dtype
     n_jobs, n_slots = c.shape
     row_nnz = jnp.max(jnp.sum(ub > 0, axis=1)).astype(dtype)
     col_nnz = jnp.max(jnp.sum(ub > 0, axis=0)).astype(dtype)
     k_norm = jnp.sqrt(2.0 * jnp.maximum(row_nnz, col_nnz)) + 1e-6
 
-    if use_kernel:
+    if kernel_mode not in ("window", "step"):
+        raise ValueError(f"unknown kernel_mode {kernel_mode!r} "
+                         "(expected 'window' or 'step')")
+    use_kernel = _resolve_use_kernel(use_kernel)
+    if use_kernel and kernel_mode == "window":
         from repro.kernels import ops as kops  # local import: kernels are optional
+
+        def run_window(x, u, v, rsb, csb, tau, sigma):
+            return kops.pdhg_window(
+                x, c, ub, u, v, rsb, csb, b_row, b_col, tau, sigma,
+                n_iters=check_every, interpret=kernel_interpret)
+    elif use_kernel:
+        from repro.kernels import ops as kops
 
         def cell_update(x, u, v, tau):
             return kops.pdhg_cell_update(
                 x, c, ub, u, v, tau, interpret=kernel_interpret
             )
-    else:
-        def cell_update(x, u, v, tau):
-            return _cell_update(x, c, ub, u, v, tau)
 
-    def inner_step(_, carry):
-        x, u, v, rsb, csb, ax, au, av, omega = carry
-        sigma = 1.0 / (omega * k_norm)
-        tau = omega / k_norm
-        u = jnp.maximum(0.0, u + sigma * (b_row - rsb))
-        v = jnp.maximum(0.0, v + sigma * (csb - b_col))
-        x, rsb, csb = cell_update(x, u, v, tau)
-        return (x, u, v, rsb, csb, ax + x, au + u, av + v, omega)
+        run_window = _window_from_cell(cell_update, b_row, b_col, check_every)
+    else:
+        run_window = _window_from_cell(
+            lambda x, u, v, tau: _cell_update(x, c, ub, u, v, tau),
+            b_row, b_col, check_every)
 
     def outer_cond(state):
         _, _, _, _, _, _, _, _, _, it, done, _, _ = state
@@ -156,13 +218,10 @@ def pdhg_solve(
 
     def outer_body(state):
         x, u, v, rsb, csb, _, _, _, omega, it, _, _, _ = state
-        zero_x = jnp.zeros_like(x)
-        zero_u = jnp.zeros_like(u)
-        zero_v = jnp.zeros_like(v)
-        x, u, v, rsb, csb, ax, au, av, omega = jax.lax.fori_loop(
-            0, check_every, inner_step,
-            (x, u, v, rsb, csb, zero_x, zero_u, zero_v, omega),
-        )
+        sigma = 1.0 / (omega * k_norm)
+        tau = omega / k_norm
+        x, u, v, rsb, csb, ax, au, av = run_window(
+            x, u, v, rsb, csb, tau, sigma)
         inv = 1.0 / check_every
         xa, ua, va = ax * inv, au * inv, av * inv
         pr_c, gap_c, _ = _kkt(c, ub, b_row, b_col, x, u, v)
@@ -212,6 +271,7 @@ def solve_pdhg(problem: ScheduleProblem, config: PDHGConfig = PDHGConfig()) -> P
         omega_lo=config.omega_bounds[0],
         omega_hi=config.omega_bounds[1],
         use_kernel=config.use_kernel,
+        kernel_mode=config.kernel_mode,
         kernel_interpret=config.kernel_interpret,
     )
     rho = np.asarray(x, dtype=np.float64) * problem.rate_cap_bps
@@ -244,12 +304,10 @@ def vertex_round(problem: ScheduleProblem, plan: Plan, keep_frac: float = 0.95) 
     rho = np.asarray(plan.rho_bps, dtype=np.float64)
     kept = np.where(rho >= keep_frac * problem.rate_cap_bps, rho, 0.0)
 
-    def cheapest(i: int):
-        cols = np.nonzero(problem.mask[i])[0]
-        return cols[np.argsort(problem.cost[i, cols], kind="stable")]
-
+    ranked = cheapest_slots(problem)
     order = np.argsort(problem.deadlines, kind="stable")
-    rounded = greedy_fill(problem, order, cheapest, rho_init=kept, strict=True)
+    rounded = greedy_fill(problem, order, ranked.__getitem__,
+                          rho_init=kept, strict=True)
     meta = dict(plan.meta)
     meta["vertex_rounded"] = True
     meta["objective_rounded"] = float((problem.cost * rounded).sum())
@@ -258,16 +316,116 @@ def vertex_round(problem: ScheduleProblem, plan: Plan, keep_frac: float = 0.95) 
 
 # Batched scheduling: one call plans transfers for many independent paths /
 # datacenter pairs at once (the "scaling decisions" story at fleet scale).
-@functools.partial(jax.jit, static_argnames=("max_iters", "check_every", "tol"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_iters", "check_every", "use_kernel",
+                     "kernel_interpret"),
+)
 def pdhg_solve_batch(c, ub, b_row, b_col, *, max_iters=60_000, check_every=250,
-                     tol=3e-5):
-    solver = functools.partial(
-        pdhg_solve.__wrapped__,  # un-jitted core; vmap then jit once
-        max_iters=max_iters, check_every=check_every, tol=tol,
+                     tol=3e-5, omega0=1.0, omega_lo=1e-2, omega_hi=1e2,
+                     use_kernel: bool | None = None,
+                     kernel_interpret: bool | None = None):
+    """Solve a fleet of same-shape LPs with per-problem early exit.
+
+    Unlike a plain ``vmap(pdhg_solve)`` — whose while_loop runs every lane
+    until the *slowest* problem converges, burning ``max_iters`` across the
+    whole vmap — this drives the restart loop per problem: each LP stops
+    accruing iterations the window after its KKT residuals pass ``tol``.
+    On the kernel path an already-converged LP skips its whole window
+    inside the batched Pallas launch via ``pl.when``; on the jnp path its
+    state is frozen (masked) between windows.
+
+    Returns ``(x, diag)`` where every diagnostic is per-problem: ``x``
+    (B, n, m) and ``diag`` with ``iterations``/``primal_residual``/``gap``/
+    ``converged``/``omega`` of shape (B,).
+    """
+    dtype = c.dtype
+    bsz, n_jobs, n_slots = c.shape
+    row_nnz = jnp.max(jnp.sum(ub > 0, axis=2), axis=1).astype(dtype)
+    col_nnz = jnp.max(jnp.sum(ub > 0, axis=1), axis=1).astype(dtype)
+    k_norm = jnp.sqrt(2.0 * jnp.maximum(row_nnz, col_nnz)) + 1e-6  # (B,)
+
+    use_kernel = _resolve_use_kernel(use_kernel)
+    if use_kernel:
+        from repro.kernels.pdhg_window import fused_window_fits
+
+        if not fused_window_fits(n_jobs, n_slots, jnp.dtype(dtype).itemsize):
+            use_kernel = False  # per-problem tile exceeds VMEM budget
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        def run_window(x, u, v, rs, cs, tau, sigma, done):
+            return kops.pdhg_window_batched(
+                x, c, ub, u, v, rs, cs, b_row, b_col, tau, sigma, done,
+                n_iters=check_every, interpret=kernel_interpret)
+    else:
+        def run_window(x, u, v, rs, cs, tau, sigma, done):
+            def one(xi, ci, ubi, ui, vi, rsi, csi, bri, bci, ti, si):
+                return pdhg_window_ref(xi, ci, ubi, ui, vi, rsi, csi,
+                                       bri, bci, ti, si, check_every)
+
+            return jax.vmap(one)(x, c, ub, u, v, rs, cs, b_row, b_col,
+                                 tau, sigma)
+
+    kkt_all = jax.vmap(_kkt)
+
+    def outer_cond(state):
+        done, it_glob = state[9], state[10]
+        return jnp.logical_and(jnp.any(~done), it_glob < max_iters)
+
+    def outer_body(state):
+        x, u, v, rs, cs, omega, iters, pr, gap, done, it_glob = state
+        tau = omega / k_norm
+        sigma = 1.0 / (omega * k_norm)
+        nx, nu, nv, nrs, ncs, ax, au, av = run_window(
+            x, u, v, rs, cs, tau, sigma, done)
+        inv = 1.0 / check_every
+        xa, ua, va = ax * inv, au * inv, av * inv
+        pr_c, gap_c, _ = kkt_all(c, ub, b_row, b_col, nx, nu, nv)
+        pr_a, gap_a, _ = kkt_all(c, ub, b_row, b_col, xa, ua, va)
+        take_avg = jnp.maximum(pr_a, gap_a) < jnp.maximum(pr_c, gap_c)  # (B,)
+
+        def sel(flag, a, b):
+            return jnp.where(flag.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
+
+        nx = sel(take_avg, xa, nx)
+        nu = sel(take_avg, ua, nu)
+        nv = sel(take_avg, va, nv)
+        npr = jnp.where(take_avg, pr_a, pr_c)
+        ngap = jnp.where(take_avg, gap_a, gap_c)
+        ratio = jnp.sqrt((ngap + 1e-12) / (npr + 1e-12))
+        nomega = jnp.clip(omega * jnp.clip(ratio, 0.5, 2.0),
+                          omega_lo, omega_hi)
+        nrs = sel(take_avg, nx.sum(axis=2), nrs)
+        ncs = sel(take_avg, nx.sum(axis=1), ncs)
+        # Freeze problems that had already converged before this window.
+        x = sel(done, x, nx)
+        u = sel(done, u, nu)
+        v = sel(done, v, nv)
+        rs = sel(done, rs, nrs)
+        cs = sel(done, cs, ncs)
+        omega = jnp.where(done, omega, nomega)
+        pr = jnp.where(done, pr, npr)
+        gap = jnp.where(done, gap, ngap)
+        iters = iters + jnp.where(done, 0, check_every)
+        done = jnp.logical_or(done, jnp.logical_and(pr < tol, gap < tol))
+        return (x, u, v, rs, cs, omega, iters, pr, gap, done,
+                it_glob + check_every)
+
+    x0 = jnp.zeros((bsz, n_jobs, n_slots), dtype)
+    u0 = jnp.zeros((bsz, n_jobs), dtype)
+    v0 = jnp.zeros((bsz, n_slots), dtype)
+    state = (
+        x0, u0, v0, jnp.zeros((bsz, n_jobs), dtype),
+        jnp.zeros((bsz, n_slots), dtype),
+        jnp.full((bsz,), omega0, dtype),
+        jnp.zeros((bsz,), jnp.int32),
+        jnp.full((bsz,), jnp.inf, dtype), jnp.full((bsz,), jnp.inf, dtype),
+        jnp.zeros((bsz,), bool), jnp.asarray(0, jnp.int32),
     )
-
-    def one(ci, ubi, bri, bci):
-        x, d = solver(ci, ubi, bri, bci)
-        return x, (d["iterations"], d["primal_residual"], d["gap"])
-
-    return jax.vmap(one)(c, ub, b_row, b_col)
+    state = jax.lax.while_loop(outer_cond, outer_body, state)
+    x, iters, pr, gap, done, omega = (state[0], state[6], state[7], state[8],
+                                      state[9], state[5])
+    return x, {"iterations": iters, "primal_residual": pr, "gap": gap,
+               "converged": done, "omega": omega}

@@ -3,7 +3,9 @@
 The paper's compute is its LP solve and its emissions simulator; both reduce
 to one-pass (jobs x slots) tile pipelines on TPU (see DESIGN.md §2):
 
-  pdhg_step   fused PDHG primal update + partial row/col reductions
+  pdhg_window chunked VMEM-resident PDHG: one launch per restart window
+              (fused / batched-with-early-exit / row-tiled fallback)
+  pdhg_step   legacy per-iteration fused primal update + partial reductions
   emissions   fused plan -> gCO2 evaluation (Eqs. 3-4 + trace weighting)
 
 ``ops`` holds the jit'd public wrappers, ``ref`` the pure-jnp oracles used

@@ -12,6 +12,7 @@ import jax
 from ..core.power import PowerModel
 from . import emissions as _emissions
 from . import pdhg_step as _pdhg_step
+from . import pdhg_window as _pdhg_window
 
 
 def _auto_interpret(interpret: bool | None) -> bool:
@@ -24,6 +25,28 @@ def pdhg_cell_update(x, c, ub, u, v, tau, *, interpret: bool | None = None):
     """Fused PDHG primal update; returns (x_new, row_sum(xbar), col_sum(xbar))."""
     return _pdhg_step.pdhg_cell_update_pallas(
         x, c, ub, u, v, tau, interpret=_auto_interpret(interpret)
+    )
+
+
+def pdhg_window(x, c, ub, u, v, rs, cs, b_row, b_col, tau, sigma, *,
+                n_iters: int, interpret: bool | None = None):
+    """Chunked PDHG: one full restart window (``n_iters`` iterations) per
+    launch, VMEM-resident (fused) or row-tiled, auto-selected from shape.
+
+    Returns (x, u, v, rs, cs, ax, au, av); ax/au/av are window sums."""
+    return _pdhg_window.pdhg_window(
+        x, c, ub, u, v, rs, cs, b_row, b_col, tau, sigma,
+        n_iters=n_iters, interpret=_auto_interpret(interpret)
+    )
+
+
+def pdhg_window_batched(x, c, ub, u, v, rs, cs, b_row, b_col, tau, sigma,
+                        done, *, n_iters: int, interpret: bool | None = None):
+    """Batched (fleet) chunked PDHG window; ``done`` (B,) problems skip
+    their window via ``pl.when`` and pass their carry through unchanged."""
+    return _pdhg_window.pdhg_window_batched_pallas(
+        x, c, ub, u, v, rs, cs, b_row, b_col, tau, sigma, done,
+        n_iters=n_iters, interpret=_auto_interpret(interpret)
     )
 
 

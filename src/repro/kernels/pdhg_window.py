@@ -1,0 +1,478 @@
+"""Pallas TPU kernels: chunked, VMEM-resident PDHG restart windows.
+
+The per-iteration kernel in ``pdhg_step.py`` fuses the primal half of ONE
+PDHG iteration and is relaunched every iteration — x, c, ub and the duals
+round-trip HBM ``check_every`` times per restart window.  But the paper-scale
+LP (200 jobs x 288 slots, f32) is ~230 KB per tensor: the *entire* problem
+fits in VMEM.  The kernels here therefore execute a whole restart window
+(``n_iters`` = ``check_every`` ~ 100-250 iterations) inside one
+``pallas_call`` via an in-kernel ``jax.lax.fori_loop``, holding x, c, ub,
+the duals (u, v), the x_bar row/col sums, and the running-average
+accumulators (ax, au, av) in VMEM throughout.  One launch and one HBM
+round-trip per window instead of ``check_every`` launches and >= 3 HBM
+passes per iteration.  See DESIGN.md §2 for the VMEM budget math and the
+tiling decision rule.
+
+Three variants, selected automatically from the problem shape:
+
+  fused    whole problem in one VMEM tile, grid=() — the default for
+           paper-scale problems.
+  batched  grid over the fleet axis, one LP per grid step; a per-problem
+           convergence flag lets already-converged LPs skip their window
+           via ``pl.when`` (the fleet-scale early-exit path).
+  tiled    row-tiled fallback for problems whose (jobs x slots) plane
+           exceeds the single-tile VMEM budget: grid=(n_iters, n_row_tiles)
+           with the column-dual state and the x_bar column partial sums
+           carried across the grid in VMEM scratch.
+
+Window semantics (identical to the jnp oracle ``core.pdhg.pdhg_window_ref``;
+u/v/rs/cs enter as the carries of the previous window):
+
+    repeat n_iters times:
+        u  <- max(0, u + sigma * (b_row - rs))
+        v  <- max(0, v + sigma * (cs - b_col))
+        x  <- clip(x - tau * (c - u 1^T + 1 v^T), 0, ub)
+        rs <- row_sum(2x' - x);  cs <- col_sum(2x' - x)
+        ax += x;  au += u;  av += v
+
+Padding: rows/cols are padded to layout-native multiples with ub = 0 and
+b_row = 0, so padded cells stay exactly 0 and padded duals never activate
+(b_col > 0 keeps padded column duals at 0).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Layout-native padding for f32: sublane multiple 8, lane multiple 128.
+SUBLANE = 8
+LANE = 128
+
+# Conservative single-core budget: ~16 MiB VMEM on v5e, halved for
+# double-buffering headroom and compiler temporaries.
+DEFAULT_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+# Matrix-sized buffers resident in the fused kernel: x/c/ub inputs,
+# x/ax outputs, plus ~3 fori_loop temporaries (g, x_new, x_bar).
+_RESIDENT_MATS = 8
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def fused_window_fits(
+    n: int, m: int, itemsize: int = 4,
+    budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
+) -> bool:
+    """True when one LP's working set fits a single VMEM tile."""
+    n_pad = _round_up(max(n, 1), SUBLANE)
+    m_pad = _round_up(max(m, 1), LANE)
+    return _RESIDENT_MATS * n_pad * m_pad * itemsize <= budget_bytes
+
+
+def _pick_block_r(n_pad: int, m_pad: int, itemsize: int,
+                  budget_bytes: int) -> int:
+    """Largest sublane-multiple row tile whose working set fits the budget."""
+    block_r = (budget_bytes // (_RESIDENT_MATS * m_pad * itemsize)) // SUBLANE * SUBLANE
+    return int(max(SUBLANE, min(block_r, n_pad)))
+
+
+def _window_body(x, u, v, rs, cs, ax, au, av, *, c, ub, b_row, b_col,
+                 tau, sigma):
+    """One PDHG iteration on 2D tiles (u/rs are (n,1); v/cs are (1,m))."""
+    u = jnp.maximum(0.0, u + sigma * (b_row - rs))
+    v = jnp.maximum(0.0, v + sigma * (cs - b_col))
+    x_new = jnp.clip(x - tau * (c - u + v), 0.0, ub)
+    x_bar = 2.0 * x_new - x
+    rs = jnp.sum(x_bar, axis=-1, keepdims=True)
+    cs = jnp.sum(x_bar, axis=-2, keepdims=True)
+    return x_new, u, v, rs, cs, ax + x_new, au + u, av + v
+
+
+# ---------------------------------------------------------------------------
+# Fused variant: whole problem VMEM-resident, one launch per window.
+# ---------------------------------------------------------------------------
+
+def _fused_window_kernel(tau_ref, sigma_ref, bcol_ref,
+                         x_ref, c_ref, ub_ref, u_ref, v_ref, rs_ref, cs_ref,
+                         brow_ref,
+                         x_out, u_out, v_out, rs_out, cs_out,
+                         ax_out, au_out, av_out, *, n_iters: int):
+    step = functools.partial(
+        _window_body,
+        c=c_ref[...], ub=ub_ref[...], b_row=brow_ref[...],
+        b_col=bcol_ref[0, 0], tau=tau_ref[0, 0], sigma=sigma_ref[0, 0],
+    )
+    x = x_ref[...]
+    u = u_ref[...]
+    v = v_ref[...]
+    carry = (x, u, v, rs_ref[...], cs_ref[...],
+             jnp.zeros_like(x), jnp.zeros_like(u), jnp.zeros_like(v))
+    x, u, v, rs, cs, ax, au, av = jax.lax.fori_loop(
+        0, n_iters, lambda _, s: step(*s), carry)
+    x_out[...] = x
+    u_out[...] = u
+    v_out[...] = v
+    rs_out[...] = rs
+    cs_out[...] = cs
+    ax_out[...] = ax
+    au_out[...] = au
+    av_out[...] = av
+
+
+def _pad_problem(x, c, ub, u, v, rs, cs, b_row):
+    n, m = x.shape
+    n_pad = _round_up(max(n, 1), SUBLANE)
+    m_pad = _round_up(max(m, 1), LANE)
+
+    def pad2(a):
+        return jnp.pad(a, ((0, n_pad - n), (0, m_pad - m)))
+
+    def col(a):  # (n,) -> (n_pad, 1)
+        return jnp.pad(a, (0, n_pad - n))[:, None]
+
+    def row(a):  # (m,) -> (1, m_pad)
+        return jnp.pad(a, (0, m_pad - m))[None, :]
+
+    return (pad2(x), pad2(c), pad2(ub), col(u), row(v), col(rs), row(cs),
+            col(b_row), n_pad, m_pad)
+
+
+def _scal(val, dtype):
+    return jnp.asarray(val, dtype).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "interpret"))
+def pdhg_window_fused_pallas(x, c, ub, u, v, rs, cs, b_row, b_col, tau,
+                             sigma, *, n_iters: int, interpret: bool = True):
+    """One restart window, whole problem VMEM-resident (single launch).
+
+    Shapes: x/c/ub (n, m); u/rs/b_row (n,); v/cs (m,); b_col/tau/sigma
+    scalars.  Returns (x, u, v, rs, cs, ax, au, av) with vectors squeezed
+    back to 1D — the sums ax/au/av are window *sums* (divide by n_iters for
+    the running average).
+    """
+    n, m = x.shape
+    dt = x.dtype
+    xp, cp, ubp, up, vp, rsp, csp, brp, n_pad, m_pad = _pad_problem(
+        x, c, ub, u, v, rs, cs, b_row)
+
+    mat = pl.BlockSpec((n_pad, m_pad), lambda: (0, 0))
+    cvec = pl.BlockSpec((n_pad, 1), lambda: (0, 0))
+    rvec = pl.BlockSpec((1, m_pad), lambda: (0, 0))
+    one = pl.BlockSpec((1, 1), lambda: (0, 0))
+
+    outs = pl.pallas_call(
+        functools.partial(_fused_window_kernel, n_iters=n_iters),
+        grid=(),
+        in_specs=[one, one, one, mat, mat, mat, cvec, rvec, cvec, rvec, cvec],
+        out_specs=[mat, cvec, rvec, cvec, rvec, mat, cvec, rvec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, m_pad), dt),   # x
+            jax.ShapeDtypeStruct((n_pad, 1), dt),       # u
+            jax.ShapeDtypeStruct((1, m_pad), dt),       # v
+            jax.ShapeDtypeStruct((n_pad, 1), dt),       # rs
+            jax.ShapeDtypeStruct((1, m_pad), dt),       # cs
+            jax.ShapeDtypeStruct((n_pad, m_pad), dt),   # ax
+            jax.ShapeDtypeStruct((n_pad, 1), dt),       # au
+            jax.ShapeDtypeStruct((1, m_pad), dt),       # av
+        ],
+        interpret=interpret,
+    )(_scal(tau, dt), _scal(sigma, dt), _scal(b_col, dt),
+      xp, cp, ubp, up, vp, rsp, csp, brp)
+    xo, uo, vo, rso, cso, axo, auo, avo = outs
+    return (xo[:n, :m], uo[:n, 0], vo[0, :m], rso[:n, 0], cso[0, :m],
+            axo[:n, :m], auo[:n, 0], avo[0, :m])
+
+
+# ---------------------------------------------------------------------------
+# Batched variant: grid over the fleet axis, per-problem early exit.
+# ---------------------------------------------------------------------------
+
+def _batched_window_kernel(tau_ref, sigma_ref, bcol_ref, flag_ref,
+                           x_ref, c_ref, ub_ref, u_ref, v_ref, rs_ref,
+                           cs_ref, brow_ref,
+                           x_out, u_out, v_out, rs_out, cs_out,
+                           ax_out, au_out, av_out, *, n_iters: int):
+    active = flag_ref[0, 0] == 0
+
+    @pl.when(active)
+    def _run():
+        step = functools.partial(
+            _window_body,
+            c=c_ref[0], ub=ub_ref[0], b_row=brow_ref[0],
+            b_col=bcol_ref[0, 0], tau=tau_ref[0, 0], sigma=sigma_ref[0, 0],
+        )
+        x = x_ref[0]
+        u = u_ref[0]
+        v = v_ref[0]
+        carry = (x, u, v, rs_ref[0], cs_ref[0],
+                 jnp.zeros_like(x), jnp.zeros_like(u), jnp.zeros_like(v))
+        x, u, v, rs, cs, ax, au, av = jax.lax.fori_loop(
+            0, n_iters, lambda _, s: step(*s), carry)
+        x_out[0] = x
+        u_out[0] = u
+        v_out[0] = v
+        rs_out[0] = rs
+        cs_out[0] = cs
+        ax_out[0] = ax
+        au_out[0] = au
+        av_out[0] = av
+
+    @pl.when(jnp.logical_not(active))
+    def _skip():
+        # Converged LP: pass the carry through untouched, skip all n_iters.
+        x_out[0] = x_ref[0]
+        u_out[0] = u_ref[0]
+        v_out[0] = v_ref[0]
+        rs_out[0] = rs_ref[0]
+        cs_out[0] = cs_ref[0]
+        ax_out[0] = jnp.zeros_like(x_ref[0])
+        au_out[0] = jnp.zeros_like(u_ref[0])
+        av_out[0] = jnp.zeros_like(v_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "interpret"))
+def pdhg_window_batched_pallas(x, c, ub, u, v, rs, cs, b_row, b_col, tau,
+                               sigma, done, *, n_iters: int,
+                               interpret: bool = True):
+    """One restart window for a fleet of same-shape LPs (grid over batch).
+
+    Shapes: x/c/ub (B, n, m); u/rs/b_row (B, n); v/cs (B, m); b_col/tau/
+    sigma (B,); done (B,) bool — problems with ``done`` skip their window
+    via ``pl.when`` and return their carry unchanged (ax/au/av are zeroed;
+    callers mask converged problems anyway).
+    """
+    bsz, n, m = x.shape
+    dt = x.dtype
+    n_pad = _round_up(max(n, 1), SUBLANE)
+    m_pad = _round_up(max(m, 1), LANE)
+
+    def pad3(a):
+        return jnp.pad(a, ((0, 0), (0, n_pad - n), (0, m_pad - m)))
+
+    def col(a):  # (B, n) -> (B, n_pad, 1)
+        return jnp.pad(a, ((0, 0), (0, n_pad - n)))[..., None]
+
+    def row(a):  # (B, m) -> (B, 1, m_pad)
+        return jnp.pad(a, ((0, 0), (0, m_pad - m)))[:, None, :]
+
+    def svec(a, dtype=dt):  # (B,) -> (B, 1)
+        return jnp.asarray(a, dtype).reshape(bsz, 1)
+
+    mat = pl.BlockSpec((1, n_pad, m_pad), lambda b: (b, 0, 0))
+    cvec = pl.BlockSpec((1, n_pad, 1), lambda b: (b, 0, 0))
+    rvec = pl.BlockSpec((1, 1, m_pad), lambda b: (b, 0, 0))
+    one = pl.BlockSpec((1, 1), lambda b: (b, 0))
+
+    outs = pl.pallas_call(
+        functools.partial(_batched_window_kernel, n_iters=n_iters),
+        grid=(bsz,),
+        in_specs=[one, one, one, one,
+                  mat, mat, mat, cvec, rvec, cvec, rvec, cvec],
+        out_specs=[mat, cvec, rvec, cvec, rvec, mat, cvec, rvec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, n_pad, m_pad), dt),  # x
+            jax.ShapeDtypeStruct((bsz, n_pad, 1), dt),      # u
+            jax.ShapeDtypeStruct((bsz, 1, m_pad), dt),      # v
+            jax.ShapeDtypeStruct((bsz, n_pad, 1), dt),      # rs
+            jax.ShapeDtypeStruct((bsz, 1, m_pad), dt),      # cs
+            jax.ShapeDtypeStruct((bsz, n_pad, m_pad), dt),  # ax
+            jax.ShapeDtypeStruct((bsz, n_pad, 1), dt),      # au
+            jax.ShapeDtypeStruct((bsz, 1, m_pad), dt),      # av
+        ],
+        interpret=interpret,
+    )(svec(tau), svec(sigma), svec(b_col),
+      svec(jnp.asarray(done, jnp.int32), jnp.int32),
+      pad3(x), pad3(c), pad3(ub), col(u), row(v), col(rs), row(cs),
+      col(b_row))
+    xo, uo, vo, rso, cso, axo, auo, avo = outs
+    return (xo[:, :n, :m], uo[:, :n, 0], vo[:, 0, :m], rso[:, :n, 0],
+            cso[:, 0, :m], axo[:, :n, :m], auo[:, :n, 0], avo[:, 0, :m])
+
+
+# ---------------------------------------------------------------------------
+# Tiled fallback: row tiles, col-dual state carried across the grid.
+# ---------------------------------------------------------------------------
+
+def _tiled_window_kernel(tau_ref, sigma_ref, bcol_ref,
+                         x0_ref, c_ref, ub_ref, u0_ref, v0_ref, rs0_ref,
+                         cs0_ref, brow_ref,
+                         x_ref, u_ref, rs_ref, ax_ref, au_ref,
+                         v_out, cs_out, av_out,
+                         v_s, cs_prev_s, cs_acc_s, av_s, *, n_iters: int):
+    """Grid = (n_iters, n_row_tiles), row tile minor (fastest-varying).
+
+    Row-local state (x, u, rs, ax, au) lives in revisited *output* blocks —
+    read-modify-write per step; the full-width column state (v, previous/
+    accumulating col sums of x_bar, av) is carried across the whole grid in
+    VMEM scratch, since the column-dual update needs the complete column
+    sums from the previous iteration (only available after its last tile).
+    """
+    t = pl.program_id(0)
+    i = pl.program_id(1)
+    tau = tau_ref[0, 0]
+    sigma = sigma_ref[0, 0]
+    b_col = bcol_ref[0, 0]
+
+    @pl.when(jnp.logical_and(t == 0, i == 0))
+    def _init_cols():
+        v_s[...] = v0_ref[...]
+        cs_prev_s[...] = cs0_ref[...]
+        av_s[...] = jnp.zeros_like(av_s)
+
+    @pl.when(t == 0)
+    def _init_tile():
+        x_ref[...] = x0_ref[...]
+        u_ref[...] = u0_ref[...]
+        rs_ref[...] = rs0_ref[...]
+        ax_ref[...] = jnp.zeros_like(ax_ref)
+        au_ref[...] = jnp.zeros_like(au_ref)
+
+    @pl.when(jnp.logical_and(t > 0, i == 0))
+    def _roll_cols():
+        cs_prev_s[...] = cs_acc_s[...]
+
+    @pl.when(i == 0)
+    def _dual_col():  # once per iteration, before any tile's primal step
+        v_s[...] = jnp.maximum(0.0, v_s[...] + sigma * (cs_prev_s[...] - b_col))
+        av_s[...] += v_s[...]
+        cs_acc_s[...] = jnp.zeros_like(cs_acc_s)
+
+    u_new = jnp.maximum(
+        0.0, u_ref[...] + sigma * (brow_ref[...] - rs_ref[...]))
+    x = x_ref[...]
+    x_new = jnp.clip(x - tau * (c_ref[...] - u_new + v_s[...]), 0.0,
+                     ub_ref[...])
+    x_bar = 2.0 * x_new - x
+    u_ref[...] = u_new
+    x_ref[...] = x_new
+    rs_ref[...] = jnp.sum(x_bar, axis=1, keepdims=True)
+    cs_acc_s[...] += jnp.sum(x_bar, axis=0, keepdims=True)
+    ax_ref[...] += x_new
+    au_ref[...] += u_new
+
+    @pl.when(jnp.logical_and(t == n_iters - 1, i == pl.num_programs(1) - 1))
+    def _flush_cols():
+        v_out[...] = v_s[...]
+        cs_out[...] = cs_acc_s[...]
+        av_out[...] = av_s[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_iters", "block_r", "interpret"))
+def pdhg_window_tiled_pallas(x, c, ub, u, v, rs, cs, b_row, b_col, tau,
+                             sigma, *, n_iters: int, block_r: int = 128,
+                             interpret: bool = True):
+    """Row-tiled restart window for problems exceeding the VMEM budget.
+
+    Still a single launch per window; x/u/rs/ax/au round-trip HBM once per
+    iteration per row tile (unavoidable when the plane does not fit), but
+    all launch overhead and the dual/accumulator traffic of the
+    per-iteration path is gone.
+    """
+    n, m = x.shape
+    dt = x.dtype
+    block_r = _round_up(block_r, SUBLANE)
+    m_pad = _round_up(max(m, 1), LANE)
+    nb_r = pl.cdiv(max(n, 1), block_r)
+    n_pad = nb_r * block_r
+
+    def pad2(a):
+        return jnp.pad(a, ((0, n_pad - n), (0, m_pad - m)))
+
+    def col(a):
+        return jnp.pad(a, (0, n_pad - n))[:, None]
+
+    def row(a):
+        return jnp.pad(a, (0, m_pad - m))[None, :]
+
+    tile = pl.BlockSpec((block_r, m_pad), lambda t, i: (i, 0))
+    tcol = pl.BlockSpec((block_r, 1), lambda t, i: (i, 0))
+    frow = pl.BlockSpec((1, m_pad), lambda t, i: (0, 0))
+    one = pl.BlockSpec((1, 1), lambda t, i: (0, 0))
+
+    outs = pl.pallas_call(
+        functools.partial(_tiled_window_kernel, n_iters=n_iters),
+        grid=(n_iters, nb_r),
+        in_specs=[one, one, one,
+                  tile, tile, tile, tcol, frow, tcol, frow, tcol],
+        out_specs=[tile, tcol, tcol, tile, tcol, frow, frow, frow],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, m_pad), dt),   # x
+            jax.ShapeDtypeStruct((n_pad, 1), dt),       # u
+            jax.ShapeDtypeStruct((n_pad, 1), dt),       # rs
+            jax.ShapeDtypeStruct((n_pad, m_pad), dt),   # ax
+            jax.ShapeDtypeStruct((n_pad, 1), dt),       # au
+            jax.ShapeDtypeStruct((1, m_pad), dt),       # v
+            jax.ShapeDtypeStruct((1, m_pad), dt),       # cs
+            jax.ShapeDtypeStruct((1, m_pad), dt),       # av
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, m_pad), dt),   # v
+            pltpu.VMEM((1, m_pad), dt),   # cs from previous iteration
+            pltpu.VMEM((1, m_pad), dt),   # cs accumulating this iteration
+            pltpu.VMEM((1, m_pad), dt),   # av
+        ],
+        interpret=interpret,
+    )(_scal(tau, dt), _scal(sigma, dt), _scal(b_col, dt),
+      pad2(x), pad2(c), pad2(ub), col(u), row(v), col(rs), row(cs),
+      col(b_row))
+    xo, uo, rso, axo, auo, vo, cso, avo = outs
+    return (xo[:n, :m], uo[:n, 0], vo[0, :m], rso[:n, 0], cso[0, :m],
+            axo[:n, :m], auo[:n, 0], avo[0, :m])
+
+
+def _window_via_step_kernel(x, c, ub, u, v, rs, cs, b_row, b_col, tau,
+                            sigma, *, n_iters: int, interpret: bool):
+    """Window loop over the per-iteration cell-update kernel.
+
+    Compiled-mode fallback for problems exceeding the VMEM budget: the
+    tiled window kernel read-modify-writes output blocks that are revisited
+    *non-consecutively* (every ``n_row_tiles`` grid steps), which the
+    Mosaic pipeline does not guarantee to preserve outside interpret mode.
+    Until that kernel is validated on hardware, oversize problems on the
+    compiled path pay per-iteration launches (still row-tiled inside
+    ``pdhg_step``) rather than risk silent corruption.  DESIGN.md §2.
+    """
+    from . import pdhg_step
+
+    def inner(_, carry):
+        x, u, v, rs, cs, ax, au, av = carry
+        u = jnp.maximum(0.0, u + sigma * (b_row - rs))
+        v = jnp.maximum(0.0, v + sigma * (cs - b_col))
+        x, rs, cs = pdhg_step.pdhg_cell_update_pallas(
+            x, c, ub, u, v, tau, interpret=interpret)
+        return (x, u, v, rs, cs, ax + x, au + u, av + v)
+
+    carry = (x, u, v, rs, cs,
+             jnp.zeros_like(x), jnp.zeros_like(u), jnp.zeros_like(v))
+    return jax.lax.fori_loop(0, n_iters, inner, carry)
+
+
+def pdhg_window(x, c, ub, u, v, rs, cs, b_row, b_col, tau, sigma, *,
+                n_iters: int, interpret: bool = True,
+                vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES):
+    """Auto-selecting single-problem window: fused if it fits, else tiled."""
+    n, m = x.shape
+    itemsize = jnp.dtype(x.dtype).itemsize
+    if fused_window_fits(n, m, itemsize, vmem_budget_bytes):
+        return pdhg_window_fused_pallas(
+            x, c, ub, u, v, rs, cs, b_row, b_col, tau, sigma,
+            n_iters=n_iters, interpret=interpret)
+    if not interpret:
+        return _window_via_step_kernel(
+            x, c, ub, u, v, rs, cs, b_row, b_col, tau, sigma,
+            n_iters=n_iters, interpret=interpret)
+    m_pad = _round_up(max(m, 1), LANE)
+    n_pad = _round_up(max(n, 1), SUBLANE)
+    block_r = _pick_block_r(n_pad, m_pad, itemsize, vmem_budget_bytes)
+    return pdhg_window_tiled_pallas(
+        x, c, ub, u, v, rs, cs, b_row, b_col, tau, sigma,
+        n_iters=n_iters, block_r=block_r, interpret=interpret)

@@ -29,6 +29,21 @@ def pdhg_cell_update_ref(x, c, ub, u, v, tau):
     return x_new, x_bar.sum(axis=1), x_bar.sum(axis=0)
 
 
+def pdhg_window_ref(x, c, ub, u, v, rs, cs, b_row, b_col, tau, sigma,
+                    n_iters: int):
+    """Oracle for the chunked window kernels: ``n_iters`` fused PDHG
+    iterations (dual ascent + projected primal step + x_bar reductions +
+    running-sum accumulation).  Delegates to the solver's own jnp loop —
+    the semantics of record live in ``core.pdhg`` so the solver's
+    ``use_kernel=False`` path and this oracle cannot drift apart.
+
+    Returns (x, u, v, rs, cs, ax, au, av); ax/au/av are window sums.
+    """
+    from ..core.pdhg import pdhg_window_ref as impl  # lazy: avoid import cycle
+
+    return impl(x, c, ub, u, v, rs, cs, b_row, b_col, tau, sigma, n_iters)
+
+
 def emissions_total_ref(
     rho_gbps,
     cost,

@@ -6,6 +6,8 @@ heuristic's objective on every feasible workload — exact, not statistical.
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep: skip module cleanly when absent
 from hypothesis import given, settings, strategies as st
 
 from conftest import random_problem

@@ -7,6 +7,8 @@ random problems.
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep: skip module cleanly when absent
 from hypothesis import given, settings, strategies as st
 
 from conftest import random_problem

@@ -1,0 +1,291 @@
+"""Chunked VMEM-resident PDHG window kernels vs the jnp oracle.
+
+Parity contract: after a full restart window (K fused iterations) the
+kernel's carry — current iterate, duals, x_bar row/col sums, and the
+running-sum accumulators — matches ``ref.pdhg_window_ref`` (which delegates
+to the solver's own ``use_kernel=False`` loop, so the oracle cannot drift
+from the solver).  All kernels run in interpret mode on CPU.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pdhg import PDHGConfig, pdhg_solve, pdhg_solve_batch, solve_pdhg
+from repro.core.scipy_backend import solve_scipy
+from repro.kernels import ops, ref
+from repro.kernels.pdhg_window import (
+    fused_window_fits,
+    pdhg_window_fused_pallas,
+    pdhg_window_tiled_pallas,
+)
+
+# Odd / non-block-multiple shapes on purpose: the wrappers pad to
+# layout-native multiples and padding must be value-neutral.
+SHAPES = [(3, 7), (24, 96), (50, 288), (129, 257), (200, 288)]
+WINDOW = 120
+
+
+def _mk_window_state(rng, n, m):
+    ub = jnp.asarray((rng.uniform(0, 1, (n, m)) > 0.3).astype(np.float32))
+    x = jnp.asarray(rng.uniform(0, 1, (n, m)).astype(np.float32)) * ub
+    c = jnp.asarray(rng.uniform(0, 3, (n, m)).astype(np.float32)) * ub
+    u = jnp.asarray(rng.uniform(0, 2, n).astype(np.float32))
+    v = jnp.asarray(rng.uniform(0, 2, m).astype(np.float32))
+    rs = x.sum(axis=1)
+    cs = x.sum(axis=0)
+    b_row = jnp.asarray(rng.uniform(0.1, 2, n).astype(np.float32))
+    b_col = jnp.float32(2.5)
+    return x, c, ub, u, v, rs, cs, b_row, b_col
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fused_window_matches_oracle(shape):
+    rng = np.random.default_rng(sum(shape))
+    state = _mk_window_state(rng, *shape)
+    want = ref.pdhg_window_ref(*state, 0.05, 0.04, WINDOW)
+    got = pdhg_window_fused_pallas(*state, 0.05, 0.04, n_iters=WINDOW,
+                                   interpret=True)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=5e-5, atol=5e-5)
+
+
+@pytest.mark.parametrize("shape", [(24, 96), (129, 257), (200, 288)])
+def test_tiled_window_matches_oracle(shape):
+    """Row-tiled fallback: col-dual state carried across the grid."""
+    rng = np.random.default_rng(sum(shape) + 1)
+    state = _mk_window_state(rng, *shape)
+    want = ref.pdhg_window_ref(*state, 0.05, 0.04, WINDOW)
+    got = pdhg_window_tiled_pallas(*state, 0.05, 0.04, n_iters=WINDOW,
+                                   block_r=8, interpret=True)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_auto_select_tiled_under_tight_budget():
+    """The dispatcher routes to the tiled kernel when the budget is tiny."""
+    from repro.kernels import pdhg_window as W
+
+    rng = np.random.default_rng(7)
+    state = _mk_window_state(rng, 64, 256)
+    budget = 64 * 1024  # force tiling: 64x256 f32 plane alone is 64 KiB
+    assert not fused_window_fits(64, 256, 4, budget)
+    got = W.pdhg_window(*state, 0.05, 0.04, n_iters=40, interpret=True,
+                        vmem_budget_bytes=budget)
+    want = ref.pdhg_window_ref(*state, 0.05, 0.04, 40)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_batched_window_matches_vmapped_oracle():
+    rng = np.random.default_rng(11)
+    B, n, m = 3, 24, 96
+    states = [_mk_window_state(rng, n, m) for _ in range(B)]
+    stacked = [jnp.stack([s[k] for s in states]) for k in range(9)]
+    tau = jnp.asarray([0.05, 0.04, 0.06], jnp.float32)
+    sigma = jnp.asarray([0.04, 0.05, 0.03], jnp.float32)
+    done = jnp.zeros((B,), bool)
+    got = ops.pdhg_window_batched(*stacked, tau, sigma, done, n_iters=60,
+                                  interpret=True)
+    want = jax.vmap(lambda *a: ref.pdhg_window_ref(*a, 60))(*stacked, tau,
+                                                            sigma)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=5e-5, atol=5e-5)
+
+
+def test_batched_window_done_lane_passes_carry_through():
+    """A converged LP's window is skipped: carry comes back bit-identical."""
+    rng = np.random.default_rng(13)
+    B, n, m = 3, 16, 64
+    states = [_mk_window_state(rng, n, m) for _ in range(B)]
+    stacked = [jnp.stack([s[k] for s in states]) for k in range(9)]
+    tau = jnp.full((B,), 0.05, jnp.float32)
+    sigma = jnp.full((B,), 0.04, jnp.float32)
+    done = jnp.asarray([False, True, False])
+    got = ops.pdhg_window_batched(*stacked, tau, sigma, done, n_iters=50,
+                                  interpret=True)
+    # lane 1 carry (x, u, v, rs, cs) is untouched
+    carry_in = [stacked[k] for k in (0, 3, 4, 5, 6)]  # x, u, v, rs, cs
+    for g, inp in zip(got[:5], carry_in):
+        np.testing.assert_array_equal(np.asarray(g[1]), np.asarray(inp[1]))
+    # active lanes still match the oracle
+    want = jax.vmap(lambda *a: ref.pdhg_window_ref(*a, 50))(*stacked, tau,
+                                                            sigma)
+    for lane in (0, 2):
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g[lane]),
+                                       np.asarray(w[lane]),
+                                       rtol=5e-5, atol=5e-5)
+
+
+def test_window_kernel_solve_matches_jnp_solve(small_problem):
+    """Full solver: chunked-kernel path == jnp path on the same problem."""
+    from repro.core.pdhg import normalize_problem
+
+    c, ub, br, bc, _ = normalize_problem(small_problem)
+    xj, dj = pdhg_solve(c, ub, br, bc, max_iters=4000, check_every=200,
+                        use_kernel=False)
+    xw, dw = pdhg_solve(c, ub, br, bc, max_iters=4000, check_every=200,
+                        use_kernel=True, kernel_mode="window",
+                        kernel_interpret=True)
+    np.testing.assert_allclose(np.asarray(xw), np.asarray(xj),
+                               rtol=1e-5, atol=1e-5)
+    assert int(dj["iterations"]) == int(dw["iterations"])
+
+
+def test_window_kernel_solver_reaches_scipy_objective(small_problem):
+    """Regression: kernel-path PDHG lands on the HiGHS objective on the
+    paper workload."""
+    ref_plan = solve_scipy(small_problem)
+    got = solve_pdhg(small_problem, PDHGConfig(
+        max_iters=30_000, check_every=200, tol=2e-5,
+        use_kernel=True, kernel_mode="window", kernel_interpret=True))
+    assert got.meta["converged"]
+    assert got.meta["objective"] <= ref_plan.meta["objective"] * 1.005 + 1e-9
+
+
+def test_batched_solve_reports_per_problem_early_exit(small_problem):
+    """Fleet solve: per-problem iteration counts match solo solves (each LP
+    stops accruing iterations once converged, instead of running the
+    fleet-wide max)."""
+    from repro.core.pdhg import normalize_problem
+    from repro.core import problem as prob_mod
+    from repro.core import lints, trace
+
+    traces = trace.make_trace_set(("US-NM", "US-WY", "US-SD"), hours=72,
+                                  seed=0)
+    probs = [lints.build(prob_mod.paper_workload(n_jobs=12, seed=s), traces,
+                         0.5) for s in range(3)]
+    tensors = [normalize_problem(p) for p in probs]
+    stacked = [jnp.stack([t[k] for t in tensors]) for k in range(4)]
+    xs, diag = pdhg_solve_batch(*stacked, max_iters=20_000, check_every=200,
+                                use_kernel=False)
+    assert diag["iterations"].shape == (3,)
+    assert bool(diag["converged"].all())
+    for i, (t, p) in enumerate(zip(tensors, probs)):
+        _, solo = pdhg_solve(*t[:4], max_iters=20_000, check_every=200,
+                             use_kernel=False)
+        assert int(diag["iterations"][i]) == int(solo["iterations"])
+
+
+def test_batched_solve_kernel_path_matches_jnp_path(small_problem):
+    from repro.core.pdhg import normalize_problem
+    from repro.core import problem as prob_mod
+    from repro.core import lints, trace
+
+    traces = trace.make_trace_set(("US-NM", "US-WY", "US-SD"), hours=72,
+                                  seed=0)
+    probs = [lints.build(prob_mod.paper_workload(n_jobs=10, seed=s), traces,
+                         0.5) for s in range(2)]
+    tensors = [normalize_problem(p) for p in probs]
+    stacked = [jnp.stack([t[k] for t in tensors]) for k in range(4)]
+    xj, dj = pdhg_solve_batch(*stacked, max_iters=8000, check_every=200,
+                              use_kernel=False)
+    xk, dk = pdhg_solve_batch(*stacked, max_iters=8000, check_every=200,
+                              use_kernel=True, kernel_interpret=True)
+    np.testing.assert_allclose(np.asarray(xk), np.asarray(xj),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(dk["iterations"]),
+                                  np.asarray(dj["iterations"]))
+
+
+def test_lints_solve_batch_fleet_api(small_problem):
+    from repro.core import lints, problem as prob_mod, trace
+    from repro.core.feasibility import check_plan
+
+    traces = trace.make_trace_set(("US-NM", "US-WY", "US-SD"), hours=72,
+                                  seed=0)
+    probs = [lints.build(prob_mod.paper_workload(n_jobs=8, seed=s), traces,
+                         0.5) for s in range(3)]
+    cfg = lints.LinTSConfig(
+        backend="pdhg",
+        pdhg=PDHGConfig(max_iters=20_000, check_every=200, tol=2e-5,
+                        use_kernel=False))
+    plans = lints.solve_batch(probs, cfg)
+    assert len(plans) == 3
+    for p, plan in zip(probs, plans):
+        assert check_plan(p, plan.rho_bps).feasible
+        assert plan.meta["converged"]
+        assert plan.meta["iterations"] > 0
+
+
+def test_lints_solve_batch_rejects_infeasible_workload(small_problem):
+    from repro.core import lints, trace
+    from repro.core.problem import TransferRequest
+
+    traces = trace.make_trace_set(("US-NM",), hours=72, seed=0)
+    reqs = [TransferRequest(size_gb=1e6, deadline_slots=4,
+                            path=("US-NM",), request_id="huge")]
+    bad = lints.build(reqs, traces, capacity_gbps=0.25)
+    with pytest.raises(lints.InfeasibleError, match="workload 0 infeasible"):
+        lints.solve_batch([bad])
+
+
+def test_lints_solve_batch_honors_refine(small_problem):
+    from repro.core import lints, problem as prob_mod, trace
+    from repro.core.simulator import evaluate_plan
+
+    traces = trace.make_trace_set(("US-NM", "US-WY", "US-SD"), hours=72,
+                                  seed=0)
+    probs = [lints.build(prob_mod.paper_workload(n_jobs=8, seed=s), traces,
+                         0.5) for s in range(2)]
+    pd = PDHGConfig(max_iters=20_000, check_every=200, tol=2e-5,
+                    use_kernel=False)
+    base = lints.solve_batch(probs, lints.LinTSConfig(backend="pdhg",
+                                                      pdhg=pd))
+    refined = lints.solve_batch(
+        probs, lints.LinTSConfig(backend="pdhg", pdhg=pd, refine=True))
+    for p, b, r in zip(probs, base, refined):
+        assert r.algorithm == "lints+"
+        assert (evaluate_plan(p, r).total_gco2
+                <= evaluate_plan(p, b).total_gco2 + 1e-6)
+
+
+def test_compiled_oversize_window_falls_back_to_step_kernel(monkeypatch):
+    """Compiled (non-interpret) + over-budget => per-iteration cell kernel,
+    not the interpret-only tiled window kernel (DESIGN.md §2)."""
+    from repro.kernels import pdhg_window as W
+
+    rng = np.random.default_rng(5)
+    state = _mk_window_state(rng, 32, 128)
+    budget = 16 * 1024  # force the over-budget branch
+
+    called = {"tiled": False}
+    monkeypatch.setattr(
+        W, "pdhg_window_tiled_pallas",
+        lambda *a, **k: called.__setitem__("tiled", True) or None)
+    # interpret=True still uses the tiled kernel (stubbed here)
+    W.pdhg_window(*state, 0.05, 0.04, n_iters=4, interpret=True,
+                  vmem_budget_bytes=budget)
+    assert called["tiled"]
+
+    # interpret=False routes through the step-kernel window instead; run
+    # the step kernel itself in interpret mode so this works on CPU.
+    step_called = {"n": 0}
+    real_step = W._window_via_step_kernel
+
+    def spy(*a, **k):
+        step_called["n"] += 1
+        k["interpret"] = True
+        return real_step(*a, **k)
+
+    monkeypatch.setattr(W, "_window_via_step_kernel", spy)
+    got = W.pdhg_window(*state, 0.05, 0.04, n_iters=4, interpret=False,
+                        vmem_budget_bytes=budget)
+    assert step_called["n"] == 1
+    want = ref.pdhg_window_ref(*state, 0.05, 0.04, 4)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=5e-5, atol=5e-5)
+
+
+def test_kernel_mode_validated():
+    with pytest.raises(ValueError, match="unknown kernel_mode"):
+        pdhg_solve(jnp.zeros((4, 8)), jnp.ones((4, 8)), jnp.ones((4,)),
+                   jnp.float32(1.0), max_iters=100, check_every=50,
+                   kernel_mode="wndow")

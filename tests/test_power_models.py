@@ -2,6 +2,8 @@
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep: skip module cleanly when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.power import DEFAULT_POWER_MODEL, PowerModel

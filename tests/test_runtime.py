@@ -3,6 +3,8 @@
 import jax
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep: skip module cleanly when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.runtime import FailureInjector, HeartbeatMonitor, plan_mesh
