@@ -9,7 +9,7 @@ import numpy as np
 from repro.configs.lints_paper import PAPER
 from repro.core import heuristics, lints
 from repro.core.problem import build_problem, paper_workload
-from repro.core.simulator import evaluate_plan, noisy_costs
+from repro.core.simulator import evaluate_ensemble, evaluate_plan, noisy_costs
 from repro.core.trace import make_trace_set
 
 
@@ -24,17 +24,14 @@ def paper_setup(n_jobs: int | None = None, seed: int = 0):
     return reqs, traces
 
 
-def run_all_algorithms(reqs, traces, capacity_gbps: float, noise: float,
-                       noise_seed: int = 7, backend: str = "scipy"):
-    """Returns {algorithm: EmissionsReport} on the noisy evaluation trace.
+def paper_plans(prob, backend: str = "scipy"):
+    """The paper's algorithm roster as plans for one problem.
 
     Heuristics run best-effort: at 25% capacity the paper's own workload is
     deadline-infeasible for arrival-order scheduling (cf. the empty
     worst-case cell in its Table II); the reports carry sla_violations.
     LinTS itself is solved strictly — the LP is feasible at every capacity.
     """
-    prob = build_problem(reqs, traces, capacity_gbps, PAPER.power)
-    cost_eval = noisy_costs(reqs, traces, noise, seed=noise_seed)
     plans = [lints.solve(prob, lints.LinTSConfig(backend=backend))]
     # Beyond-paper: emission-aware refinement (reported as "lints+").
     plans.append(lints.solve(prob, lints.LinTSConfig(backend=backend,
@@ -46,7 +43,28 @@ def run_all_algorithms(reqs, traces, capacity_gbps: float, noise: float,
     plans.append(heuristics.single_threshold(prob, best_effort=True))
     plans.append(heuristics.double_threshold(prob, alpha=PAPER.dt_alpha,
                                              best_effort=True))
+    return plans
+
+
+def run_all_algorithms(reqs, traces, capacity_gbps: float, noise: float,
+                       noise_seed: int = 7, backend: str = "scipy"):
+    """{algorithm: EmissionsReport} on ONE noisy evaluation draw (legacy
+    single-draw path; prefer :func:`run_all_algorithms_ensemble`)."""
+    prob = build_problem(reqs, traces, capacity_gbps, PAPER.power)
+    cost_eval = noisy_costs(reqs, traces, noise, seed=noise_seed)
+    plans = paper_plans(prob, backend)
     return {p.algorithm: evaluate_plan(prob, p, cost_eval) for p in plans}
+
+
+def run_all_algorithms_ensemble(reqs, traces, capacity_gbps: float,
+                                noise: float, n_draws: int = 32,
+                                noise_seed: int = 7, backend: str = "scipy"):
+    """{algorithm: EnsembleReport} over ``n_draws`` Monte-Carlo noise draws
+    (mean/std/95% CI instead of one arbitrary draw per cell)."""
+    prob = build_problem(reqs, traces, capacity_gbps, PAPER.power)
+    plans = paper_plans(prob, backend)
+    return evaluate_ensemble(prob, plans, noise, n_draws,
+                             requests=reqs, traces=traces, seed=noise_seed)
 
 
 def timed(fn, *args, repeats: int = 1, **kw):

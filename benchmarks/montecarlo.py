@@ -1,0 +1,108 @@
+"""Monte-Carlo evaluation bench: batched ensemble vs looped evaluate_plan.
+
+Measures the tentpole claim of the evaluation subsystem (DESIGN.md §8): an
+(n_plans x n_draws) ensemble scored in one batched pass must beat the
+equivalent python loop of per-draw ``evaluate_plan`` calls, at <=1e-6
+relative parity on every per-draw total.  The batched Pallas kernel is
+also run in interpret parity mode (correctness on CPU; the compiled path
+is the TPU fast path) and its f32-vs-f64 error recorded.
+
+Emits machine-readable ``BENCH_sim.json`` at the repo root so the perf
+trajectory is tracked PR-over-PR (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core import heuristics, montecarlo
+from repro.core.problem import build_problem
+from repro.core.simulator import evaluate_ensemble, evaluate_plan
+
+from .common import csv_line, paper_setup, timed
+
+_BENCH_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_sim.json"
+
+
+def _plans(prob):
+    return [
+        heuristics.fcfs(prob, best_effort=True),
+        heuristics.edf(prob, best_effort=True),
+        heuristics.worst_case(prob, best_effort=True),
+        heuristics.single_threshold(prob, best_effort=True),
+        heuristics.double_threshold(prob, best_effort=True),
+    ]
+
+
+def run(n_jobs: int = 60, n_draws: int = 32, sigma: float = 0.15,
+        quiet: bool = False) -> list[str]:
+    reqs, traces = paper_setup(n_jobs)
+    prob = build_problem(reqs, traces, 0.5)
+    plans = _plans(prob)
+
+    cost_draws, us_draws = timed(montecarlo.draw_noisy_costs, reqs, traces,
+                                 sigma, n_draws, 7)
+
+    def looped():
+        return np.array([
+            [evaluate_plan(prob, p, cost_draws[d]).total_gco2
+             for d in range(n_draws)]
+            for p in plans
+        ])
+
+    def batched():
+        return evaluate_ensemble(prob, plans, sigma, cost_draws=cost_draws,
+                                 use_kernel=False)
+
+    loop_totals, us_loop = timed(looped)
+    ens, us_batch = timed(batched)
+    batch_totals = np.stack([ens[p.algorithm].total_gco2 for p in plans])
+    rel_err = float(np.abs(batch_totals - loop_totals).max()
+                    / np.abs(loop_totals).max())
+
+    rho_stack = np.stack([p.rho_bps for p in plans])
+
+    def kernel():
+        return montecarlo.batched_gco2(prob, rho_stack, cost_draws,
+                                       use_kernel=True)
+
+    (job_k, _), us_kernel = timed(kernel)
+    job_np, _ = montecarlo.batched_gco2(prob, rho_stack, cost_draws,
+                                        use_kernel=False)
+    kernel_rel_err = float(np.abs(job_k - job_np).max()
+                           / np.abs(job_np).max())
+
+    bench = {
+        "bench": "montecarlo_sim",
+        "n_plans": len(plans),
+        "n_draws": n_draws,
+        "shape": [prob.n_jobs, prob.n_slots],
+        "sigma": sigma,
+        "us_draw_generation": us_draws,
+        "us_looped_evaluate_plan": us_loop,
+        "us_batched_ensemble": us_batch,
+        "speedup_batched_vs_looped": us_loop / us_batch if us_batch else None,
+        "max_rel_err_batched_vs_looped": rel_err,
+        "kernel_interpret": {
+            "us": us_kernel,
+            "max_rel_err_vs_float64": kernel_rel_err,
+        },
+    }
+    _BENCH_PATH.write_text(json.dumps(bench, indent=2) + "\n")
+
+    lines = [csv_line(
+        f"montecarlo_{len(plans)}plans_x_{n_draws}draws", us_batch,
+        f"looped_us={us_loop:.0f};speedup={us_loop / us_batch:.1f}x;"
+        f"max_rel_err={rel_err:.2e};"
+        f"kernel_rel_err={kernel_rel_err:.2e}")]
+    if not quiet:
+        print(lines[-1], flush=True)
+        print(f"wrote {_BENCH_PATH}", flush=True)
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -16,6 +16,7 @@ import traceback
 from . import (
     congestion,
     emission_dist,
+    montecarlo,
     paper_tables,
     power_model,
     roofline,
@@ -27,6 +28,7 @@ SUITES = {
     "power_model": lambda fast: power_model.run(),
     "emission_dist": lambda fast: emission_dist.run(n_jobs=30 if fast else 60),
     "congestion": lambda fast: congestion.run(n_transfers=6 if fast else 12),
+    "montecarlo": lambda fast: montecarlo.run(n_jobs=30 if fast else 60),
     "solver_scaling": lambda fast: solver_scaling.run(),
     "roofline": lambda fast: roofline.run(),
 }

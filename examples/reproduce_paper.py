@@ -1,9 +1,10 @@
 """Full reproduction of the paper's evaluation (Tables II/III + headline
 savings), §IV: 200 transfer requests (10-50 GB, deadlines 48-71h), 72h of
 high-variability zone traces, bandwidth limited to 25/50/75% of the 1 Gbps
-first hop, 5% and 15% forecast noise.
+first hop, 5% and 15% forecast noise — every cell evaluated as a
+Monte-Carlo ensemble (>=32 noise draws, mean +- 95% CI on the mean).
 
-    PYTHONPATH=src python examples/reproduce_paper.py [--fast]
+    PYTHONPATH=src python examples/reproduce_paper.py [--fast] [--draws N]
 
 Writes artifacts/paper_tables.csv and prints the comparison against the
 paper's claims.
@@ -18,7 +19,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.common import paper_setup, run_all_algorithms  # noqa: E402
+from benchmarks.common import paper_setup, run_all_algorithms_ensemble  # noqa: E402
 from repro.configs.lints_paper import PAPER  # noqa: E402
 
 ORDER = ("worst_case", "edf", "fcfs", "double_threshold",
@@ -35,6 +36,8 @@ PAPER_CLAIMS = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="60 jobs instead of 200")
+    ap.add_argument("--draws", type=int, default=32,
+                    help="Monte-Carlo noise draws per cell")
     ap.add_argument("--out", default="artifacts/paper_tables.csv")
     args = ap.parse_args()
 
@@ -46,23 +49,30 @@ def main() -> None:
     for noise in PAPER.noise_levels:
         for frac in PAPER.bandwidth_fractions:
             cap = frac * PAPER.first_hop_gbps
-            reports = run_all_algorithms(reqs, traces, cap, noise)
-            results[(noise, frac)] = {k: v.total_kg for k, v in reports.items()}
+            reports = run_all_algorithms_ensemble(reqs, traces, cap, noise,
+                                                  n_draws=args.draws)
+            results[(noise, frac)] = {a: reports[a] for a in ORDER}
             row = "  ".join(
-                f"{a}={results[(noise, frac)][a]:6.3f}" for a in ORDER
+                f"{a}={reports[a].mean_kg:6.3f}±{reports[a].ci95_kg:.3f}"
+                for a in ORDER
             )
             print(f"noise={int(noise*100):2d}% cap={int(frac*100):2d}%  {row} kg",
                   flush=True)
 
     with open(args.out, "w", newline="") as f:
         w = csv.writer(f)
-        w.writerow(["noise", "bandwidth_frac"] + list(ORDER))
-        for (noise, frac), kg in sorted(results.items()):
-            w.writerow([noise, frac] + [f"{kg[a]:.4f}" for a in ORDER])
+        w.writerow(["noise", "bandwidth_frac", "n_draws"]
+                   + [f"{a}_{s}" for a in ORDER for s in ("mean_kg", "ci95_kg")])
+        for (noise, frac), reps in sorted(results.items()):
+            w.writerow([noise, frac, args.draws] + [
+                f"{getattr(reps[a], s):.4f}"
+                for a in ORDER for s in ("mean_kg", "ci95_kg")
+            ])
 
     print("\n=== headline savings (averaged over 5%/15% noise) vs paper ===")
     for frac in PAPER.bandwidth_fractions:
-        avg = {a: np.mean([results[(n, frac)][a] for n in PAPER.noise_levels])
+        avg = {a: np.mean([results[(n, frac)][a].mean_kg
+                           for n in PAPER.noise_levels])
                for a in ORDER}
         vs_fcfs = 100 * (1 - avg["lints"] / avg["fcfs"])
         vs_worst = 100 * (1 - avg["lints"] / avg["worst_case"])

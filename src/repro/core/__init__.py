@@ -10,6 +10,7 @@ Submodules:
   pdhg           TPU-native restarted-averaged PDHG (PDLP-style) in JAX
   heuristics     FCFS / EDF / Worst-Case / ST / DT baselines
   simulator      noisy-trace emissions evaluation
+  montecarlo     batched Monte-Carlo ensemble evaluation (mean/std/CI)
   feasibility    checks, greedy fill, repair
   lints          public scheduling API
 """
@@ -18,6 +19,7 @@ from . import (  # noqa: F401
     feasibility,
     heuristics,
     lints,
+    montecarlo,
     pdhg,
     plan,
     power,

@@ -12,9 +12,9 @@ from typing import Iterable
 import numpy as np
 
 from .feasibility import greedy_fill
+from .montecarlo import emissions_totals
 from .plan import InfeasibleError, Plan
 from .problem import ScheduleProblem
-from .simulator import evaluate_plan
 
 
 def _time_order(problem: ScheduleProblem):
@@ -60,6 +60,7 @@ def worst_case(problem: ScheduleProblem, n_random: int = 20, seed: int = 0,
     candidates = [Plan(greedy_fill(problem, _edf_order(problem), dirtiest,
                                    strict=not best_effort), "worst_case")]
     rng = np.random.default_rng(seed)
+    skipped = 0
     for _ in range(n_random):
         job_order = rng.permutation(problem.n_jobs)
 
@@ -68,12 +69,18 @@ def worst_case(problem: ScheduleProblem, n_random: int = 20, seed: int = 0,
             return rng.permutation(cols)
 
         try:
-            candidates.append(Plan(greedy_fill(problem, job_order, random_ranker), "worst_case"))
+            candidates.append(Plan(greedy_fill(problem, job_order, random_ranker,
+                                               strict=not best_effort),
+                                   "worst_case"))
         except InfeasibleError:
-            continue  # a random ordering may strand capacity; skip it
-    emissions = [evaluate_plan(problem, p).total_gco2 for p in candidates]
-    best = candidates[int(np.argmax(emissions))]
+            skipped += 1  # strict mode only: a random ordering stranded capacity
+    # Score all candidates against the forecast in one batched pass instead
+    # of a per-candidate evaluate_plan loop.
+    totals = emissions_totals(
+        problem, np.stack([p.rho_bps for p in candidates]))[:, 0]
+    best = candidates[int(np.argmax(totals))]
     best.meta["n_candidates"] = len(candidates)
+    best.meta["n_skipped"] = skipped
     return best
 
 

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 GBPS = 1.0e9  # bits/s per Gbps
+JOULES_PER_KWH = 3.6e6
 
 
 @dataclasses.dataclass(frozen=True)

@@ -18,11 +18,9 @@ from typing import Sequence
 import numpy as np
 
 from .plan import Plan
-from .power import GBPS
+from .power import GBPS, JOULES_PER_KWH  # noqa: F401  (canonical home: power)
 from .problem import ScheduleProblem, TransferRequest
 from .trace import TraceSet
-
-JOULES_PER_KWH = 3.6e6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,3 +86,9 @@ def evaluate_many(
     cost_eval: np.ndarray | None = None,
 ) -> dict[str, EmissionsReport]:
     return {p.algorithm: evaluate_plan(problem, p, cost_eval) for p in plans}
+
+
+# Batched Monte-Carlo ensemble evaluation lives in core.montecarlo; re-export
+# so callers keep one simulator entry point for both single-draw and
+# ensemble reports.
+from .montecarlo import EnsembleReport, evaluate_ensemble  # noqa: E402,F401

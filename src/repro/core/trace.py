@@ -21,6 +21,13 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
+# Physically plausible lower bound on zone carbon intensity (gCO2/kWh).
+# Even near-100%-renewable grids report ~20 g lifecycle intensity; the
+# synthetic generator and every noise path clip here so noisy evaluation
+# cannot dip into implausible near-zero intensities (it used to clip at
+# 1.0 in ``with_noise`` but 20.0 in ``synthetic_hourly_trace``).
+INTENSITY_FLOOR_GCO2_PER_KWH = 20.0
+
 # Zones named in §IV-A, with (base gCO2/kWh, diurnal amplitude, noise scale)
 # presets that reproduce "highest variability in carbon intensity".
 ZONE_PRESETS: Mapping[str, tuple[float, float, float]] = {
@@ -69,7 +76,7 @@ def synthetic_hourly_trace(
         acc = 0.85 * acc + eps[i]
         ar[i] = acc
     trace = base + diurnal + semi + ar
-    return np.clip(trace, 20.0, None)
+    return np.clip(trace, INTENSITY_FLOOR_GCO2_PER_KWH, None)
 
 
 def load_electricitymaps_csv(path: str) -> dict[str, np.ndarray]:
@@ -90,6 +97,15 @@ def load_electricitymaps_csv(path: str) -> dict[str, np.ndarray]:
             raise ValueError(f"unrecognized ElectricityMaps CSV columns: {cols}")
         for row in reader:
             out.setdefault(row["zone"], []).append(float(row[ci_col]))
+    lengths = {z: len(v) for z, v in out.items()}
+    if len(set(lengths.values())) > 1:
+        # A ragged dict would surface later as an opaque broadcast error
+        # inside combine_path (or a wrong TraceSet.n_slots); fail at load
+        # time naming the offenders instead.
+        raise ValueError(
+            f"unequal row counts per zone in {path!r}: {lengths} — every "
+            "zone must cover the same horizon"
+        )
     return {z: np.asarray(v, dtype=np.float64) for z, v in out.items()}
 
 
@@ -136,10 +152,16 @@ class TraceSet:
         return combine_path(self.zone_slots, path, weights)
 
     def with_noise(self, sigma: float, seed: int) -> "TraceSet":
-        """Multiplicative Gaussian forecast-error noise (paper: 5% / 15%)."""
+        """Multiplicative Gaussian forecast-error noise (paper: 5% / 15%).
+
+        Zones are perturbed in dict order from one ``default_rng(seed)``
+        stream; ``montecarlo.zone_noise_draws`` reproduces draw ``d`` of a
+        batch with ``seed + d`` — keep the stream discipline in sync.
+        """
         rng = np.random.default_rng(seed)
         noisy = {
-            z: np.clip(t * (1.0 + rng.normal(0.0, sigma, size=t.shape)), 1.0, None)
+            z: np.clip(t * (1.0 + rng.normal(0.0, sigma, size=t.shape)),
+                       INTENSITY_FLOOR_GCO2_PER_KWH, None)
             for z, t in self.zone_slots.items()
         }
         return TraceSet(self.slot_seconds, noisy)

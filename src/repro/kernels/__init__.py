@@ -6,7 +6,9 @@ to one-pass (jobs x slots) tile pipelines on TPU (see DESIGN.md §2):
   pdhg_window chunked VMEM-resident PDHG: one launch per restart window
               (fused / batched-with-early-exit / row-tiled fallback)
   pdhg_step   legacy per-iteration fused primal update + partial reductions
-  emissions   fused plan -> gCO2 evaluation (Eqs. 3-4 + trace weighting)
+  emissions   fused plan -> gCO2 evaluation (Eqs. 3-4 + trace weighting):
+              scalar total per plan, plus the batched (plans x noise-draws)
+              grid kernel behind the Monte-Carlo ensemble evaluator
 
 ``ops`` holds the jit'd public wrappers, ``ref`` the pure-jnp oracles used
 by the allclose tests.  Kernels are validated in interpret mode on CPU and

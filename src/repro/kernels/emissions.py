@@ -1,11 +1,21 @@
-"""Pallas TPU kernel: fused plan-emissions evaluation (simulator hot loop).
+"""Pallas TPU kernels: fused plan-emissions evaluation (simulator hot loop).
 
 The simulator converts a throughput plan to threads (Eq. 4), threads to
 power (Eq. 3, the *non-linear* curve), then charges carbon per (job, slot)
 cell against the path-combined intensity trace.  For fleet-scale what-if
 sweeps (many plans x many noise draws) this is a large elementwise +
-reduction pipeline; the kernel computes it in one VMEM pass per tile,
-emitting per-block partial sums (finished by the wrapper).
+reduction pipeline; two kernels cover it:
+
+  emissions_total_pallas  one (rho, cost) plane -> scalar total gCO2,
+                          tiled (block_r, block_c) grid with per-block
+                          partial sums finished by the wrapper.
+  emissions_batch_pallas  (n_plans, n, m) plans x (n_draws, n, m) cost
+                          draws -> per-(plan, draw) per-job and per-slot
+                          gCO2 partial sums, grid over (plan, draw) pairs
+                          with the whole padded plane VMEM-resident per
+                          grid step (DESIGN.md §8).  Backs the Monte-Carlo
+                          ensemble evaluator, which needs evaluate_plan-
+                          style reports, not just a scalar.
 
 Power-model parameters are Python floats baked into the kernel at trace
 time (they are fixed per PowerModel, so no extra operand traffic).
@@ -22,19 +32,28 @@ from jax.experimental import pallas as pl
 BLOCK_R = 128
 BLOCK_C = 256
 
+# VMEM budget for one (plan, draw) grid step of the batched kernel: rho and
+# cost input planes, the gco2 temporary, and compiler headroom — budgeted at
+# 4 plane-sized buffers against half of a v5e's ~16 MiB VMEM (mirrors the
+# chunked-PDHG budget discipline, DESIGN.md §2/§8).
+BATCH_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+_BATCH_PLANE_BUFFERS = 4
 
-def _emissions_kernel(
-    rho_ref, cost_ref, out_ref,
-    *, slot_seconds, l_gbps, s_rho, s_p, p_min_w, p_max_w, theta_max,
-):
-    rho = rho_ref[...]
+
+def _gco2_cells(rho, cost, *, slot_seconds, l_gbps, s_rho, s_p,
+                p_min_w, p_max_w, theta_max):
+    """Per-cell gCO2 of a throughput plane (Eqs. 3-4 + trace weighting)."""
     denom = jnp.maximum(l_gbps - rho, 1e-12)
     theta = jnp.clip((1.0 / (l_gbps * s_rho)) * rho / denom, 0.0, theta_max)
     dp = p_max_w - p_min_w
     p = dp * (1.0 - 1.0 / (s_p * dp * theta + 1.0)) + p_min_w
     p = jnp.where(theta > 0, p, 0.0)
     kwh = p * (slot_seconds / 3.6e6)
-    out_ref[0, 0] = jnp.sum(kwh * cost_ref[...])
+    return kwh * cost
+
+
+def _emissions_kernel(rho_ref, cost_ref, out_ref, **params):
+    out_ref[0, 0] = jnp.sum(_gco2_cells(rho_ref[...], cost_ref[...], **params))
 
 
 @functools.partial(
@@ -86,3 +105,92 @@ def emissions_total_pallas(
         interpret=interpret,
     )(pad2(rho_gbps), pad2(cost))
     return partials.sum()
+
+
+def _emissions_batch_kernel(rho_ref, cost_ref, job_ref, slot_ref, **params):
+    gco2 = _gco2_cells(rho_ref[0], cost_ref[0], **params)
+    job_ref[0, 0, :] = jnp.sum(gco2, axis=1)
+    slot_ref[0, 0, :] = jnp.sum(gco2, axis=0)
+
+
+def batch_fits_vmem(n: int, m: int, itemsize: int = 4,
+                    budget: int = BATCH_VMEM_BUDGET_BYTES) -> bool:
+    """Whether one padded (jobs x slots) plane fits the batched kernel's
+    per-grid-step VMEM budget (the draw/plan axes never enter VMEM — only
+    one plane of each is resident per step)."""
+    n_pad = pl.cdiv(n, 128) * 128
+    m_pad = pl.cdiv(m, 128) * 128
+    return _BATCH_PLANE_BUFFERS * n_pad * m_pad * itemsize <= budget
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "slot_seconds", "l_gbps", "s_rho", "s_p", "p_min_w", "p_max_w",
+        "theta_max", "interpret",
+    ),
+)
+def emissions_batch_pallas(
+    rho_gbps,
+    cost,
+    *,
+    slot_seconds: float,
+    l_gbps: float,
+    s_rho: float,
+    s_p: float,
+    p_min_w: float,
+    p_max_w: float,
+    theta_max: float,
+    interpret: bool = True,
+):
+    """Per-(plan, draw) partial emissions sums for a plan/draw cross product.
+
+    Args:
+      rho_gbps: (n_plans, n, m) throughput plans.
+      cost:     (n_draws, n, m) evaluation-time intensity draws.
+
+    Returns:
+      ``(gco2_job, gco2_slot)`` with shapes (n_plans, n_draws, n) and
+      (n_plans, n_draws, m): per-job and per-slot gCO2 sums, enough to
+      rebuild every ``EmissionsReport`` field that depends on the draw.
+
+    Grid is (n_plans, n_draws) with the draw axis minor, so each plan's
+    rho plane stays VMEM-resident across its whole sweep of draws.  Rows
+    and columns are padded to lane multiples (128); padded rho cells are
+    zero -> zero threads -> zero power, so padding is value-neutral and
+    the wrapper just slices it off.  See ``ref.emissions_batch_ref``.
+    """
+    n_plans, n, m = rho_gbps.shape
+    n_draws = cost.shape[0]
+    dt = rho_gbps.dtype
+    # n is a sublane dim in the inputs but a *lane* dim in the outputs, so
+    # pad both axes to the lane multiple.
+    n_pad = pl.cdiv(n, 128) * 128
+    m_pad = pl.cdiv(m, 128) * 128
+
+    def pad3(a):
+        return jnp.pad(a, ((0, 0), (0, n_pad - a.shape[1]), (0, m_pad - a.shape[2])))
+
+    kernel = functools.partial(
+        _emissions_batch_kernel,
+        slot_seconds=slot_seconds, l_gbps=l_gbps, s_rho=s_rho, s_p=s_p,
+        p_min_w=p_min_w, p_max_w=p_max_w, theta_max=theta_max,
+    )
+    gco2_job, gco2_slot = pl.pallas_call(
+        kernel,
+        grid=(n_plans, n_draws),
+        in_specs=[
+            pl.BlockSpec((1, n_pad, m_pad), lambda p, d: (p, 0, 0)),
+            pl.BlockSpec((1, n_pad, m_pad), lambda p, d: (d, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, n_pad), lambda p, d: (p, d, 0)),
+            pl.BlockSpec((1, 1, m_pad), lambda p, d: (p, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_plans, n_draws, n_pad), dt),
+            jax.ShapeDtypeStruct((n_plans, n_draws, m_pad), dt),
+        ],
+        interpret=interpret,
+    )(pad3(rho_gbps), pad3(cost))
+    return gco2_job[..., :n], gco2_slot[..., :m]

@@ -50,6 +50,18 @@ def pdhg_window_batched(x, c, ub, u, v, rs, cs, b_row, b_col, tau, sigma,
     )
 
 
+def _power_params(power: PowerModel, l_gbps: float, slot_seconds: float) -> dict:
+    return dict(
+        slot_seconds=float(slot_seconds),
+        l_gbps=float(l_gbps),
+        s_rho=float(power.s_rho),
+        s_p=float(power.s_p),
+        p_min_w=float(power.p_min_w),
+        p_max_w=float(power.p_max_w),
+        theta_max=float(power.theta_max),
+    )
+
+
 def emissions_total(
     rho_gbps,
     cost,
@@ -63,12 +75,34 @@ def emissions_total(
     return _emissions.emissions_total_pallas(
         rho_gbps,
         cost,
-        slot_seconds=float(slot_seconds),
-        l_gbps=float(l_gbps),
-        s_rho=float(power.s_rho),
-        s_p=float(power.s_p),
-        p_min_w=float(power.p_min_w),
-        p_max_w=float(power.p_max_w),
-        theta_max=float(power.theta_max),
+        **_power_params(power, l_gbps, slot_seconds),
         interpret=_auto_interpret(interpret),
+    )
+
+
+def emissions_batch(
+    rho_gbps,
+    cost,
+    *,
+    power: PowerModel,
+    l_gbps: float,
+    slot_seconds: float,
+    interpret: bool | None = None,
+):
+    """Per-(plan, draw) per-job/per-slot gCO2 for a plan/draw cross product.
+
+    ``rho_gbps`` is (n_plans, n, m), ``cost`` is (n_draws, n, m); returns
+    ``(gco2_job, gco2_slot)`` of shapes (n_plans, n_draws, n/m).  Planes
+    that exceed the batched kernel's per-grid-step VMEM budget fall back
+    to the jnp oracle (``ref.emissions_batch_ref``) — same semantics, XLA-
+    tiled instead of VMEM-resident.
+    """
+    params = _power_params(power, l_gbps, slot_seconds)
+    _, n, m = rho_gbps.shape
+    if not _emissions.batch_fits_vmem(n, m, rho_gbps.dtype.itemsize):
+        from . import ref as _ref
+
+        return _ref.emissions_batch_ref(rho_gbps, cost, **params)
+    return _emissions.emissions_batch_pallas(
+        rho_gbps, cost, **params, interpret=_auto_interpret(interpret)
     )

@@ -44,6 +44,16 @@ def pdhg_window_ref(x, c, ub, u, v, rs, cs, b_row, b_col, tau, sigma,
     return impl(x, c, ub, u, v, rs, cs, b_row, b_col, tau, sigma, n_iters)
 
 
+def _emissions_cells(rho, cost, *, slot_seconds, l_gbps, s_rho, s_p,
+                     p_min_w, p_max_w, theta_max):
+    denom = jnp.maximum(l_gbps - rho, 1e-12)
+    theta = jnp.clip((1.0 / (l_gbps * s_rho)) * rho / denom, 0.0, theta_max)
+    dp = p_max_w - p_min_w
+    p = dp * (1.0 - 1.0 / (s_p * dp * theta + 1.0)) + p_min_w
+    p = jnp.where(theta > 0, p, 0.0)
+    return p * slot_seconds / 3.6e6 * cost
+
+
 def emissions_total_ref(
     rho_gbps,
     cost,
@@ -64,11 +74,42 @@ def emissions_total_ref(
 
     Returns: scalar total gCO2.
     """
-    rho = rho_gbps
-    denom = jnp.maximum(l_gbps - rho, 1e-12)
-    theta = jnp.clip((1.0 / (l_gbps * s_rho)) * rho / denom, 0.0, theta_max)
+    return jnp.sum(_emissions_cells(
+        rho_gbps, cost, slot_seconds=slot_seconds, l_gbps=l_gbps,
+        s_rho=s_rho, s_p=s_p, p_min_w=p_min_w, p_max_w=p_max_w,
+        theta_max=theta_max,
+    ))
+
+
+def emissions_batch_ref(
+    rho_gbps,
+    cost,
+    *,
+    slot_seconds: float,
+    l_gbps: float,
+    s_rho: float,
+    s_p: float,
+    p_min_w: float,
+    p_max_w: float,
+    theta_max: float,
+):
+    """Oracle for ``emissions_batch_pallas``: per-(plan, draw) partial sums.
+
+    Args:
+      rho_gbps: (n_plans, n, m) throughput plans.
+      cost:     (n_draws, n, m) evaluation-time intensity draws.
+
+    Returns: ``(gco2_job, gco2_slot)`` — (n_plans, n_draws, n) and
+    (n_plans, n_draws, m).  The per-plan kWh term is draw-independent, so
+    it is computed once per plan and crossed with the draws via einsum.
+    """
+    denom = jnp.maximum(l_gbps - rho_gbps, 1e-12)
+    theta = jnp.clip((1.0 / (l_gbps * s_rho)) * rho_gbps / denom,
+                     0.0, theta_max)
     dp = p_max_w - p_min_w
     p = dp * (1.0 - 1.0 / (s_p * dp * theta + 1.0)) + p_min_w
     p = jnp.where(theta > 0, p, 0.0)
-    kwh = p * slot_seconds / 3.6e6
-    return jnp.sum(kwh * cost)
+    kwh = p * slot_seconds / 3.6e6              # (n_plans, n, m)
+    gco2_job = jnp.einsum("pnm,dnm->pdn", kwh, cost)
+    gco2_slot = jnp.einsum("pnm,dnm->pdm", kwh, cost)
+    return gco2_job, gco2_slot

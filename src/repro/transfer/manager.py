@@ -85,16 +85,37 @@ class TransferManager:
         self.transfers: dict[str, ManagedTransfer] = {}
         self._plan_rho: dict[str, np.ndarray] = {}   # rid -> (n_slots,) bps
         self._plan_last_slot: dict[str, int] = {}
+        # Combined per-path actual-trace intensities; traces are frozen, so
+        # entries never invalidate.
+        self._path_ci: dict[tuple[str, ...], np.ndarray] = {}
         self._ids = itertools.count()
         self._needs_plan = False
 
     def capacity_bps_free(self, j: int) -> float:
-        """Unplanned capacity at slot j (for best-effort tail completion)."""
+        """Unplanned capacity at slot j (for best-effort tail completion).
+
+        Completed transfers keep their entry in ``_plan_rho`` (it documents
+        the executed plan) but no longer consume link capacity.  A transfer
+        is out of the picture at slot j only once it finished *before* j:
+        one that completes in slot j itself moved bits on the link in j, so
+        its reservation still throttles same-slot best-effort traffic.
+        """
         used = sum(
-            float(r[j]) for r in self._plan_rho.values()
+            float(r[j]) for rid, r in self._plan_rho.items()
             if j < len(r)
+            and (t := self.transfers.get(rid)) is not None
+            and (t.done_slot is None or t.done_slot >= j)
         )
         return max(0.0, self.capacity_gbps * GBPS - used)
+
+    def _actual_path_intensity(self, path: tuple[str, ...]) -> np.ndarray:
+        """Cached path-combined intensity on the actual (noisy) trace —
+        recombining (n_slots,) zone traces per pending transfer per tick is
+        the manager's hot loop."""
+        ci = self._path_ci.get(path)
+        if ci is None:
+            ci = self._path_ci[path] = self.actual.path_intensity(path)
+        return ci
 
     # ------------------------------------------------------------------ API
     def enqueue(self, size_gb: float, src: str, dst: str,
@@ -181,7 +202,7 @@ class TransferManager:
             theta = float(self.power.threads(achieved / GBPS,
                                              self.capacity_gbps))
             p_w = float(self.power.power_w(np.float64(theta)))
-            ci = float(self.actual.path_intensity(t.path)[j])
+            ci = float(self._actual_path_intensity(t.path)[j])
             t.emissions_g += p_w * dt / JOULES_PER_KWH * ci
             t.remaining_bits -= moved
             if t.remaining_bits <= 1.0:

@@ -51,6 +51,38 @@ def test_worst_case_is_worst(small_problem):
     assert worst > lints_e
 
 
+def test_worst_case_best_effort_keeps_random_candidates():
+    """Regression: random candidates must inherit best-effort mode.  They
+    used to run ``greedy_fill`` strict even when ``best_effort=True``, so on
+    workloads where random slot orders strand capacity (25% of the first
+    hop here) every random plan raised and the "worst case" degenerated to
+    the single dirtiest-EDF candidate."""
+    from repro.core.problem import TransferRequest, build_problem
+    from repro.core.trace import make_trace_set
+
+    traces = make_trace_set(("US-NM",), hours=2)          # 8 slots
+    prob0 = build_problem(
+        [TransferRequest(size_gb=1.0, deadline_slots=8, path=("US-NM",))],
+        traces, 0.25)
+    gb_per_slot = prob0.rate_cap_bps * prob0.slot_seconds / 8e9
+    size = 4 * gb_per_slot * 0.999      # a full 4-slot window at theta_max
+    reqs = (
+        # Four jobs that need their entire [0, 4) window at the rate cap...
+        [TransferRequest(size_gb=size, deadline_slots=4, path=("US-NM",),
+                         request_id=f"tight{i}") for i in range(4)]
+        # ...and four lazy-deadline jobs whose random rankings steal from it.
+        + [TransferRequest(size_gb=size, deadline_slots=8, path=("US-NM",),
+                           request_id=f"loose{i}") for i in range(4)]
+    )
+    prob = build_problem(reqs, traces, 0.25)
+    strict = heuristics.worst_case(prob)
+    assert strict.meta["n_candidates"] == 1        # randoms strand capacity
+    assert strict.meta["n_skipped"] == 20
+    best_effort = heuristics.worst_case(prob, best_effort=True)
+    assert best_effort.meta["n_candidates"] == 21  # all candidates survive
+    assert best_effort.meta["n_skipped"] == 0
+
+
 def test_thresholds_improve_on_edf(small_problem):
     """ST/DT should not emit more than carbon-agnostic EDF (same priority
     order, carbon-filtered slots)."""

@@ -68,6 +68,53 @@ def test_emissions_total_matches_ref(shape):
     np.testing.assert_allclose(float(got), float(want), rtol=1e-4)
 
 
+BATCH_SHAPES = [(1, 1, 3, 7), (2, 3, 8, 128), (3, 5, 50, 288), (2, 2, 129, 257)]
+
+
+@pytest.mark.parametrize("shape", BATCH_SHAPES)
+def test_emissions_batch_matches_ref(shape):
+    n_plans, n_draws, n, m = shape
+    rng = np.random.default_rng(sum(shape))
+    l_gbps = 0.5
+    rho = jnp.asarray(
+        rng.uniform(0, DEFAULT_POWER_MODEL.rate_cap_gbps(l_gbps),
+                    (n_plans, n, m))
+        * (rng.uniform(0, 1, (n_plans, n, m)) > 0.6),
+        jnp.float32,
+    )
+    cost = jnp.asarray(rng.uniform(50, 2500, (n_draws, n, m)), jnp.float32)
+    kw = dict(slot_seconds=900.0, l_gbps=l_gbps,
+              s_rho=DEFAULT_POWER_MODEL.s_rho, s_p=DEFAULT_POWER_MODEL.s_p,
+              p_min_w=DEFAULT_POWER_MODEL.p_min_w,
+              p_max_w=DEFAULT_POWER_MODEL.p_max_w,
+              theta_max=DEFAULT_POWER_MODEL.theta_max)
+    got_job, got_slot = ops.emissions_batch(
+        rho, cost, power=DEFAULT_POWER_MODEL, l_gbps=l_gbps,
+        slot_seconds=900.0)
+    want_job, want_slot = ref.emissions_batch_ref(rho, cost, **kw)
+    np.testing.assert_allclose(np.asarray(got_job), np.asarray(want_job),
+                               rtol=2e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(got_slot), np.asarray(want_slot),
+                               rtol=2e-4, atol=1e-3)
+
+
+def test_emissions_batch_total_consistent_with_scalar_kernel():
+    """The (plan, draw) batch reduces to the scalar-total kernel."""
+    rng = np.random.default_rng(5)
+    l_gbps = 0.5
+    rho = jnp.asarray(rng.uniform(0, 0.1, (2, 40, 96)), jnp.float32)
+    cost = jnp.asarray(rng.uniform(50, 2500, (3, 40, 96)), jnp.float32)
+    job, _ = ops.emissions_batch(rho, cost, power=DEFAULT_POWER_MODEL,
+                                 l_gbps=l_gbps, slot_seconds=900.0)
+    for p in range(2):
+        for d in range(3):
+            want = ops.emissions_total(rho[p], cost[d],
+                                       power=DEFAULT_POWER_MODEL,
+                                       l_gbps=l_gbps, slot_seconds=900.0)
+            np.testing.assert_allclose(float(job[p, d].sum()), float(want),
+                                       rtol=1e-4)
+
+
 def test_emissions_kernel_agrees_with_simulator(small_problem):
     """Kernel path == host simulator on a real plan."""
     from repro.core import heuristics

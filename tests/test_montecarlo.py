@@ -1,0 +1,133 @@
+"""Batched Monte-Carlo ensemble evaluation: parity with the single-draw
+simulator path (per-draw reproducibility contract) and with the batched
+Pallas kernel (DESIGN.md §8)."""
+
+import numpy as np
+import pytest
+
+from repro.core import heuristics, montecarlo
+from repro.core.problem import TransferRequest, paper_workload
+from repro.core.simulator import evaluate_ensemble, evaluate_plan, noisy_costs
+from repro.core.trace import INTENSITY_FLOOR_GCO2_PER_KWH
+
+SIGMA = 0.15
+SEED = 11
+
+
+@pytest.fixture(scope="module")
+def paper_reqs():
+    return paper_workload(n_jobs=24, seed=3)
+
+
+def test_zone_noise_draws_match_with_noise(paper_traces):
+    """Draw d consumes exactly the stream of with_noise(sigma, seed + d)."""
+    zones, noisy = montecarlo.zone_noise_draws(paper_traces, SIGMA, 3, SEED)
+    assert noisy.shape == (3, len(zones), paper_traces.n_slots)
+    for d in range(3):
+        legacy = paper_traces.with_noise(SIGMA, SEED + d)
+        for k, z in enumerate(zones):
+            np.testing.assert_array_equal(noisy[d, k], legacy.zone_slots[z])
+
+
+def test_draw_noisy_costs_match_noisy_costs_loop(paper_traces, paper_reqs):
+    draws = montecarlo.draw_noisy_costs(paper_reqs, paper_traces, SIGMA, 4,
+                                        SEED)
+    assert draws.shape == (4, len(paper_reqs), paper_traces.n_slots)
+    for d in range(4):
+        legacy = noisy_costs(paper_reqs, paper_traces, SIGMA, seed=SEED + d)
+        np.testing.assert_allclose(draws[d], legacy, rtol=1e-12)
+
+
+def test_noise_respects_intensity_floor(paper_traces):
+    _, noisy = montecarlo.zone_noise_draws(paper_traces, 5.0, 8, SEED)
+    assert noisy.min() >= INTENSITY_FLOOR_GCO2_PER_KWH
+    huge = paper_traces.with_noise(5.0, SEED)
+    assert min(t.min() for t in huge.zone_slots.values()) \
+        >= INTENSITY_FLOOR_GCO2_PER_KWH
+
+
+def test_path_weight_matrix_honors_weights_and_repeats(paper_traces):
+    zones = list(paper_traces.zone_slots)
+    reqs = [
+        TransferRequest(size_gb=1.0, deadline_slots=8,
+                        path=(zones[0], zones[1], zones[0]),
+                        weights=(0.5, 1.0, 2.0), request_id="r0"),
+    ]
+    w = montecarlo.path_weight_matrix(reqs, zones)
+    assert w[0, 0] == pytest.approx(2.5)   # 0.5 + 2.0 (repeated zone)
+    assert w[0, 1] == pytest.approx(1.0)
+    draws = montecarlo.draw_noisy_costs(reqs, paper_traces, SIGMA, 2, SEED)
+    legacy = noisy_costs(reqs, paper_traces, SIGMA, seed=SEED)
+    np.testing.assert_allclose(draws[0], legacy, rtol=1e-12)
+
+
+def test_evaluate_ensemble_parity_with_evaluate_plan_loop(small_problem,
+                                                          paper_traces,
+                                                          paper_reqs):
+    """Acceptance: ensemble totals match a python loop of evaluate_plan
+    over the same noisy draws to <=1e-6 relative error."""
+    plans = [heuristics.edf(small_problem), heuristics.fcfs(small_problem),
+             heuristics.single_threshold(small_problem)]
+    n_draws = 16
+    draws = montecarlo.draw_noisy_costs(paper_reqs, paper_traces, SIGMA,
+                                        n_draws, SEED)
+    ens = evaluate_ensemble(small_problem, plans, SIGMA, n_draws,
+                            requests=paper_reqs, traces=paper_traces,
+                            seed=SEED)
+    for plan in plans:
+        rep = ens[plan.algorithm]
+        assert rep.n_draws == n_draws
+        for d in range(n_draws):
+            want = evaluate_plan(small_problem, plan, draws[d])
+            got = rep.total_gco2[d]
+            assert abs(got - want.total_gco2) <= 1e-6 * want.total_gco2
+        base = evaluate_plan(small_problem, plan)
+        assert rep.sla_violations == base.sla_violations
+        assert rep.active_job_slots == base.active_job_slots
+        assert rep.energy_kwh == pytest.approx(base.energy_kwh, rel=1e-12)
+
+
+def test_ensemble_statistics_consistent(small_problem, paper_traces,
+                                        paper_reqs):
+    ens = evaluate_ensemble(small_problem, [heuristics.edf(small_problem)],
+                            SIGMA, 32, requests=paper_reqs,
+                            traces=paper_traces, seed=SEED)
+    rep = ens["edf"]
+    assert rep.mean_gco2 == pytest.approx(rep.total_gco2.mean(), rel=1e-12)
+    assert rep.std_gco2 == pytest.approx(np.std(rep.total_gco2, ddof=1),
+                                         rel=1e-12)
+    assert rep.ci95_gco2 == pytest.approx(1.96 * rep.std_gco2 / np.sqrt(32),
+                                          rel=1e-12)
+    assert rep.per_job_gco2.sum() == pytest.approx(rep.mean_gco2, rel=1e-9)
+    assert rep.per_slot_gco2.sum() == pytest.approx(rep.mean_gco2, rel=1e-9)
+    assert rep.mean_kg == pytest.approx(rep.mean_gco2 / 1000.0)
+
+
+def test_evaluate_ensemble_requires_noise_source(small_problem):
+    with pytest.raises(ValueError, match="requests"):
+        evaluate_ensemble(small_problem, [heuristics.edf(small_problem)],
+                          SIGMA, 4)
+
+
+def test_batched_gco2_kernel_parity(small_problem, paper_traces, paper_reqs):
+    """Interpret-mode Pallas kernel vs the float64 numpy pass."""
+    plans = [heuristics.edf(small_problem), heuristics.fcfs(small_problem)]
+    rho = np.stack([p.rho_bps for p in plans])
+    draws = montecarlo.draw_noisy_costs(paper_reqs, paper_traces, SIGMA, 3,
+                                        SEED)
+    job_np, slot_np = montecarlo.batched_gco2(small_problem, rho, draws,
+                                              use_kernel=False)
+    job_k, slot_k = montecarlo.batched_gco2(small_problem, rho, draws,
+                                            use_kernel=True)
+    np.testing.assert_allclose(job_k, job_np, rtol=2e-5,
+                               atol=1e-5 * job_np.max())
+    np.testing.assert_allclose(slot_k, slot_np, rtol=2e-5,
+                               atol=1e-5 * slot_np.max())
+
+
+def test_emissions_totals_defaults_to_forecast(small_problem):
+    plan = heuristics.edf(small_problem)
+    totals = montecarlo.emissions_totals(small_problem, plan.rho_bps[None])
+    assert totals.shape == (1, 1)
+    want = evaluate_plan(small_problem, plan).total_gco2
+    assert totals[0, 0] == pytest.approx(want, rel=1e-9)

@@ -83,3 +83,25 @@ def test_electricitymaps_csv_loader(tmp_path):
     traces = trace_mod.load_electricitymaps_csv(str(p))
     np.testing.assert_allclose(traces["US-NM"], [400, 410])
     np.testing.assert_allclose(traces["US-CO"], [500, 520])
+
+
+def test_electricitymaps_csv_ragged_zones_rejected(tmp_path):
+    """Unequal per-zone row counts used to surface later as an opaque
+    broadcast error inside combine_path; fail at load time instead."""
+    p = tmp_path / "ragged.csv"
+    p.write_text(
+        "datetime,zone,carbon_intensity\n"
+        "t0,US-NM,400\nt1,US-NM,410\nt0,US-CO,500\n"
+    )
+    with pytest.raises(ValueError, match="US-CO"):
+        trace_mod.load_electricitymaps_csv(str(p))
+
+
+def test_noise_floor_unified():
+    """with_noise used to clip at 1.0 gCO2/kWh while the synthetic
+    generator clipped at 20.0; both now share the documented floor."""
+    ts = trace_mod.make_trace_set(("US-NM",), seed=0)
+    noisy = ts.with_noise(sigma=10.0, seed=0)   # absurd noise: hits the floor
+    floor = trace_mod.INTENSITY_FLOOR_GCO2_PER_KWH
+    assert noisy.zone_slots["US-NM"].min() >= floor
+    assert trace_mod.synthetic_hourly_trace("US-NM").min() >= floor

@@ -96,6 +96,36 @@ def test_checkpoint_replicator_hook(tmp_path):
     assert tm.report()["sla_violations"] == 0
 
 
+def test_capacity_freed_after_transfer_completes():
+    """Regression: ``capacity_bps_free`` summed planned rho over ALL
+    ``_plan_rho`` entries, including completed transfers, so best-effort
+    tail completion saw phantom reserved capacity."""
+    tm = _manager()
+    rid = tm.enqueue(size_gb=10.0, src="a", dst="b", deadline_slots=96)
+    tm.replan()
+    planned_slots = np.flatnonzero(tm._plan_rho[rid])
+    assert planned_slots.size
+    j = int(planned_slots[-1])
+    full = tm.capacity_gbps * 1e9
+    assert tm.capacity_bps_free(j) < full       # pending: plan reserves
+    t = tm.transfers[rid]
+    # Finished *before* slot j: the stale plan tail is phantom capacity.
+    t.done_slot = j - 1
+    assert tm.capacity_bps_free(j) == full
+    # Finished *in* slot j: it moved bits on the link in j, so its
+    # reservation still throttles same-slot best-effort traffic.
+    t.done_slot = j
+    assert tm.capacity_bps_free(j) < full
+
+
+def test_actual_path_intensity_cached():
+    tm = _manager()
+    ci1 = tm._actual_path_intensity(ZONES)
+    ci2 = tm._actual_path_intensity(ZONES)
+    assert ci1 is ci2  # frozen traces: combined once, reused every tick
+    np.testing.assert_allclose(ci1, tm.actual.path_intensity(ZONES))
+
+
 def test_unknown_route_raises():
     tm = _manager()
     with pytest.raises(KeyError):
