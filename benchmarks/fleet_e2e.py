@@ -1,0 +1,187 @@
+"""Fleet-scale end-to-end scheduling bench: batched vs per-plan finishing.
+
+Measures the tentpole claim of the finishing subsystem (DESIGN.md §9): after
+``pdhg_solve_batch`` returns a fleet of raw LP iterates, the post-solve tail
+(repair → vertex-round → refine → validate) must scale with the solve.  The
+bench times every stage of both paths at fleet sizes {8, 32, 128}:
+
+* **sequential** — the per-plan numpy oracle tail (``repair_plan`` /
+  ``vertex_round`` / ``refine_plan`` / ``check_plan`` in a Python loop over
+  the fleet, i.e. ``LinTSConfig(finishing="sequential")``);
+* **batched** — the jitted scan/vmap pipeline in ``core/finishing.py``
+  (``LinTSConfig(finishing="batched")``, the default).  The first pass pays
+  jit compilation and is reported separately; the steady-state pass is the
+  fleet-scale number.
+
+Also records the max plan difference and relative objective difference
+between the two paths (the oracle-parity contract).  Emits machine-readable
+``BENCH_fleet.json`` at the repo root so the perf trajectory is diffable
+PR-over-PR (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import finishing
+from repro.core.feasibility import check_plan, check_plan_batch, repair_plan
+from repro.core.pdhg import normalize_problem, pdhg_solve_batch, vertex_round
+from repro.core.plan import InfeasibleError, Plan
+from repro.core.problem import build_problem, paper_workload
+from repro.core.refine import refine_plan
+from repro.core.trace import make_trace_set
+
+from .common import csv_line
+
+_BENCH_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_fleet.json"
+_ZONES = ("US-NM", "US-WY", "US-SD")
+
+
+def _fleet_problems(n_problems: int, n_jobs: int, hours: int = 24):
+    """Same-shape datacenter-pair problems with per-pair traces/workloads."""
+    probs = []
+    for b in range(n_problems):
+        traces = make_trace_set(_ZONES, hours=hours, seed=100 + b)
+        reqs = paper_workload(n_jobs=n_jobs, seed=b,
+                              deadline_range_h=(hours // 2, hours - 1))
+        probs.append(build_problem(reqs, traces, 0.5))
+    return probs
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6  # us
+
+
+def _sequential_tail(probs, rho0):
+    """Per-plan Python tail, timed per stage (the pre-batching path)."""
+    stages = {}
+    repaired, stages["repair"] = _timed(
+        lambda: [repair_plan(p, rho0[i]) for i, p in enumerate(probs)])
+
+    def _round():
+        out = []
+        for i, p in enumerate(probs):
+            try:
+                out.append(vertex_round(p, Plan(repaired[i], "lints")).rho_bps)
+            except InfeasibleError:
+                out.append(repaired[i])
+        return out
+
+    rounded, stages["round"] = _timed(_round)
+    refined, stages["refine"] = _timed(
+        lambda: [refine_plan(p, Plan(rounded[i], "lints")).rho_bps
+                 for i, p in enumerate(probs)])
+    reports, stages["validate"] = _timed(
+        lambda: [check_plan(p, refined[i], rel_tol=1e-5)
+                 for i, p in enumerate(probs)])
+    assert all(r.feasible for r in reports)
+    stages["total"] = sum(stages.values())
+    return np.stack(refined), stages
+
+
+def _batched_tail(probs, rho0):
+    """Fleet-batched tail, timed per stage.
+
+    The stack build (host-side argsorts) is part of what ``solve_batch``
+    pays every call, so it counts toward the batched "repair" stage — the
+    sequential tail's per-plan argsorts are likewise inside its stages.
+    """
+    stages = {}
+
+    def _repair():
+        s = finishing.stack_problems(probs)
+        return s, finishing.repair_batch(s, rho0)
+
+    (s, repaired), stages["repair"] = _timed(_repair)
+    (rounded, _), stages["round"] = _timed(
+        lambda: finishing.vertex_round_batch(s, repaired))
+    (refined, _), stages["refine"] = _timed(
+        lambda: finishing.refine_batch(s, rounded))
+    reports, stages["validate"] = _timed(
+        lambda: check_plan_batch(probs, refined, rel_tol=1e-5))
+    assert all(r.feasible for r in reports)
+    stages["total"] = sum(stages.values())
+    return refined, stages
+
+
+def run(fleet_sizes=(8, 32, 128), n_jobs: int = 24, quiet: bool = False,
+        fast: bool = False) -> list[str]:
+    if fast:
+        fleet_sizes, n_jobs = (8,), 12
+    lines, fleets = [], []
+    for n_problems in fleet_sizes:
+        probs = _fleet_problems(n_problems, n_jobs)
+        tensors = [normalize_problem(p) for p in probs]
+        import jax.numpy as jnp
+
+        c = jnp.stack([t[0] for t in tensors])
+        ub = jnp.stack([t[1] for t in tensors])
+        br = jnp.stack([t[2] for t in tensors])
+        bc = jnp.stack([t[3] for t in tensors])
+
+        def _solve():
+            xs, diag = pdhg_solve_batch(c, ub, br, bc, max_iters=4000,
+                                        check_every=100, tol=1e-4)
+            return np.asarray(xs, np.float64), diag
+
+        (xs, diag), us_solve = _timed(_solve)
+        rates = np.array([p.rate_cap_bps for p in probs])
+        rho0 = xs * rates[:, None, None]
+
+        rho_seq, seq = _sequential_tail(probs, rho0)
+        # First batched pass pays jit compilation; second is steady state.
+        _, compile_stages = _batched_tail(probs, rho0)
+        rho_bat, bat = _batched_tail(probs, rho0)
+
+        costs = np.stack([p.cost for p in probs])
+        max_diff_bps = float(np.abs(rho_bat - rho_seq).max())
+        obj_seq = np.einsum("bnm,bnm->b", costs, rho_seq)
+        obj_bat = np.einsum("bnm,bnm->b", costs, rho_bat)
+        rel_obj = float(np.abs(obj_bat - obj_seq).max()
+                        / np.abs(obj_seq).max())
+        speedup = seq["total"] / bat["total"]
+        fleets.append({
+            "fleet_size": n_problems,
+            "us_solve": us_solve,
+            "mean_iterations": float(np.mean(diag["iterations"])),
+            "sequential_us": seq,
+            "batched_compile_us": compile_stages,
+            "batched_us": bat,
+            "speedup_batched_vs_sequential": speedup,
+            "max_plan_diff_bps": max_diff_bps,
+            "max_rel_objective_diff": rel_obj,
+        })
+        lines.append(csv_line(
+            f"fleet_finishing_B{n_problems}_{n_jobs}jobs", bat["total"],
+            f"sequential_us={seq['total']:.0f};speedup={speedup:.1f}x;"
+            f"refine_speedup={seq['refine'] / bat['refine']:.1f}x;"
+            f"max_rel_obj_diff={rel_obj:.2e}"))
+        if not quiet:
+            print(lines[-1], flush=True)
+
+    bench = {
+        "bench": "fleet_finishing_e2e",
+        "n_jobs": n_jobs,
+        "n_slots": int(probs[0].n_slots),
+        "stages": ["repair", "round", "refine", "validate"],
+        "fleets": fleets,
+    }
+    _BENCH_PATH.write_text(json.dumps(bench, indent=2) + "\n")
+    if not quiet:
+        print(f"wrote {_BENCH_PATH}", flush=True)
+    return lines
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small fleet + workload (CI smoke)")
+    args = ap.parse_args()
+    run(fast=args.fast)

@@ -16,6 +16,7 @@ import traceback
 from . import (
     congestion,
     emission_dist,
+    fleet_e2e,
     montecarlo,
     paper_tables,
     power_model,
@@ -30,6 +31,7 @@ SUITES = {
     "congestion": lambda fast: congestion.run(n_transfers=6 if fast else 12),
     "montecarlo": lambda fast: montecarlo.run(n_jobs=30 if fast else 60),
     "solver_scaling": lambda fast: solver_scaling.run(),
+    "fleet_e2e": lambda fast: fleet_e2e.run(fast=fast),
     "roofline": lambda fast: roofline.run(),
 }
 

@@ -60,6 +60,51 @@ def check_plan(
     return FeasibilityReport(shortfall, excess, bound, feasible)
 
 
+def check_plan_batch(
+    problems: Sequence[ScheduleProblem],
+    rho_stack_bps: np.ndarray,
+    rel_tol: float = 1e-6,
+) -> list[FeasibilityReport]:
+    """Vectorized :func:`check_plan` over a (fleet, jobs, slots) plan tensor.
+
+    One reduction per constraint family across the whole fleet instead of a
+    per-problem Python loop; per-problem scalars (capacity, rate cap, slot
+    length) stack into (B,) vectors.  The returned reports are identical to
+    calling ``check_plan(problems[b], rho_stack_bps[b])`` per problem.
+    """
+    rho = np.asarray(rho_stack_bps, dtype=np.float64)
+    bsz = len(problems)
+    if rho.shape[0] != bsz:
+        raise ValueError(f"plan stack has {rho.shape[0]} plans for "
+                         f"{bsz} problems")
+    dt = np.array([p.slot_seconds for p in problems])
+    sizes = np.stack([p.size_bits for p in problems])
+    caps = np.array([p.capacity_bps for p in problems])
+    rates = np.array([p.rate_cap_bps for p in problems])
+    masks = np.stack([p.mask for p in problems])
+    delivered = rho.sum(axis=2) * dt[:, None]
+    shortfall = np.maximum(0.0, sizes - delivered)
+    used = rho.sum(axis=1)
+    excess = np.maximum(0.0, used - caps[:, None])
+    flat = rho.reshape(bsz, -1)
+    outside = np.abs(np.where(masks, 0.0, rho)).reshape(bsz, -1).max(
+        axis=1, initial=0.0)
+    over_cap = np.maximum(0.0, rho - rates[:, None, None]).reshape(
+        bsz, -1).max(axis=1, initial=0.0)
+    negative = np.maximum(0.0, -flat).max(axis=1, initial=0.0)
+    bound = np.maximum(outside, np.maximum(over_cap, negative))
+    feasible = (
+        (shortfall <= rel_tol * sizes + _BIT_TOL).all(axis=1)
+        & (excess <= rel_tol * caps[:, None]).all(axis=1)
+        & (bound <= rel_tol * rates)
+    )
+    return [
+        FeasibilityReport(shortfall[b], excess[b], float(bound[b]),
+                          bool(feasible[b]))
+        for b in range(bsz)
+    ]
+
+
 def workload_feasible(problem: ScheduleProblem) -> tuple[bool, str]:
     """Necessary-and-sufficient check for the single-link problem.
 
@@ -79,17 +124,19 @@ def workload_feasible(problem: ScheduleProblem) -> tuple[bool, str]:
             f"request {i} needs {problem.size_bits[i]:.3g} bits but can move at most "
             f"{avail[i]:.3g} before its deadline even at max threads"
         )
-    # Aggregate EDF bound.
+    # Aggregate EDF bound: one cumsum over deadline-sorted sizes replaces
+    # the per-job accumulation loop (cumsum is the identical sequential
+    # float recurrence, so messages and verdicts are unchanged).
     order = np.argsort(problem.deadlines)
-    cum = 0.0
-    for i in order:
-        cum += problem.size_bits[i]
-        t = problem.deadlines[i]
-        if cum > t * per_slot_bits + _BIT_TOL:
-            return False, (
-                f"aggregate demand with deadline <= slot {t} is {cum:.3g} bits "
-                f"but capacity is {t * per_slot_bits:.3g}"
-            )
+    cum = np.cumsum(problem.size_bits[order])
+    t = problem.deadlines[order]
+    bad = cum > t * per_slot_bits + _BIT_TOL
+    if bad.any():
+        k = int(np.argmax(bad))
+        return False, (
+            f"aggregate demand with deadline <= slot {t[k]} is {cum[k]:.3g} "
+            f"bits but capacity is {t[k] * per_slot_bits:.3g}"
+        )
     return True, "ok"
 
 
@@ -207,12 +254,19 @@ def greedy_fill_reference(
     return rho
 
 
-def repair_plan(problem: ScheduleProblem, rho_bps: np.ndarray) -> np.ndarray:
+def repair_plan(
+    problem: ScheduleProblem,
+    rho_bps: np.ndarray,
+    ranking: np.ndarray | None = None,
+    order: np.ndarray | None = None,
+) -> np.ndarray:
     """Make a nearly feasible plan exactly feasible.
 
     Clips bounds/capacity, then tops up any byte shortfall greedily on the
     cheapest remaining slots.  Used to guard iterative-solver tolerance so
     the simulator never sees SLA violations caused by solver epsilon.
+    ``ranking``/``order`` accept precomputed :func:`cheapest_slots` /
+    deadline-order arrays so fleet callers don't re-argsort per stage.
     """
     rho = np.clip(np.asarray(rho_bps, dtype=np.float64), 0.0, problem.rate_cap_bps)
     rho = np.where(problem.mask, rho, 0.0)
@@ -222,8 +276,9 @@ def repair_plan(problem: ScheduleProblem, rho_bps: np.ndarray) -> np.ndarray:
         scale = np.where(over, problem.capacity_bps / np.maximum(used, 1e-30), 1.0)
         rho = rho * scale[None, :]
 
-    ranked = cheapest_slots(problem)
-    order = np.argsort(problem.deadlines, kind="stable")
+    ranked = cheapest_slots(problem) if ranking is None else ranking
+    if order is None:
+        order = np.argsort(problem.deadlines, kind="stable")
     return greedy_fill(problem, order, ranked.__getitem__, rho_init=rho,
                        strict=True)
 
@@ -235,4 +290,17 @@ def cheapest_slots(problem: ScheduleProblem) -> np.ndarray:
     :func:`greedy_fill`, which zeroes availability outside the mask).
     """
     keyed = np.where(problem.mask, problem.cost, np.inf)
+    return np.argsort(keyed, axis=1, kind="stable")
+
+
+def earliest_slots(problem: ScheduleProblem) -> np.ndarray:
+    """(n_jobs, n_slots) earliest-first ranking of each job's usable window.
+
+    The FCFS/EDF walk order (offset..deadline ascending) as a precomputed
+    ranking matrix — the same shared-:func:`greedy_fill` contract as
+    :func:`cheapest_slots`: one argsort for all jobs, unmasked slots sort
+    to the end where they contribute nothing.
+    """
+    keyed = np.where(problem.mask, np.arange(problem.n_slots)[None, :],
+                     problem.n_slots)
     return np.argsort(keyed, axis=1, kind="stable")

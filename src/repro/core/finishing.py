@@ -1,0 +1,400 @@
+"""Batched, jit-compiled plan finishing (DESIGN.md §9).
+
+PR 1 batched the PDHG *solve* into single fleet-wide launches and PR 2
+batched Monte-Carlo *evaluation*, but every plan still passed one-at-a-time
+through a host-side Python tail — ``repair_plan`` → ``vertex_round`` →
+``refine_plan`` → ``check_plan`` — so at fleet scale the scheduler was
+finishing-bound, not solver-bound (Amdahl).  This module rebuilds that tail
+as a batched subsystem that finishes the entire fleet in a handful of
+device calls:
+
+* :func:`waterfill_batch` — capacity-tracked greedy filling as a
+  ``lax.scan`` over jobs (the carry is the shared remaining slot capacity)
+  whose fleet axis ``vmap``s.  Per-job slot walks are the same cumsum
+  waterfilling as ``feasibility.greedy_fill``, which remains the numpy
+  parity oracle.
+* :func:`repair_batch` / :func:`vertex_round_batch` — the two greedy
+  finishing stages stacked across the whole fleet (clip/rescale and the
+  keep-fraction threshold are plain vectorized tensor ops feeding the same
+  waterfill scan).
+* :func:`refine_batch` — LinTS+ exact-emission refinement: all candidate
+  remainder slots of a job are scored in ONE vectorized cell-emission
+  call, jobs sweep via the same scan carry (the shared per-slot usage),
+  and rounds iterate on the host — one device call per round.
+  ``core.refine.refine_plan`` is the numpy oracle.
+* validation goes through ``feasibility.check_plan_batch`` (one reduction
+  per constraint family over the (fleet, jobs, slots) tensor).
+
+Everything runs in float64 (``jax.experimental.enable_x64`` scoped to these
+calls — the solver itself stays f32) so batched plans match the sequential
+oracles to float64 rounding.  ``lints.solve_batch`` routes through this
+module by default; ``LinTSConfig(finishing="sequential")`` keeps the
+per-plan oracle tail for parity tests and benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from .feasibility import _BIT_TOL, cheapest_slots
+from .plan import InfeasibleError
+from .power import GBPS, JOULES_PER_KWH
+from .problem import ScheduleProblem
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemStack:
+    """Dense fleet tensors: per-problem scalars become (B,) arrays.
+
+    Rankings and job orders are computed host-side with the exact same
+    stable numpy argsorts the sequential oracles use, so the batched and
+    sequential paths walk slots in the identical order.
+    """
+
+    cost: np.ndarray          # (B, n, m) float64
+    mask: np.ndarray          # (B, n, m) bool
+    size_bits: np.ndarray     # (B, n)
+    ranking: np.ndarray       # (B, n, m) cheapest-first slot ranking
+    inv_ranking: np.ndarray   # (B, n, m) its inverse permutation
+    order: np.ndarray         # (B, n) deadline-stable job order
+    inv_order: np.ndarray     # (B, n) its inverse permutation
+    n_valid: np.ndarray       # (B, n) masked-slot count per job
+    rate_cap_bps: np.ndarray  # (B,)
+    capacity_bps: np.ndarray  # (B,)
+    slot_seconds: np.ndarray  # (B,)
+    l_gbps: np.ndarray        # (B,)
+    p_min_w: np.ndarray       # (B,)
+    delta_p_w: np.ndarray     # (B,)
+    s_rho: np.ndarray         # (B,)
+    s_p: np.ndarray           # (B,)
+    theta_max: np.ndarray     # (B,)
+
+    @property
+    def n_problems(self) -> int:
+        return int(self.cost.shape[0])
+
+
+def stack_problems(problems: Sequence[ScheduleProblem]) -> ProblemStack:
+    if not problems:
+        raise ValueError("need at least one problem to stack")
+    shape = problems[0].cost.shape
+    for i, p in enumerate(problems):
+        if p.cost.shape != shape:
+            raise ValueError("fleet finishing requires same-shape problems "
+                             f"(problem {i}: {p.cost.shape} vs {shape})")
+    ranking = np.stack([cheapest_slots(p) for p in problems])
+    order = np.stack([np.argsort(p.deadlines, kind="stable")
+                      for p in problems])
+    return ProblemStack(
+        cost=np.stack([p.cost for p in problems]).astype(np.float64),
+        mask=np.stack([p.mask for p in problems]),
+        size_bits=np.stack([p.size_bits for p in problems]),
+        # XLA CPU lowers batched scatters poorly, so the kernels phrase
+        # every scatter-at-ranked-slots as a gather through the inverse
+        # permutation — precomputed here once per fleet.
+        ranking=ranking,
+        inv_ranking=np.argsort(ranking, axis=-1),
+        order=order,
+        inv_order=np.argsort(order, axis=-1),
+        n_valid=np.stack([p.mask.sum(axis=1) for p in problems]),
+        rate_cap_bps=np.array([p.rate_cap_bps for p in problems]),
+        capacity_bps=np.array([p.capacity_bps for p in problems]),
+        slot_seconds=np.array([p.slot_seconds for p in problems]),
+        l_gbps=np.array([p.l_gbps for p in problems]),
+        p_min_w=np.array([p.power.p_min_w for p in problems]),
+        delta_p_w=np.array([p.power.delta_p_w for p in problems]),
+        s_rho=np.array([p.power.s_rho for p in problems]),
+        s_p=np.array([p.power.s_p for p in problems]),
+        theta_max=np.array([p.power.theta_max for p in problems]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Capacity-tracked waterfilling as a scan over jobs
+# ---------------------------------------------------------------------------
+
+def _waterfill_one(rho, size_bits, mask, ranking, inv_ranking, order,
+                   inv_order, rate_cap, cap_bps, dt):
+    """``greedy_fill`` (cheapest-ranking, strict-agnostic) for ONE problem.
+
+    The scan carry is ONLY the shared remaining slot capacity: each job is
+    visited once, so its own row — its need and per-cell headroom — is
+    fixed at scan entry and precomputes vectorized.  The per-job body is
+    the identical cumsum waterfilling as the numpy path; its take row (a
+    scan output, in ranked-slot space) maps back to slot space afterwards.
+    All permutation moves are gathers (through the precomputed inverses) —
+    never scatters, which XLA CPU lowers to per-element loops.  Returns
+    ``(rho, need_after)`` with ``need_after[i]`` the undeliverable bits of
+    job ``i`` (strictness is decided by the host, which can raise with a
+    per-job message).
+    """
+    cell_cap_bits = rate_cap * dt
+    slot_left0 = cap_bps * dt - rho.sum(axis=0) * dt
+    need0 = size_bits - rho.sum(axis=1) * dt
+    avail_cell = jnp.take_along_axis(
+        jnp.where(mask, cell_cap_bits - rho * dt, 0.0), ranking, axis=-1)
+
+    def body(slot_left, i):
+        avail = jnp.where(
+            avail_cell[i] > 0.0,
+            jnp.minimum(avail_cell[i], slot_left[ranking[i]]),
+            0.0,
+        )
+        avail = jnp.maximum(avail, 0.0)
+        need = need0[i]
+        cum_before = jnp.cumsum(avail) - avail
+        take = jnp.clip(need - cum_before, 0.0, avail)
+        take = jnp.where(need > _BIT_TOL, take, 0.0)
+        slot_left = slot_left - take[inv_ranking[i]]
+        return slot_left, (take, jnp.maximum(need - take.sum(), 0.0))
+
+    _, (takes, left) = jax.lax.scan(body, slot_left0, order)
+    takes_by_job = takes[inv_order]
+    rho = rho + jnp.take_along_axis(takes_by_job, inv_ranking, axis=-1) / dt
+    need_after = left[inv_order]
+    return rho, need_after
+
+
+@jax.jit
+def _waterfill_kernel(rho, size_bits, mask, ranking, inv_ranking, order,
+                      inv_order, rate_cap, cap_bps, dt):
+    return jax.vmap(_waterfill_one)(rho, size_bits, mask, ranking,
+                                    inv_ranking, order, inv_order,
+                                    rate_cap, cap_bps, dt)
+
+
+@jax.jit
+def _repair_kernel(rho, size_bits, mask, ranking, inv_ranking, order,
+                   inv_order, rate_cap, cap_bps, dt):
+    def one(rho, size_bits, mask, ranking, inv_ranking, order, inv_order,
+            rate_cap, cap_bps, dt):
+        rho = jnp.where(mask, jnp.clip(rho, 0.0, rate_cap), 0.0)
+        used = rho.sum(axis=0)
+        scale = jnp.where(used > cap_bps,
+                          cap_bps / jnp.maximum(used, 1e-30), 1.0)
+        rho = rho * scale[None, :]
+        return _waterfill_one(rho, size_bits, mask, ranking, inv_ranking,
+                              order, inv_order, rate_cap, cap_bps, dt)
+
+    return jax.vmap(one)(rho, size_bits, mask, ranking, inv_ranking, order,
+                         inv_order, rate_cap, cap_bps, dt)
+
+
+@jax.jit
+def _round_kernel(rho, size_bits, mask, ranking, inv_ranking, order,
+                  inv_order, rate_cap, cap_bps, dt, keep_frac):
+    def one(rho, size_bits, mask, ranking, inv_ranking, order, inv_order,
+            rate_cap, cap_bps, dt):
+        kept = jnp.where(rho >= keep_frac * rate_cap, rho, 0.0)
+        return _waterfill_one(kept, size_bits, mask, ranking, inv_ranking,
+                              order, inv_order, rate_cap, cap_bps, dt)
+
+    return jax.vmap(one)(rho, size_bits, mask, ranking, inv_ranking, order,
+                         inv_order, rate_cap, cap_bps, dt)
+
+
+def _stack_args(stack: ProblemStack):
+    return (
+        jnp.asarray(stack.size_bits), jnp.asarray(stack.mask),
+        jnp.asarray(stack.ranking), jnp.asarray(stack.inv_ranking),
+        jnp.asarray(stack.order), jnp.asarray(stack.inv_order),
+        jnp.asarray(stack.rate_cap_bps), jnp.asarray(stack.capacity_bps),
+        jnp.asarray(stack.slot_seconds),
+    )
+
+
+def _strict_check(stack: ProblemStack, need_after: np.ndarray,
+                  stage: str) -> None:
+    bad = need_after > _BIT_TOL + 1e-9 * stack.size_bits
+    if bad.any():
+        b, i = (int(k) for k in np.argwhere(bad)[0])
+        raise InfeasibleError(
+            f"{stage}: problem {b}, job {i}: {need_after[b, i]:.4g} bits "
+            "undeliverable (algorithmic slot choice too restrictive)"
+        )
+
+
+def waterfill_batch(
+    stack: ProblemStack, rho_init_bps: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Batched strict-agnostic greedy fill (cheapest ranking, deadline
+    order).  Returns ``(rho, need_after)`` as float64 numpy arrays."""
+    with enable_x64():
+        rho, need = _waterfill_kernel(
+            jnp.asarray(rho_init_bps, jnp.float64), *_stack_args(stack))
+    return np.array(rho, np.float64), np.array(need, np.float64)
+
+
+def repair_batch(stack: ProblemStack, rho_stack_bps: np.ndarray) -> np.ndarray:
+    """Batched :func:`~repro.core.feasibility.repair_plan` (strict).
+
+    Clip to bounds/mask, rescale oversubscribed slots, top up shortfalls on
+    each job's cheapest slots — one device call for the whole fleet.
+    Raises :class:`InfeasibleError` naming the first stranded (problem,
+    job) pair, like the sequential path does per problem.
+    """
+    with enable_x64():
+        rho, need = _repair_kernel(
+            jnp.asarray(rho_stack_bps, jnp.float64), *_stack_args(stack))
+    rho = np.array(rho, np.float64)
+    _strict_check(stack, np.asarray(need, np.float64), "repair")
+    return rho
+
+
+def vertex_round_batch(
+    stack: ProblemStack, rho_stack_bps: np.ndarray, keep_frac: float = 0.95
+) -> tuple[np.ndarray, np.ndarray]:
+    """Batched :func:`~repro.core.pdhg.vertex_round`.
+
+    Keeps cells at ≥ ``keep_frac`` of the rate cap and re-places each
+    remainder greedily.  Problems whose rounding strands bytes (tight
+    capacity) fall back to their input plan — the batched equivalent of the
+    sequential ``try/except InfeasibleError`` — flagged False in the
+    returned (B,) ``rounded`` mask.
+    """
+    rho_in = np.asarray(rho_stack_bps, np.float64)
+    with enable_x64():
+        rho, need = _round_kernel(
+            jnp.asarray(rho_in, jnp.float64), *_stack_args(stack),
+            jnp.asarray(keep_frac, jnp.float64))
+    need = np.asarray(need, np.float64)
+    rounded = ~(need > _BIT_TOL + 1e-9 * stack.size_bits).any(axis=1)
+    out = np.where(rounded[:, None, None], np.asarray(rho, np.float64),
+                   rho_in)
+    return out, rounded
+
+
+# ---------------------------------------------------------------------------
+# Batched LinTS+ refinement
+# ---------------------------------------------------------------------------
+
+def _cell_emission_b(c, rho_bps, dt, l_gbps, p_min, dp, s_rho, s_p,
+                     theta_max):
+    """Exact per-cell emission — the jnp twin of ``refine._cell_emission``
+    (Eq. 4 threads → Eq. 3 power → gCO2), with the power-model scalars
+    passed explicitly so the fleet axis can vmap over them."""
+    rho_g = rho_bps / GBPS
+    denom = jnp.maximum(l_gbps - rho_g, 1e-12)
+    theta = jnp.clip((1.0 / (l_gbps * s_rho)) * (rho_g / denom),
+                     0.0, theta_max)
+    p = dp * (1.0 - 1.0 / (s_p * dp * theta + 1.0)) + p_min
+    p = jnp.where(theta > 0, p, 0.0)
+    return p * dt / JOULES_PER_KWH * c
+
+
+@jax.jit
+def _refine_round_kernel(rho, cost, n_valid, ranking, inv_ranking, rate_cap,
+                         cap_bps, dt, l_gbps, p_min, dp, s_rho, s_p,
+                         theta_max):
+    """One LinTS+ round for the whole fleet: scan over jobs carrying the
+    shared per-slot usage, every job's candidate slots scored in one
+    vectorized emission call.  Returns ``(rho, gain, improved)``.  The
+    mask enters through ``ranking``/``n_valid``: masked slots rank first,
+    positions ≥ ``n_valid[i]`` are never candidates.  Candidate rows build
+    in ranked-slot space and map back via the inverse permutation — pure
+    gathers, no batched scatters (same rationale as the waterfill scan)."""
+
+    def one(rho, cost, n_valid, ranking, inv_ranking, rate_cap, cap_bps, dt,
+            l_gbps, p_min, dp, s_rho, s_p, theta_max):
+        n_slots = rho.shape[-1]
+        cap_bits = rate_cap * dt
+        # Scale-aware headroom slack — must match refine_plan's eps_bits
+        # so knife-edge saturated slots resolve identically on both paths.
+        eps_bits = 1e-9 * cap_bits
+        pos = jnp.arange(n_slots)
+        cost_ranked = jnp.take_along_axis(cost, ranking, axis=-1)
+
+        def emis(c_row, rho_row):
+            return _cell_emission_b(c_row, rho_row, dt, l_gbps, p_min, dp,
+                                    s_rho, s_p, theta_max).sum()
+
+        def body(carry, i):
+            # Carry is only the shared per-slot usage (+ scalars): within a
+            # round each row is touched exactly once, at its own step, so
+            # ``rho`` stays the closed-over round-entry plan and the final
+            # rows are the scan outputs.
+            slot_used, gain, improved = carry
+            row = rho[i]
+            need_bits = row.sum() * dt
+            cur_e = emis(cost[i], row)
+            head = jnp.maximum(
+                jnp.minimum(cap_bps - (slot_used - row), rate_cap), 0.0)
+            h_bits = head[ranking[i]] * dt
+            posv = pos < n_valid[i]
+            # Full cells at the cheapest slots with full headroom.
+            full_ok = posv & (h_bits + eps_bits >= cap_bits)
+            n_full = jnp.minimum(jnp.floor(need_bits / cap_bits),
+                                 full_ok.sum().astype(rho.dtype))
+            place = full_ok & (jnp.cumsum(full_ok) <= n_full)
+            new_ranked = jnp.where(place, rate_cap, 0.0)
+            remaining = need_bits - n_full * cap_bits
+            need_rem = remaining > 1.0
+            # Remainder: every candidate slot scored in one emission call.
+            cand = posv & (~place) & (h_bits + eps_bits >= remaining)
+            e_cand = jnp.where(
+                cand,
+                _cell_emission_b(cost_ranked[i], remaining / dt, dt, l_gbps,
+                                 p_min, dp, s_rho, s_p, theta_max),
+                jnp.inf,
+            )
+            k = jnp.argmin(e_cand)
+            found = e_cand[k] < jnp.inf
+            new_ranked = jnp.where(need_rem & found & (pos == k),
+                                   remaining / dt, new_ranked)
+            new_row = new_ranked[inv_ranking[i]]
+            placeable = jnp.where(need_rem, found, True)
+            new_e = emis(cost[i], new_row)
+            accept = (placeable & (new_e < cur_e - 1e-9)
+                      & (need_bits > 1.0) & (n_valid[i] > 0))
+            new_row = jnp.where(accept, new_row, row)
+            slot_used = jnp.where(accept, slot_used - row + new_row,
+                                  slot_used)
+            gain = gain + jnp.where(accept, cur_e - new_e, 0.0)
+            return (slot_used, gain, improved | accept), new_row
+
+        carry = (rho.sum(axis=0), jnp.asarray(0.0, rho.dtype),
+                 jnp.asarray(False))
+        (_, gain, improved), rows = jax.lax.scan(
+            body, carry, jnp.arange(rho.shape[0]))
+        return rows, gain, improved
+
+    return jax.vmap(one)(rho, cost, n_valid, ranking, inv_ranking, rate_cap,
+                         cap_bps, dt, l_gbps, p_min, dp, s_rho, s_p,
+                         theta_max)
+
+
+def refine_batch(
+    stack: ProblemStack, rho_stack_bps: np.ndarray, max_rounds: int = 4
+) -> tuple[np.ndarray, np.ndarray]:
+    """Batched :func:`~repro.core.refine.refine_plan` for the whole fleet.
+
+    One device call per round; rounds stop early once NO problem improves
+    (problems that converged earlier pass through later rounds unchanged,
+    exactly like the sequential per-problem round loop).  Returns
+    ``(rho, gain_gco2)`` with ``gain_gco2`` of shape (B,).
+    """
+    gains = np.zeros(stack.n_problems)
+    with enable_x64():
+        rho = jnp.asarray(rho_stack_bps, jnp.float64)
+        args = (
+            jnp.asarray(stack.cost),
+            jnp.asarray(stack.n_valid), jnp.asarray(stack.ranking),
+            jnp.asarray(stack.inv_ranking),
+            jnp.asarray(stack.rate_cap_bps), jnp.asarray(stack.capacity_bps),
+            jnp.asarray(stack.slot_seconds), jnp.asarray(stack.l_gbps),
+            jnp.asarray(stack.p_min_w), jnp.asarray(stack.delta_p_w),
+            jnp.asarray(stack.s_rho), jnp.asarray(stack.s_p),
+            jnp.asarray(stack.theta_max),
+        )
+        for _ in range(max_rounds):
+            rho, gain, improved = _refine_round_kernel(rho, *args)
+            gains += np.asarray(gain, np.float64)
+            if not bool(np.asarray(improved).any()):
+                break
+    return np.array(rho, np.float64), gains

@@ -11,17 +11,17 @@ from typing import Iterable
 
 import numpy as np
 
-from .feasibility import greedy_fill
+from .feasibility import earliest_slots, greedy_fill
 from .montecarlo import emissions_totals
 from .plan import InfeasibleError, Plan
 from .problem import ScheduleProblem
 
 
 def _time_order(problem: ScheduleProblem):
-    def ranker(i: int) -> Iterable[int]:
-        return range(int(problem.offsets[i]), int(problem.deadlines[i]))
-
-    return ranker
+    """Earliest-slot-first ranking rows (shared :func:`earliest_slots`
+    matrix: one argsort for all jobs instead of a per-job range; unmasked
+    slots rank last and contribute nothing in ``greedy_fill``)."""
+    return earliest_slots(problem).__getitem__
 
 
 def _edf_order(problem: ScheduleProblem) -> np.ndarray:

@@ -18,7 +18,12 @@ from typing import Sequence
 
 import numpy as np
 
-from .feasibility import check_plan, repair_plan, workload_feasible
+from .feasibility import (
+    check_plan,
+    check_plan_batch,
+    repair_plan,
+    workload_feasible,
+)
 from .pdhg import (
     PDHGConfig,
     normalize_problem,
@@ -46,6 +51,11 @@ class LinTSConfig:
     # (core/refine.py).  Returned plan is tagged "lints+".
     refine: bool = False
     validate: bool = True              # assert feasibility of the returned plan
+    # Fleet post-solve path (solve_batch only): "batched" finishes the whole
+    # fleet through core/finishing.py (jitted scan/vmap repair, rounding,
+    # refinement, one-reduction validation — DESIGN.md §9); "sequential"
+    # keeps the per-plan numpy oracle tail for parity tests and benchmarks.
+    finishing: str = "batched"
 
 
 def build(
@@ -112,7 +122,11 @@ def solve_batch(
     hands the whole fleet to :func:`~repro.core.pdhg.pdhg_solve_batch`,
     which early-exits each LP individually (per-problem iteration counts
     land in each plan's meta).  On TPU the restart windows of the entire
-    fleet run as single chunked Pallas launches (DESIGN.md §5).
+    fleet run as single chunked Pallas launches (DESIGN.md §5).  The
+    post-solve tail (repair → vertex-round → refine → validate) finishes
+    the whole fleet through the batched pipeline in ``core/finishing.py``
+    by default (DESIGN.md §9); ``config.finishing="sequential"`` keeps the
+    per-plan numpy oracle path.
     """
     if config.backend != "pdhg":
         raise ValueError("solve_batch is the TPU-native fleet path; "
@@ -146,23 +160,90 @@ def solve_batch(
         kernel_interpret=config.pdhg.kernel_interpret,
     )
     xs = np.asarray(xs, dtype=np.float64)
+    rates = np.array([p.rate_cap_bps for p in problems])
+    rho_stack = xs * rates[:, None, None]
+    if config.finishing == "batched":
+        return _finish_batched(problems, rho_stack, diag, config)
+    if config.finishing == "sequential":
+        return _finish_sequential(problems, rho_stack, diag, config)
+    raise ValueError(f"unknown finishing {config.finishing!r} "
+                     "(expected 'batched' or 'sequential')")
+
+
+def _base_meta(diag, i: int, n: int, config: LinTSConfig) -> dict:
+    return {
+        "backend": "pdhg",
+        "iterations": int(diag["iterations"][i]),
+        "converged": bool(diag["converged"][i]),
+        "primal_residual": float(diag["primal_residual"][i]),
+        "gap": float(diag["gap"][i]),
+        "batch_index": i,
+        "batch_size": n,
+        "finishing": config.finishing,
+    }
+
+
+def _finish_batched(
+    problems: Sequence[ScheduleProblem],
+    rho_stack: np.ndarray,
+    diag,
+    config: LinTSConfig,
+) -> list[Plan]:
+    """Fleet finishing in a handful of device calls (DESIGN.md §9)."""
+    from . import finishing
+
+    stack = finishing.stack_problems(problems)
+    costs = stack.cost
+    rho_stack = finishing.repair_batch(stack, rho_stack)
+    objective = np.einsum("bnm,bnm->b", costs, rho_stack)
+    rounded = np.zeros(len(problems), dtype=bool)
+    obj_rounded = None
+    if config.vertex_round:
+        rho_stack, rounded = finishing.vertex_round_batch(stack, rho_stack)
+        obj_rounded = np.einsum("bnm,bnm->b", costs, rho_stack)
+    gains = None
+    obj_refined = None
+    if config.refine:
+        rho_stack, gains = finishing.refine_batch(stack, rho_stack)
+        obj_refined = np.einsum("bnm,bnm->b", costs, rho_stack)
+    if config.validate:
+        reports = check_plan_batch(problems, rho_stack, rel_tol=1e-5)
+        for i, report in enumerate(reports):
+            if not report.feasible:
+                raise InfeasibleError(
+                    f"batched pdhg produced an infeasible plan for problem "
+                    f"{i} (worst violation {report.worst():.3g})"
+                )
+    plans = []
+    for i in range(len(problems)):
+        meta = _base_meta(diag, i, len(problems), config)
+        meta["objective"] = float(objective[i])
+        algorithm = "lints"
+        if rounded[i]:
+            meta["vertex_rounded"] = True
+            meta["objective_rounded"] = float(obj_rounded[i])
+        if config.refine:
+            meta["refined"] = True
+            meta["refine_gain_gco2"] = float(gains[i])
+            meta["objective_refined"] = float(obj_refined[i])
+            algorithm = "lints+"
+        plans.append(Plan(rho_stack[i], algorithm, meta))
+    return plans
+
+
+def _finish_sequential(
+    problems: Sequence[ScheduleProblem],
+    rho_stack: np.ndarray,
+    diag,
+    config: LinTSConfig,
+) -> list[Plan]:
+    """Per-plan numpy oracle tail (the pre-batching path, kept for parity)."""
     plans = []
     for i, p in enumerate(problems):
-        rho = repair_plan(p, xs[i] * p.rate_cap_bps)
-        plan = Plan(
-            rho,
-            "lints",
-            {
-                "backend": "pdhg",
-                "objective": float((p.cost * rho).sum()),
-                "iterations": int(diag["iterations"][i]),
-                "converged": bool(diag["converged"][i]),
-                "primal_residual": float(diag["primal_residual"][i]),
-                "gap": float(diag["gap"][i]),
-                "batch_index": i,
-                "batch_size": len(problems),
-            },
-        )
+        rho = repair_plan(p, rho_stack[i])
+        meta = _base_meta(diag, i, len(problems), config)
+        meta["objective"] = float((p.cost * rho).sum())
+        plan = Plan(rho, "lints", meta)
         if config.vertex_round:
             try:
                 plan = vertex_round(p, plan)

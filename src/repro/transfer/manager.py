@@ -85,6 +85,10 @@ class TransferManager:
         self.transfers: dict[str, ManagedTransfer] = {}
         self._plan_rho: dict[str, np.ndarray] = {}   # rid -> (n_slots,) bps
         self._plan_last_slot: dict[str, int] = {}
+        # Stacked copy of _plan_rho for vectorized reserved-capacity sums;
+        # rebuilt lazily after every replan.
+        self._plan_matrix: np.ndarray | None = None
+        self._plan_rids: list[str] = []
         # Combined per-path actual-trace intensities; traces are frozen, so
         # entries never invalidate.
         self._path_ci: dict[tuple[str, ...], np.ndarray] = {}
@@ -99,14 +103,30 @@ class TransferManager:
         is out of the picture at slot j only once it finished *before* j:
         one that completes in slot j itself moved bits on the link in j, so
         its reservation still throttles same-slot best-effort traffic.
+
+        The planned rates sum over a stacked (transfers, slots) matrix in
+        one vectorized pass; ``tick`` calls this ONCE per slot and tracks
+        intra-tick best-effort usage on top, so a tick is O(transfers), not
+        O(transfers**2).
         """
-        used = sum(
-            float(r[j]) for rid, r in self._plan_rho.items()
-            if j < len(r)
-            and (t := self.transfers.get(rid)) is not None
+        return max(0.0, self.capacity_gbps * GBPS - self._reserved_bps(j))
+
+    def _reserved_bps(self, j: int) -> float:
+        """Planned (still-live) rate reserved on the link at slot j."""
+        if self._plan_matrix is None:
+            self._plan_rids = list(self._plan_rho)
+            self._plan_matrix = (
+                np.stack([self._plan_rho[rid] for rid in self._plan_rids])
+                if self._plan_rids else np.zeros((0, self.forecast.n_slots))
+            )
+        if not self._plan_rids or j >= self._plan_matrix.shape[1]:
+            return 0.0
+        alive = np.array([
+            (t := self.transfers.get(rid)) is not None
             and (t.done_slot is None or t.done_slot >= j)
-        )
-        return max(0.0, self.capacity_gbps * GBPS - used)
+            for rid in self._plan_rids
+        ])
+        return float(self._plan_matrix[alive, j].sum())
 
     def _actual_path_intensity(self, path: tuple[str, ...]) -> np.ndarray:
         """Cached path-combined intensity on the actual (noisy) trace —
@@ -143,6 +163,7 @@ class TransferManager:
         live = [t for t in self.pending()
                 if t.remaining_bits > 1.0 and t.deadline_slot > self.slot]
         self._plan_rho = {}
+        self._plan_matrix = None
         self._needs_plan = False
         if not live:
             return
@@ -164,6 +185,7 @@ class TransferManager:
             self._plan_rho[t.request_id] = plan.rho_bps[i]
             nz = np.flatnonzero(plan.rho_bps[i])
             self._plan_last_slot[t.request_id] = int(nz[-1]) if nz.size else -1
+        self._plan_matrix = None
 
     # ----------------------------------------------------------------- tick
     def tick(self, congestion: float = 1.0) -> None:
@@ -173,6 +195,11 @@ class TransferManager:
         dt = self.forecast.slot_seconds
         j = self.slot
         drifted = False
+        # Reserved capacity is computed ONCE per tick; each best-effort
+        # grant is charged against it so two tail completions in the same
+        # slot can never jointly oversubscribe the link.
+        free_bps = self.capacity_bps_free(j)
+        best_effort_bps = 0.0
         for t in self.pending():
             planned = self._plan_rho.get(t.request_id)
             rho = (
@@ -180,6 +207,7 @@ class TransferManager:
                 if planned is not None and j < self.forecast.n_slots
                 else 0.0
             )
+            best_effort = False
             past_plan = j > self._plan_last_slot.get(t.request_id, -1)
             if rho <= 0.0 and past_plan and t.remaining_bits > 1.0 \
                     and j < t.deadline_slot:
@@ -191,11 +219,14 @@ class TransferManager:
                 # Slivers (or congested links) finish best-effort at full
                 # rate: replanning them costs ~P_min per extra active slot.
                 rho = min(self.power.rate_cap_gbps(self.capacity_gbps) * GBPS,
-                          self.capacity_bps_free(j))
+                          free_bps - best_effort_bps)
+                best_effort = True
             if rho <= 0.0:
                 if j >= t.deadline_slot and t.remaining_bits > 1.0:
                     t.violated = True
                 continue
+            if best_effort:
+                best_effort_bps += rho
             achieved = rho * congestion
             moved = min(achieved * dt, t.remaining_bits)
             # Emissions: threads for the *achieved* throughput, actual trace.

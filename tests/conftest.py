@@ -19,6 +19,25 @@ def small_problem(paper_traces):
     return lints.build(reqs, paper_traces, capacity_gbps=0.5)
 
 
+@pytest.fixture()
+def saturated_problem():
+    """2 jobs x 2 slots at exactly full link capacity, plus the matching
+    half-half plan: every slot is saturated and no single slot can host
+    either job's remainder, so LinTS+ refinement must take its
+    keep-current fallback and return the plan unchanged."""
+    traces = trace.TraceSet(slot_seconds=900.0,
+                            zone_slots={"A": np.array([400.0, 300.0])})
+    need_bits = 0.5e9 * 900.0          # == capacity_bps * slot_seconds
+    reqs = [
+        problem.TransferRequest(size_gb=need_bits / 8e9, deadline_slots=2,
+                                path=("A",), request_id=f"r{i}")
+        for i in range(2)
+    ]
+    prob = lints.build(reqs, traces, capacity_gbps=0.5)
+    rho = np.full((2, 2), prob.capacity_bps / 2)
+    return prob, rho
+
+
 def random_problem(rng: np.random.Generator, n_jobs=None, n_slots=None,
                    capacity_gbps=None):
     """Random feasible-ish scheduling problem for property tests."""

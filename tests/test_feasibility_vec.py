@@ -78,6 +78,47 @@ def test_greedy_fill_duplicate_ranker_indices(small_problem):
     np.testing.assert_allclose(a, b, atol=_BPS_TOL)
 
 
+def _workload_feasible_loop(p):
+    """Pre-vectorization per-job EDF accumulation (parity oracle)."""
+    from repro.core.feasibility import _BIT_TOL
+
+    per_slot_bits = p.capacity_bps * p.slot_seconds
+    avail = (p.deadlines - p.offsets) * p.rate_cap_bps * p.slot_seconds
+    bad = p.size_bits > avail + _BIT_TOL
+    if bad.any():
+        i = int(np.argmax(bad))
+        return False, (
+            f"request {i} needs {p.size_bits[i]:.3g} bits but can move at "
+            f"most {avail[i]:.3g} before its deadline even at max threads"
+        )
+    order = np.argsort(p.deadlines)
+    cum = 0.0
+    for i in order:
+        cum += p.size_bits[i]
+        t = p.deadlines[i]
+        if cum > t * per_slot_bits + _BIT_TOL:
+            return False, (
+                f"aggregate demand with deadline <= slot {t} is {cum:.3g} "
+                f"bits but capacity is {t * per_slot_bits:.3g}"
+            )
+    return True, "ok"
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_workload_feasible_matches_loop_oracle(seed):
+    """The cumsum aggregate-EDF bound reproduces the accumulation loop —
+    verdict AND message — on feasible and (scaled-up) infeasible loads."""
+    import dataclasses
+
+    from repro.core.feasibility import workload_feasible
+
+    rng = np.random.default_rng(seed)
+    p = random_problem(rng)
+    for factor in (1.0, 3.0, 40.0):
+        scaled = dataclasses.replace(p, size_bits=p.size_bits * factor)
+        assert workload_feasible(scaled) == _workload_feasible_loop(scaled)
+
+
 def test_repair_plan_still_repairs(small_problem):
     p = small_problem
     rng = np.random.default_rng(3)

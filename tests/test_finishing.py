@@ -1,0 +1,216 @@
+"""Batched finishing pipeline (core/finishing.py) vs the numpy oracles.
+
+Every stage of the fleet tail — scan-over-jobs waterfilling, repair,
+vertex rounding, LinTS+ refinement, validation — is pinned to the
+sequential per-problem implementation it replaces (DESIGN.md §9 oracle
+discipline)."""
+
+import numpy as np
+import pytest
+
+from conftest import random_problem
+from repro.core import finishing, lints
+from repro.core.feasibility import (
+    check_plan,
+    check_plan_batch,
+    cheapest_slots,
+    greedy_fill,
+    repair_plan,
+    workload_feasible,
+)
+from repro.core.lints import _finish_batched, _finish_sequential
+from repro.core.pdhg import vertex_round
+from repro.core.plan import InfeasibleError, Plan
+from repro.core.refine import refine_plan
+
+# Same tolerance story as test_feasibility_vec: slot rates are O(1e8) bps,
+# so 1e-3 bps absolute is ~1e-11 relative (summation-order noise only).
+_BPS_TOL = 1e-3
+
+
+def _fleet(n_problems=4, n_jobs=8, n_slots=32, seed0=0):
+    """Same-shape, workload-feasible random problems."""
+    probs, seed = [], seed0
+    while len(probs) < n_problems:
+        p = random_problem(np.random.default_rng(seed),
+                           n_jobs=n_jobs, n_slots=n_slots)
+        seed += 1
+        if workload_feasible(p)[0]:
+            probs.append(p)
+    return probs
+
+
+def _perturbed_greedy_stack(probs, scale=(0.5, 1.0), seed0=100):
+    """Feasible greedy plans, multiplicatively under-delivered — the
+    repairable-but-imperfect input shape a solver tail actually sees."""
+    rho = []
+    for b, p in enumerate(probs):
+        order = np.argsort(p.deadlines, kind="stable")
+        base = greedy_fill(p, order, cheapest_slots(p).__getitem__,
+                           strict=False)
+        rng = np.random.default_rng(seed0 + b)
+        rho.append(base * rng.uniform(*scale, base.shape))
+    return np.stack(rho)
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return _fleet()
+
+
+@pytest.fixture(scope="module")
+def fleet_stack(fleet):
+    return finishing.stack_problems(fleet)
+
+
+def test_waterfill_batch_matches_greedy_fill(fleet, fleet_stack):
+    rng = np.random.default_rng(0)
+    rho0 = np.stack([
+        np.where(p.mask & (rng.uniform(0, 1, p.mask.shape) > 0.7),
+                 0.4 * p.rate_cap_bps, 0.0)
+        for p in fleet
+    ])
+    rho_b, need = finishing.waterfill_batch(fleet_stack, rho0)
+    for b, p in enumerate(fleet):
+        order = np.argsort(p.deadlines, kind="stable")
+        ref = greedy_fill(p, order, cheapest_slots(p).__getitem__,
+                          rho_init=rho0[b], strict=False)
+        np.testing.assert_allclose(rho_b[b], ref, atol=_BPS_TOL)
+    assert (need <= 1.0 + 1e-9 * fleet_stack.size_bits).all()
+
+
+def test_repair_batch_matches_repair_plan(fleet, fleet_stack):
+    bad = _perturbed_greedy_stack(fleet)
+    rep_b = finishing.repair_batch(fleet_stack, bad)
+    for b, p in enumerate(fleet):
+        ref = repair_plan(p, bad[b])
+        np.testing.assert_allclose(rep_b[b], ref, atol=_BPS_TOL)
+        assert check_plan(p, rep_b[b]).feasible
+
+
+def test_repair_batch_raises_like_sequential():
+    """Unrepairable corruption: both paths raise, naming a stranded job."""
+    probs = [random_problem(np.random.default_rng(3), n_jobs=8, n_slots=32)]
+    stack = finishing.stack_problems(probs)
+    rng = np.random.default_rng(9)
+    bad = (rng.uniform(0, 2.0 * probs[0].rate_cap_bps, probs[0].cost.shape)
+           * probs[0].mask)[None]
+    seq_raises = False
+    try:
+        repair_plan(probs[0], bad[0])
+    except InfeasibleError:
+        seq_raises = True
+    if not seq_raises:
+        pytest.skip("corruption happened to be repairable")
+    with pytest.raises(InfeasibleError):
+        finishing.repair_batch(stack, bad)
+
+
+def test_vertex_round_batch_matches_vertex_round(fleet, fleet_stack):
+    rho = finishing.repair_batch(
+        fleet_stack, _perturbed_greedy_stack(fleet))
+    vr_b, rounded = finishing.vertex_round_batch(fleet_stack, rho)
+    for b, p in enumerate(fleet):
+        try:
+            ref = vertex_round(p, Plan(rho[b], "lints")).rho_bps
+        except InfeasibleError:
+            # Sequential fallback keeps the raw plan — so must the batch.
+            assert not rounded[b]
+            np.testing.assert_array_equal(vr_b[b], rho[b])
+            continue
+        assert rounded[b]
+        np.testing.assert_allclose(vr_b[b], ref, atol=_BPS_TOL)
+
+
+def test_refine_batch_matches_refine_plan(fleet, fleet_stack):
+    rho, _ = finishing.vertex_round_batch(
+        fleet_stack,
+        finishing.repair_batch(fleet_stack, _perturbed_greedy_stack(fleet)))
+    rf_b, gains = finishing.refine_batch(fleet_stack, rho)
+    for b, p in enumerate(fleet):
+        ref = refine_plan(p, Plan(rho[b], "lints"))
+        np.testing.assert_allclose(rf_b[b], ref.rho_bps, atol=_BPS_TOL)
+        assert gains[b] == pytest.approx(ref.meta["refine_gain_gco2"],
+                                         rel=1e-9, abs=1e-9)
+        assert check_plan(p, rf_b[b]).feasible
+
+
+def test_refine_batch_keeps_saturated_plan(saturated_problem):
+    """Batched keep-current fallback: no slot fits the remainder."""
+    prob, rho = saturated_problem
+    stack = finishing.stack_problems([prob])
+    out, gains = finishing.refine_batch(stack, rho[None])
+    np.testing.assert_array_equal(out[0], rho)
+    assert gains[0] == 0.0
+
+
+def test_check_plan_batch_matches_check_plan(fleet, fleet_stack):
+    rho = finishing.repair_batch(
+        fleet_stack, _perturbed_greedy_stack(fleet))
+    rho[1, 0] *= 1.5   # corrupt one problem: over-cap + capacity excess
+    reports = check_plan_batch(fleet, rho)
+    for b, p in enumerate(fleet):
+        ref = check_plan(p, rho[b])
+        got = reports[b]
+        assert got.feasible == ref.feasible
+        np.testing.assert_array_equal(got.byte_shortfall_bits,
+                                      ref.byte_shortfall_bits)
+        np.testing.assert_array_equal(got.capacity_excess_bps,
+                                      ref.capacity_excess_bps)
+        assert got.bound_violation_bps == ref.bound_violation_bps
+    assert not reports[1].feasible
+
+
+def test_finish_batched_matches_sequential_end_to_end():
+    """Full tail (repair → round → refine → validate): fleet-batched vs the
+    per-plan oracle path, same solver output in, ≤1e-9 rel objective out."""
+    probs = _fleet(3, n_jobs=6, n_slots=32)
+    rho0 = _perturbed_greedy_stack(probs, scale=(0.3, 0.9))
+    n = len(probs)
+    diag = {
+        "iterations": np.zeros(n, np.int64),
+        "primal_residual": np.zeros(n),
+        "gap": np.zeros(n),
+        "converged": np.ones(n, bool),
+    }
+    cfg = lints.LinTSConfig(backend="pdhg", refine=True)
+    batched = _finish_batched(probs, rho0.copy(), diag, cfg)
+    sequential = _finish_sequential(
+        probs, rho0.copy(), diag,
+        lints.LinTSConfig(backend="pdhg", refine=True,
+                          finishing="sequential"))
+    for b, (a, s) in enumerate(zip(batched, sequential)):
+        assert a.algorithm == s.algorithm == "lints+"
+        np.testing.assert_allclose(a.rho_bps, s.rho_bps, atol=_BPS_TOL)
+        assert a.meta.get("vertex_rounded") == s.meta.get("vertex_rounded")
+        for key in ("objective", "objective_refined"):
+            assert a.meta[key] == pytest.approx(s.meta[key], rel=1e-9)
+
+
+def test_solve_batch_routes_through_batched_finishing(paper_traces):
+    from repro.core.pdhg import PDHGConfig
+    from repro.core.problem import paper_workload
+
+    probs = [
+        lints.build(paper_workload(n_jobs=4, seed=s), paper_traces, 0.5)
+        for s in range(2)
+    ]
+    cfg = lints.LinTSConfig(
+        backend="pdhg",
+        pdhg=PDHGConfig(max_iters=6000, check_every=200, tol=3e-4),
+        refine=True,
+    )
+    assert cfg.finishing == "batched"   # the default fleet path
+    plans = lints.solve_batch(probs, cfg)
+    for p, plan in zip(probs, plans):
+        assert plan.meta["finishing"] == "batched"
+        assert plan.algorithm == "lints+"
+        assert plan.meta["refined"] and "objective_refined" in plan.meta
+        assert check_plan(p, plan.rho_bps, rel_tol=1e-5).feasible
+
+
+def test_stack_problems_rejects_mixed_shapes():
+    a = random_problem(np.random.default_rng(0), n_jobs=4, n_slots=16)
+    b = random_problem(np.random.default_rng(1), n_jobs=4, n_slots=24)
+    with pytest.raises(ValueError):
+        finishing.stack_problems([a, b])

@@ -118,6 +118,27 @@ def test_capacity_freed_after_transfer_completes():
     assert tm.capacity_bps_free(j) < full
 
 
+def test_best_effort_tail_shares_capacity():
+    """Regression: each best-effort tail completion was granted
+    ``capacity_bps_free`` without accounting for bits already taken by
+    earlier best-effort transfers in the same slot, so two tail
+    completions could jointly exceed link capacity."""
+    tm = _manager(replan_on_drift=False)
+    rids = [tm.enqueue(size_gb=100.0, src="a", dst="b", deadline_slots=96)
+            for _ in range(2)]
+    # Drop the plan entirely: both transfers run best-effort this slot.
+    tm._needs_plan = False
+    tm._plan_rho = {}
+    tm._plan_matrix = None
+    before = {r: tm.transfers[r].remaining_bits for r in rids}
+    tm.tick()
+    moved = sum(before[r] - tm.transfers[r].remaining_bits for r in rids)
+    cap_bits = tm.capacity_gbps * 1e9 * tm.forecast.slot_seconds
+    assert moved <= cap_bits * (1 + 1e-9)
+    # Sharing, not starvation: the second transfer got the leftover.
+    assert all(before[r] > tm.transfers[r].remaining_bits for r in rids)
+
+
 def test_actual_path_intensity_cached():
     tm = _manager()
     ci1 = tm._actual_path_intensity(ZONES)
