@@ -2,14 +2,15 @@
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
 
 from repro.configs.lints_paper import PAPER
-from repro.core import heuristics, lints
+from repro.core import api, lints
 from repro.core.problem import build_problem, paper_workload
-from repro.core.simulator import evaluate_ensemble, evaluate_plan, noisy_costs
+from repro.core.simulator import evaluate_ensemble, evaluate_many, noisy_costs
 from repro.core.trace import make_trace_set
 
 
@@ -24,26 +25,32 @@ def paper_setup(n_jobs: int | None = None, seed: int = 0):
     return reqs, traces
 
 
-def paper_plans(prob, backend: str = "scipy"):
-    """The paper's algorithm roster as plans for one problem.
+def paper_roster(backend: str = "scipy") -> list[api.Policy]:
+    """The paper's §IV-A algorithm configurations as registry policies.
 
     Heuristics run best-effort: at 25% capacity the paper's own workload is
     deadline-infeasible for arrival-order scheduling (cf. the empty
     worst-case cell in its Table II); the reports carry sla_violations.
     LinTS itself is solved strictly — the LP is feasible at every capacity.
     """
-    plans = [lints.solve(prob, lints.LinTSConfig(backend=backend))]
-    # Beyond-paper: emission-aware refinement (reported as "lints+").
-    plans.append(lints.solve(prob, lints.LinTSConfig(backend=backend,
-                                                     refine=True)))
-    plans.append(heuristics.fcfs(prob, best_effort=True))
-    plans.append(heuristics.edf(prob, best_effort=True))
-    plans.append(heuristics.worst_case(
-        prob, n_random=PAPER.worst_case_random_plans, best_effort=True))
-    plans.append(heuristics.single_threshold(prob, best_effort=True))
-    plans.append(heuristics.double_threshold(prob, alpha=PAPER.dt_alpha,
-                                             best_effort=True))
-    return plans
+    cfg = lints.LinTSConfig(backend=backend)
+    return [
+        api.get_policy("lints", config=cfg),
+        # Beyond-paper: emission-aware refinement (reported as "lints+").
+        api.get_policy("lints+", config=dataclasses.replace(cfg, refine=True)),
+        api.get_policy("fcfs", best_effort=True),
+        api.get_policy("edf", best_effort=True),
+        api.get_policy("worst_case", best_effort=True,
+                       options={"n_random": PAPER.worst_case_random_plans}),
+        api.get_policy("single_threshold", best_effort=True),
+        api.get_policy("double_threshold", best_effort=True,
+                       options={"alpha": PAPER.dt_alpha}),
+    ]
+
+
+def paper_plans(prob, backend: str = "scipy"):
+    """The paper's algorithm roster as plans for one problem."""
+    return [policy.plan(prob) for policy in paper_roster(backend)]
 
 
 def run_all_algorithms(reqs, traces, capacity_gbps: float, noise: float,
@@ -52,8 +59,7 @@ def run_all_algorithms(reqs, traces, capacity_gbps: float, noise: float,
     single-draw path; prefer :func:`run_all_algorithms_ensemble`)."""
     prob = build_problem(reqs, traces, capacity_gbps, PAPER.power)
     cost_eval = noisy_costs(reqs, traces, noise, seed=noise_seed)
-    plans = paper_plans(prob, backend)
-    return {p.algorithm: evaluate_plan(prob, p, cost_eval) for p in plans}
+    return evaluate_many(prob, paper_plans(prob, backend), cost_eval)
 
 
 def run_all_algorithms_ensemble(reqs, traces, capacity_gbps: float,

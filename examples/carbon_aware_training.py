@@ -29,7 +29,7 @@ def main() -> None:
     ckpt_gb, every_h, sla_h, horizon_h = 25.0, 4, 24, 48
     slots_per_h = 4
 
-    tm = TransferManager(topo, traces, capacity_gbps=1.0,
+    tm = TransferManager(topo, traces, capacity_gbps=1.0, policy="lints",
                          config=lints.LinTSConfig(backend="scipy"))
     for h in range(0, horizon_h, every_h):
         # advance the clock to the commit time, then enqueue.

@@ -1,12 +1,14 @@
-"""Quickstart: schedule a handful of inter-datacenter transfers with LinTS
-and compare against every baseline heuristic.
+"""Quickstart: one Scheduler facade, every registered scheduling policy.
+
+Schedule a handful of inter-datacenter transfers with LinTS and compare
+against every baseline through the unified Policy API (repro.core.api):
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import heuristics, lints, problem, simulator, trace
+from repro.core import api, problem, simulator, trace
 
 # 72h of synthetic ElectricityMaps-style traces for a 3-node route
 # (source datacenter -> backbone hop -> destination datacenter).
@@ -25,22 +27,27 @@ requests = [
     for i in range(6)
 ]
 
-# Build the LP and solve it (paper-faithful SciPy backend; use
-# backend="pdhg" for the TPU-native solver).
-prob = lints.build(requests, traces, capacity_gbps=0.5)
-plan = lints.solve(prob, lints.LinTSConfig(backend="scipy"))
+# The facade: build the LP and plan it under the paper-faithful policy
+# ("lints" = SciPy backend; "lints_pdhg" is the TPU-native solver and
+# "lints+" adds exact-emission refinement).
+sched = api.Scheduler("lints")
+prob = sched.build(requests, traces, capacity_gbps=0.5)
+plan = sched.plan(prob)
 
 threads = plan.threads(prob)
 print("LinTS thread plan (jobs x first 16 slots):")
 print(np.round(threads[:, :16], 1))
 print(f"active (job, slot) cells: {plan.active_slots()} slots used")
 
-# Evaluate emissions under 5% forecast noise, against all baselines.
+# Evaluate emissions under 5% forecast noise: the policy-comparison sweep
+# is one loop over the registry.
 cost_eval = simulator.noisy_costs(requests, traces, sigma=0.05, seed=7)
-print(f"\n{'algorithm':20s} {'kgCO2':>8s}  {'vs LinTS':>8s}")
-lints_kg = simulator.evaluate_plan(prob, plan, cost_eval).total_kg
-for name, fn in [("lints", lambda p: plan)] + sorted(heuristics.HEURISTICS.items()):
-    rep = simulator.evaluate_plan(prob, fn(prob), cost_eval)
+plans = [plan] + [api.get_policy(name).plan(prob)
+                  for name in api.available_policies() if name != "lints"]
+reports = simulator.evaluate_many(prob, plans, cost_eval)
+lints_kg = reports["lints"].total_kg
+print(f"\n{'policy':20s} {'kgCO2':>8s}  {'vs lints':>8s}")
+for name, rep in sorted(reports.items()):
     delta = 100 * (rep.total_kg - lints_kg) / lints_kg
     print(f"{name:20s} {rep.total_kg:8.4f}  {delta:+7.1f}%")
     assert rep.sla_violations == 0

@@ -4,6 +4,10 @@ high-variability zone traces, bandwidth limited to 25/50/75% of the 1 Gbps
 first hop, 5% and 15% forecast noise — every cell evaluated as a
 Monte-Carlo ensemble (>=32 noise draws, mean +- 95% CI on the mean).
 
+The algorithm roster comes from the unified Policy registry
+(``repro.core.api`` via ``benchmarks.common.paper_roster``); reports are
+keyed by unique policy name, so ORDER below names registry policies.
+
     PYTHONPATH=src python examples/reproduce_paper.py [--fast] [--draws N]
 
 Writes artifacts/paper_tables.csv and prints the comparison against the

@@ -12,10 +12,13 @@ Submodules:
   simulator      noisy-trace emissions evaluation
   montecarlo     batched Monte-Carlo ensemble evaluation (mean/std/CI)
   feasibility    checks, greedy fill, repair
-  lints          public scheduling API
+  ragged         mixed-shape fleet bucketing/padding (DESIGN.md §10)
+  lints          LinTS solver internals (+ legacy deprecation shims)
+  api            the public scheduling surface: Policy registry + Scheduler
 """
 
 from . import (  # noqa: F401
+    api,
     feasibility,
     heuristics,
     lints,
@@ -24,10 +27,21 @@ from . import (  # noqa: F401
     plan,
     power,
     problem,
+    ragged,
     scipy_backend,
     simulator,
     trace,
 )
+from .api import (  # noqa: F401
+    Policy,
+    Scheduler,
+    available_policies,
+    get_policy,
+    register_policy,
+)
+# Deliberately deprecated re-exports: `schedule`/`solve` keep old top-level
+# imports working but emit a one-time DeprecationWarning when CALLED — the
+# blessed equivalents are api.schedule / get_policy(...).plan.
 from .lints import LinTSConfig, build, schedule, solve  # noqa: F401
 from .plan import InfeasibleError, Plan  # noqa: F401
 from .problem import ScheduleProblem, TransferRequest, build_problem, paper_workload  # noqa: F401

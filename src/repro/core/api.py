@@ -1,0 +1,296 @@
+"""Unified Policy API: one scheduler facade over every algorithm.
+
+The paper positions LinTS as a library "designed to integrate with data
+transfer services" and evaluates it head-to-head against FCFS/EDF/threshold
+heuristics.  This module is that integration seam: every algorithm — LinTS
+(scipy or pdhg backend), LinTS+ refinement, and all baseline heuristics —
+registers as a named :class:`Policy` exposing the same two methods:
+
+    plan(problem)        -> Plan
+    plan_batch(problems) -> list[Plan]     (heterogeneous shapes welcome)
+
+A registry (:func:`get_policy`, :func:`available_policies`,
+:func:`register_policy`) replaces the ad-hoc per-module entry points
+(``lints.solve`` / ``heuristics.HEURISTICS`` / hand-rolled rosters), so a
+policy-comparison sweep is just::
+
+    for name in available_policies():
+        plans[name] = get_policy(name).plan(problem)
+
+``plan_batch`` has NO same-shape restriction: LinTS fleets route through
+:mod:`repro.core.ragged`, which buckets problems by (jobs, slots) shape,
+pads within buckets with inert zero-size jobs, runs the batched
+Pallas/finishing pipeline per bucket (DESIGN.md §5/§9/§10), and restores
+per-problem metadata on the way out.
+
+The :class:`Scheduler` facade ties the entry points together (requests ->
+problem -> plan, plus the spatiotemporal LP) and is what the online engine
+(:class:`repro.transfer.TransferManager`) and the benchmark roster build on.
+The legacy ``lints.solve`` / ``lints.schedule`` / ``lints.solve_batch``
+survive as thin deprecation shims delegating here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Protocol, Sequence, runtime_checkable
+
+from . import heuristics as _heuristics
+from . import lints as _lints
+from .plan import Plan
+from .power import DEFAULT_POWER_MODEL, PowerModel
+from .problem import ScheduleProblem, TransferRequest, build_problem
+from .trace import TraceSet
+
+__all__ = [
+    "Policy",
+    "LinTSPolicy",
+    "HeuristicPolicy",
+    "Scheduler",
+    "register_policy",
+    "get_policy",
+    "available_policies",
+    "resolve_policy",
+    "schedule",
+]
+
+
+@runtime_checkable
+class Policy(Protocol):
+    """One scheduling algorithm behind a uniform planning interface.
+
+    Implementations are small frozen dataclasses (configuration travels in
+    fields, so variants are ``dataclasses.replace`` away).  Every returned
+    plan carries ``meta["policy"] = name`` — the unique registry key the
+    evaluation layer reports under (``plan.algorithm`` stays the paper's
+    algorithm family tag and may collide across configs).
+    """
+
+    name: str
+
+    def plan(self, problem: ScheduleProblem) -> Plan:
+        """Schedule one problem."""
+        ...
+
+    def plan_batch(self, problems: Sequence[ScheduleProblem]) -> list[Plan]:
+        """Schedule a fleet of problems (shapes may differ per problem)."""
+        ...
+
+
+def _stamp(plan: Plan, name: str, index: int | None = None,
+           size: int | None = None) -> Plan:
+    plan.meta["policy"] = name
+    if index is not None:
+        plan.meta["batch_index"] = index
+        plan.meta["batch_size"] = size
+    return plan
+
+
+@dataclasses.dataclass(frozen=True)
+class LinTSPolicy:
+    """The paper's LP scheduler as a :class:`Policy`.
+
+    ``plan`` solves one problem with ``config`` (scipy = paper-faithful,
+    pdhg = TPU-native).  ``plan_batch`` on the pdhg backend schedules a
+    heterogeneous fleet through the ragged batched pipeline; on the scipy
+    backend (a host-side sequential solver with nothing to batch) it solves
+    per problem, so both backends accept mixed-shape fleets.
+    """
+
+    config: _lints.LinTSConfig = _lints.LinTSConfig()
+    name: str = "lints"
+
+    def plan(self, problem: ScheduleProblem) -> Plan:
+        return _stamp(_lints._solve(problem, self.config), self.name)
+
+    def plan_batch(self, problems: Sequence[ScheduleProblem]) -> list[Plan]:
+        problems = list(problems)
+        if not problems:
+            return []
+        if self.config.backend == "pdhg":
+            from . import ragged
+
+            plans = ragged.solve_batch_ragged(problems, self.config)
+            for plan in plans:  # ragged restores batch meta; add the name
+                _stamp(plan, self.name)
+        else:
+            plans = [
+                _stamp(_lints._solve(p, self.config), self.name, i,
+                       len(problems))
+                for i, p in enumerate(problems)
+            ]
+        return plans
+
+
+@dataclasses.dataclass(frozen=True)
+class HeuristicPolicy:
+    """A baseline heuristic (FCFS/EDF/worst-case/thresholds) as a Policy.
+
+    ``best_effort`` delivers what fits instead of raising
+    :class:`~repro.core.plan.InfeasibleError` (the paper's Table II setting
+    at 25% capacity); ``options`` forwards algorithm-specific keywords
+    (e.g. ``n_random`` for worst-case, ``alpha`` for double-threshold).
+    """
+
+    name: str
+    fn: Callable[..., Plan]
+    best_effort: bool = False
+    options: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def plan(self, problem: ScheduleProblem) -> Plan:
+        plan = self.fn(problem, best_effort=self.best_effort,
+                       **dict(self.options))
+        return _stamp(plan, self.name)
+
+    def plan_batch(self, problems: Sequence[ScheduleProblem]) -> list[Plan]:
+        problems = list(problems)
+        return [
+            _stamp(self.plan(p), self.name, i, len(problems))
+            for i, p in enumerate(problems)
+        ]
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Policy] = {}
+
+
+def register_policy(policy: Policy, *, overwrite: bool = False) -> Policy:
+    """Register ``policy`` under ``policy.name``; returns it for chaining."""
+    if not overwrite and policy.name in _REGISTRY:
+        raise ValueError(
+            f"policy {policy.name!r} already registered "
+            "(pass overwrite=True to replace)"
+        )
+    _REGISTRY[policy.name] = policy
+    return policy
+
+
+def available_policies() -> tuple[str, ...]:
+    """Sorted names of every registered policy."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get_policy(name: str, **overrides: Any) -> Policy:
+    """Look up a registered policy; keyword overrides build a variant.
+
+    Overrides are ``dataclasses.replace`` fields of the registered instance,
+    e.g. ``get_policy("edf", best_effort=True)`` or
+    ``get_policy("lints", config=LinTSConfig(backend="pdhg"))``.
+    """
+    try:
+        policy = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown policy {name!r}; available: "
+            f"{', '.join(available_policies())}"
+        ) from None
+    if overrides:
+        if not dataclasses.is_dataclass(policy):
+            raise TypeError(
+                f"policy {name!r} is not a dataclass; get_policy overrides "
+                "require dataclass policies — construct the variant directly"
+            )
+        policy = dataclasses.replace(policy, **overrides)
+    return policy
+
+
+def resolve_policy(policy: str | Policy) -> Policy:
+    """Accept a registry name or a ready Policy instance."""
+    if isinstance(policy, str):
+        return get_policy(policy)
+    if not isinstance(policy, Policy):
+        raise TypeError(f"not a Policy: {policy!r}")
+    return policy
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+
+class Scheduler:
+    """One facade over every scheduling entry point.
+
+    Wraps a policy (by registry name or instance) and provides the
+    end-to-end conveniences that used to live on disjoint modules::
+
+        sched = Scheduler("lints")                  # or any registry name
+        plan  = sched.schedule(requests, traces, capacity_gbps=0.5)
+        plans = sched.plan_batch(problems)          # ragged fleets OK
+
+    The spatiotemporal LP (joint when-AND-which-way routing, a pure LP with
+    no per-policy variant) is exposed here too so callers need exactly one
+    import for every scheduling mode.
+    """
+
+    def __init__(self, policy: str | Policy = "lints"):
+        self.policy = resolve_policy(policy)
+
+    @property
+    def name(self) -> str:
+        return self.policy.name
+
+    def plan(self, problem: ScheduleProblem) -> Plan:
+        return self.policy.plan(problem)
+
+    def plan_batch(self, problems: Sequence[ScheduleProblem]) -> list[Plan]:
+        return self.policy.plan_batch(problems)
+
+    def build(
+        self,
+        requests: Sequence[TransferRequest],
+        traces: TraceSet,
+        capacity_gbps: float,
+        power: PowerModel = DEFAULT_POWER_MODEL,
+    ) -> ScheduleProblem:
+        return build_problem(requests, traces, capacity_gbps, power)
+
+    def schedule(
+        self,
+        requests: Sequence[TransferRequest],
+        traces: TraceSet,
+        capacity_gbps: float,
+        power: PowerModel = DEFAULT_POWER_MODEL,
+    ) -> Plan:
+        """End-to-end: requests + forecasts -> plan under this policy."""
+        return self.plan(self.build(requests, traces, capacity_gbps, power))
+
+    def schedule_spatiotemporal(self, requests, traces, link_capacity_gbps,
+                                power: PowerModel = DEFAULT_POWER_MODEL):
+        """Joint route+time LP (see :mod:`repro.core.spatial`)."""
+        from .spatial import solve_spatiotemporal
+
+        return solve_spatiotemporal(requests, traces, link_capacity_gbps,
+                                    power)
+
+
+def schedule(
+    requests: Sequence[TransferRequest],
+    traces: TraceSet,
+    capacity_gbps: float,
+    power: PowerModel = DEFAULT_POWER_MODEL,
+    *,
+    policy: str | Policy = "lints",
+) -> Plan:
+    """Module-level convenience: ``Scheduler(policy).schedule(...)``."""
+    return Scheduler(policy).schedule(requests, traces, capacity_gbps, power)
+
+
+# ---------------------------------------------------------------------------
+# Default roster (the paper's §IV-A algorithm configurations)
+# ---------------------------------------------------------------------------
+
+register_policy(LinTSPolicy())                       # paper-faithful scipy LP
+register_policy(LinTSPolicy(
+    config=_lints.LinTSConfig(backend="pdhg"), name="lints_pdhg"))
+register_policy(LinTSPolicy(                         # beyond-paper refinement
+    config=_lints.LinTSConfig(refine=True), name="lints+"))
+register_policy(HeuristicPolicy("fcfs", _heuristics.fcfs))
+register_policy(HeuristicPolicy("edf", _heuristics.edf))
+register_policy(HeuristicPolicy("worst_case", _heuristics.worst_case))
+register_policy(HeuristicPolicy("single_threshold",
+                                _heuristics.single_threshold))
+register_policy(HeuristicPolicy("double_threshold",
+                                _heuristics.double_threshold))

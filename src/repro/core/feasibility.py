@@ -71,6 +71,11 @@ def check_plan_batch(
     per-problem Python loop; per-problem scalars (capacity, rate cap, slot
     length) stack into (B,) vectors.  The returned reports are identical to
     calling ``check_plan(problems[b], rho_stack_bps[b])`` per problem.
+
+    Ragged-fleet callers (core/ragged.py) pass *padded* problems here:
+    padded jobs have zero size (so zero shortfall) and an all-False mask
+    (so any rate on them shows up as a bound violation) — validation is a
+    backstop for the padding invariants as well as for the solver.
     """
     rho = np.asarray(rho_stack_bps, dtype=np.float64)
     bsz = len(problems)

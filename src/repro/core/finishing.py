@@ -27,9 +27,16 @@ device calls:
 
 Everything runs in float64 (``jax.experimental.enable_x64`` scoped to these
 calls — the solver itself stays f32) so batched plans match the sequential
-oracles to float64 rounding.  ``lints.solve_batch`` routes through this
-module by default; ``LinTSConfig(finishing="sequential")`` keeps the
-per-plan oracle tail for parity tests and benchmarks.
+oracles to float64 rounding.  The fleet pipeline
+(``lints._solve_batch_same_shape``, reached via the ``api`` facade) routes
+through this module by default; ``LinTSConfig(finishing="sequential")``
+keeps the per-plan oracle tail for parity tests and benchmarks.
+
+Fleets here must share one (jobs, slots) shape; ragged fleets are padded
+into that invariant by ``core/ragged.py`` (DESIGN.md §10) — its padded
+jobs carry zero size and an all-False mask, which this pipeline treats as
+inert (zero need in the waterfill scan, zero valid slots in rounding and
+refinement).
 """
 
 from __future__ import annotations
@@ -87,7 +94,10 @@ def stack_problems(problems: Sequence[ScheduleProblem]) -> ProblemStack:
     for i, p in enumerate(problems):
         if p.cost.shape != shape:
             raise ValueError("fleet finishing requires same-shape problems "
-                             f"(problem {i}: {p.cost.shape} vs {shape})")
+                             f"(problem {i}: {p.cost.shape} vs {shape}); "
+                             "mixed-shape fleets go through the ragged "
+                             "bucketing layer (core.ragged / api "
+                             "plan_batch)")
     ranking = np.stack([cheapest_slots(p) for p in problems])
     order = np.stack([np.argsort(p.deadlines, kind="stable")
                       for p in problems])

@@ -3,6 +3,12 @@
 All heuristics run requests at the highest thread count (theta_max) — i.e. at
 ``rate_cap`` throughput — in their chosen slots, with capacity-tracked sharing
 (DESIGN.md §Fidelity).  Each returns a :class:`~repro.core.plan.Plan`.
+
+The public way to run these is the :mod:`repro.core.api` registry — every
+heuristic is registered as a named :class:`~repro.core.api.HeuristicPolicy`
+(``get_policy("edf", best_effort=True).plan(problem)``), which also stamps
+the unique policy name the evaluation layer keys reports by.  The raw
+functions (and the legacy :data:`HEURISTICS` dict) remain for direct use.
 """
 
 from __future__ import annotations
@@ -167,6 +173,9 @@ def double_threshold(problem: ScheduleProblem, alpha: float = 50.0,
     return Plan(rho, "double_threshold", {"threshold_low": t, "alpha": alpha})
 
 
+# Legacy name->function map.  Superseded by the repro.core.api registry
+# (get_policy / available_policies), which wraps these same functions as
+# configurable Policy objects; kept so old imports keep working.
 HEURISTICS = {
     "fcfs": fcfs,
     "edf": edf,

@@ -1,19 +1,28 @@
-"""LinTS public API: the paper's scheduler as a composable library.
+"""LinTS scheduling internals + legacy entry-point shims.
 
-Typical use (mirrors §III-C "designed to integrate with data transfer
-services as a Python library"):
+The public scheduling surface now lives in :mod:`repro.core.api` (the
+Policy registry and the ``Scheduler`` facade, mirroring §III-C "designed to
+integrate with data transfer services as a Python library"):
 
-    from repro.core import lints, problem, trace
+    from repro.core import api, problem, trace
 
     traces = trace.make_trace_set(trace.PAPER_ZONES)
     reqs = problem.paper_workload()
-    plan = lints.schedule(reqs, traces, capacity_gbps=0.5)
-    threads = plan.threads(lints.build(reqs, traces, 0.5))
+    plan = api.Scheduler("lints").schedule(reqs, traces, capacity_gbps=0.5)
+
+This module keeps :class:`LinTSConfig`, problem building, and the solver
+implementations (:func:`_solve` and the same-shape fleet pipeline
+:func:`_solve_batch_same_shape` that :mod:`repro.core.ragged` buckets
+into).  The old entry points — :func:`solve`, :func:`schedule`,
+:func:`solve_batch` — remain as thin deprecation shims delegating to the
+facade, so existing imports keep working (with a one-time
+``DeprecationWarning``).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Sequence
 
 import numpy as np
@@ -67,7 +76,8 @@ def build(
     return build_problem(requests, traces, capacity_gbps, power)
 
 
-def solve(problem: ScheduleProblem, config: LinTSConfig = LinTSConfig()) -> Plan:
+def _solve(problem: ScheduleProblem, config: LinTSConfig = LinTSConfig()) -> Plan:
+    """Solve one problem (the implementation behind ``api.LinTSPolicy``)."""
     ok, why = workload_feasible(problem)
     if not ok:
         raise InfeasibleError(f"workload infeasible: {why}")
@@ -96,6 +106,23 @@ def solve(problem: ScheduleProblem, config: LinTSConfig = LinTSConfig()) -> Plan
     return plan
 
 
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.core.lints.{old} is deprecated; use {new} "
+        "(repro.core.api) instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def solve(problem: ScheduleProblem, config: LinTSConfig = LinTSConfig()) -> Plan:
+    """Deprecated shim: delegates to the :mod:`repro.core.api` facade."""
+    _deprecated("solve", "get_policy('lints').plan(problem)")
+    from .api import LinTSPolicy
+
+    return LinTSPolicy(config=config).plan(problem)
+
+
 def schedule(
     requests: Sequence[TransferRequest],
     traces: TraceSet,
@@ -103,8 +130,12 @@ def schedule(
     power: PowerModel = DEFAULT_POWER_MODEL,
     config: LinTSConfig = LinTSConfig(),
 ) -> Plan:
-    """End-to-end: requests + forecasts -> feasible carbon-minimal plan."""
-    return solve(build(requests, traces, capacity_gbps, power), config)
+    """Deprecated shim: requests + forecasts -> plan, via the facade."""
+    _deprecated("schedule", "Scheduler('lints').schedule(...)")
+    from .api import LinTSPolicy, Scheduler
+
+    return Scheduler(LinTSPolicy(config=config)).schedule(
+        requests, traces, capacity_gbps, power)
 
 
 def thread_plan(problem: ScheduleProblem, plan: Plan) -> np.ndarray:
@@ -116,6 +147,24 @@ def solve_batch(
     problems: Sequence[ScheduleProblem],
     config: LinTSConfig = LinTSConfig(backend="pdhg"),
 ) -> list[Plan]:
+    """Deprecated shim: fleet scheduling via the facade.
+
+    Unlike the historical entry point this accepts *mixed-shape* fleets —
+    ``api.LinTSPolicy.plan_batch`` routes heterogeneous problems through
+    the ragged bucketing layer (:mod:`repro.core.ragged`, DESIGN.md §10).
+    """
+    _deprecated("solve_batch", "get_policy('lints_pdhg').plan_batch(problems)")
+    from .api import LinTSPolicy
+
+    name = "lints_pdhg" if config.backend == "pdhg" else "lints"
+    return LinTSPolicy(config=config, name=name).plan_batch(problems)
+
+
+def _solve_batch_same_shape(
+    problems: Sequence[ScheduleProblem],
+    config: LinTSConfig = LinTSConfig(backend="pdhg"),
+    prechecked: bool = False,
+) -> list[Plan]:
     """Fleet-scale scheduling: solve many same-shape problems in ONE call.
 
     Stacks the normalized tensors of every (datacenter-pair) problem and
@@ -126,21 +175,24 @@ def solve_batch(
     post-solve tail (repair → vertex-round → refine → validate) finishes
     the whole fleet through the batched pipeline in ``core/finishing.py``
     by default (DESIGN.md §9); ``config.finishing="sequential"`` keeps the
-    per-plan numpy oracle path.
+    per-plan numpy oracle path.  Heterogeneous fleets are bucketed and
+    padded into this call by :func:`repro.core.ragged.solve_batch_ragged`,
+    which pre-checks feasibility itself (``prechecked=True``).
     """
     if config.backend != "pdhg":
-        raise ValueError("solve_batch is the TPU-native fleet path; "
-                         "backend must be 'pdhg'")
+        raise ValueError("the batched fleet path requires backend 'pdhg'")
     if not problems:
         return []
     shape = problems[0].cost.shape
     for i, p in enumerate(problems):
         if p.cost.shape != shape:
-            raise ValueError("solve_batch requires same-shape problems "
-                             f"(got {p.cost.shape} vs {shape})")
-        ok, why = workload_feasible(p)
-        if not ok:
-            raise InfeasibleError(f"workload {i} infeasible: {why}")
+            raise ValueError("the same-shape fleet path got mixed shapes "
+                             f"({p.cost.shape} vs {shape}); route ragged "
+                             "fleets through api plan_batch / core.ragged")
+        if not prechecked:
+            ok, why = workload_feasible(p)
+            if not ok:
+                raise InfeasibleError(f"workload {i} infeasible: {why}")
     import jax.numpy as jnp
 
     tensors = [normalize_problem(p, config.pdhg.dtype) for p in problems]

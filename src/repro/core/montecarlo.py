@@ -22,7 +22,7 @@ from typing import Sequence
 
 import numpy as np
 
-from .plan import Plan
+from .plan import Plan, report_keys
 from .power import GBPS, JOULES_PER_KWH
 from .problem import ScheduleProblem, TransferRequest
 from .trace import INTENSITY_FLOOR_GCO2_PER_KWH, TraceSet
@@ -206,9 +206,11 @@ def evaluate_ensemble(
     Either pass ``requests`` + ``traces`` (per-zone noise, path-combined —
     the semantics of ``simulator.noisy_costs``) or a precomputed
     ``cost_draws`` tensor of shape (n_draws, n_jobs, n_slots).  Returns
-    ``{algorithm: EnsembleReport}``; each report's ``total_gco2[d]``
-    matches ``evaluate_plan(problem, plan, cost_draws[d])`` (the parity
-    suite holds this to <=1e-6 relative).
+    ``{policy: EnsembleReport}`` keyed by unique policy name
+    (:func:`repro.core.plan.report_keys` — registry name, algorithm-tag
+    fallback, ``#k`` suffixes on collisions); each report's
+    ``total_gco2[d]`` matches ``evaluate_plan(problem, plan,
+    cost_draws[d])`` (the parity suite holds this to <=1e-6 relative).
     """
     if cost_draws is None:
         if requests is None or traces is None:
@@ -230,10 +232,10 @@ def evaluate_ensemble(
     violations = (delivered + 1.0 < problem.size_bits[None, :]).sum(axis=1)
 
     out: dict[str, EnsembleReport] = {}
-    for p_idx, plan in enumerate(plans):
+    for p_idx, (key, plan) in enumerate(zip(report_keys(plans), plans)):
         t = totals[p_idx]
         std = float(np.std(t, ddof=1)) if n_draws > 1 else 0.0
-        out[plan.algorithm] = EnsembleReport(
+        out[key] = EnsembleReport(
             algorithm=plan.algorithm,
             sigma=float(sigma),
             n_draws=int(n_draws),

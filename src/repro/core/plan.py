@@ -34,6 +34,35 @@ class Plan:
         """The LP objective sum(c * rho) (arbitrary units, for solver parity)."""
         return float((problem.cost * self.rho_bps).sum())
 
+    @property
+    def policy(self) -> str:
+        """Unique policy registry name this plan was produced by.
+
+        Falls back to the paper's algorithm-family tag for plans built
+        outside the :mod:`repro.core.api` registry.
+        """
+        return self.meta.get("policy") or self.algorithm
+
+
+def report_keys(plans) -> list[str]:
+    """Unique evaluation-report keys for a roster of plans.
+
+    Keys by the registry policy name (``meta["policy"]``, falling back to
+    ``plan.algorithm``) and deduplicates defensively: two plans sharing a
+    name — e.g. two LinTS configs evaluated side by side — get ``"#2"``,
+    ``"#3"`` … suffixes instead of silently overwriting each other in
+    ``{key: report}`` dicts.
+    """
+    keys: list[str] = []
+    seen: dict[str, int] = {}
+    for p in plans:
+        base = p.policy if isinstance(p, Plan) else ""
+        base = base or "plan"
+        n = seen.get(base, 0) + 1
+        seen[base] = n
+        keys.append(base if n == 1 else f"{base}#{n}")
+    return keys
+
 
 class InfeasibleError(RuntimeError):
     """Raised when a scheduler cannot meet every deadline under capacity."""

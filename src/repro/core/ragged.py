@@ -1,0 +1,171 @@
+"""Ragged fleets: heterogeneous problems through the same-shape batch pipeline.
+
+The batched PDHG solver (DESIGN.md §5) and the batched finishing tail
+(DESIGN.md §9) both require every problem in a fleet to share one
+``(n_jobs, n_slots)`` shape — a real mixed fleet (many datacenter pairs,
+different workloads, different forecast horizons) does not.  This layer
+removes the restriction without touching the batched kernels:
+
+1. **Bucket** problems by a quantized shape key (:func:`bucket_shape`):
+   jobs round up to the next power of two, slots to the next multiple of
+   32.  Quantizing keeps the number of distinct buckets — and so of jit
+   recompiles per call — logarithmic in fleet diversity instead of
+   linear.  Each bucket then solves at its members' MAX extent (not the
+   quantized ceiling): a homogeneous bucket runs at its exact shape with
+   zero padding, exactly like the historical same-shape path.
+2. **Pad** each problem to its bucket's solve shape (:func:`pad_problem`).
+   Padded
+   jobs get zero size and an all-``False`` mask — hence a zero upper bound
+   in the normalized LP — so they are *inert*: PDHG keeps their primal
+   rows and byte duals at exactly zero (zero bounds, zero demand), the
+   finishing waterfill/round/refine scans skip them (zero need, zero valid
+   slots), and validation sees zero shortfall.  Padded slots are masked
+   for every job, so no rate ever lands there either.  The solver
+   trajectory of the real block is unchanged: padding adds only zero terms
+   to every reduction and leaves ``||K||`` (max row/col nnz) as-is.
+3. **Solve** each bucket through ``lints._solve_batch_same_shape`` (the
+   batched Pallas/finishing pipeline), then **unpad**: slice the real
+   ``(n_jobs, n_slots)`` block back out — after checking the padded region
+   carries exactly zero rate — and restore fleet-level metadata
+   (``batch_index``/``batch_size`` are fleet positions; bucket bookkeeping
+   lands in ``bucket_shape``/``bucket_size``/``padded_jobs``/
+   ``padded_slots``).
+
+See DESIGN.md §10 for the invariants, and ``tests/test_ragged.py`` for the
+per-problem parity suite (mixed-shape ``plan_batch`` matches solo
+``lints.solve`` objectives to ≤1e-9 relative).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from .feasibility import workload_feasible
+from .plan import InfeasibleError, Plan
+from .problem import ScheduleProblem
+
+_JOB_BUCKET_MIN = 4
+_SLOT_BUCKET_MULTIPLE = 32
+
+
+def bucket_shape(n_jobs: int, n_slots: int) -> tuple[int, int]:
+    """Quantized padding target for a ``(n_jobs, n_slots)`` problem."""
+    if n_jobs <= 0 or n_slots <= 0:
+        raise ValueError(f"degenerate problem shape ({n_jobs}, {n_slots})")
+    b_jobs = max(_JOB_BUCKET_MIN, 1 << (n_jobs - 1).bit_length())
+    b_slots = -(-n_slots // _SLOT_BUCKET_MULTIPLE) * _SLOT_BUCKET_MULTIPLE
+    return b_jobs, b_slots
+
+
+def pad_problem(problem: ScheduleProblem, n_jobs: int,
+                n_slots: int) -> ScheduleProblem:
+    """Embed ``problem`` in an ``(n_jobs, n_slots)`` canvas of inert cells.
+
+    Padded jobs: zero size, all-False mask (=> zero LP upper bound), zero
+    cost, deadline pinned at the padded horizon so deadline-stable job
+    orders rank them last.  Padded slots: masked for every job.  All other
+    per-problem scalars (capacity, rate cap, slot length, power model) are
+    untouched.
+    """
+    n, m = problem.n_jobs, problem.n_slots
+    if (n, m) == (n_jobs, n_slots):
+        return problem
+    if n_jobs < n or n_slots < m:
+        raise ValueError(
+            f"cannot pad ({n}, {m}) down to ({n_jobs}, {n_slots})")
+    cost = np.zeros((n_jobs, n_slots), dtype=np.float64)
+    cost[:n, :m] = problem.cost
+    mask = np.zeros((n_jobs, n_slots), dtype=bool)
+    mask[:n, :m] = problem.mask
+    size_bits = np.zeros(n_jobs)
+    size_bits[:n] = problem.size_bits
+    deadlines = np.full(n_jobs, n_slots, dtype=np.int64)
+    deadlines[:n] = problem.deadlines
+    offsets = np.zeros(n_jobs, dtype=np.int64)
+    offsets[:n] = problem.offsets
+    return ScheduleProblem(
+        cost=cost,
+        mask=mask,
+        size_bits=size_bits,
+        deadlines=deadlines,
+        offsets=offsets,
+        capacity_bps=problem.capacity_bps,
+        rate_cap_bps=problem.rate_cap_bps,
+        slot_seconds=problem.slot_seconds,
+        power=problem.power,
+    )
+
+
+def _unpad_plan(problem: ScheduleProblem, plan: Plan, *, fleet_index: int,
+                fleet_size: int, bucket: tuple[int, int],
+                bucket_size: int) -> Plan:
+    """Slice the real block out of a padded plan, restoring fleet metadata."""
+    rho = np.asarray(plan.rho_bps, dtype=np.float64)
+    n, m = problem.n_jobs, problem.n_slots
+    pad_rate = max(
+        float(np.abs(rho[n:, :]).max(initial=0.0)),
+        float(np.abs(rho[:, m:]).max(initial=0.0)),
+    )
+    if pad_rate > 0.0:
+        raise RuntimeError(
+            f"ragged padding invariant violated: problem {fleet_index} "
+            f"carries {pad_rate:.3g} bps on padded cells"
+        )
+    meta = dict(plan.meta)
+    meta["batch_index"] = fleet_index
+    meta["batch_size"] = fleet_size
+    meta["bucket_shape"] = bucket
+    meta["bucket_size"] = bucket_size
+    meta["padded_jobs"] = bucket[0] - n
+    meta["padded_slots"] = bucket[1] - m
+    return Plan(rho[:n, :m].copy(), plan.algorithm, meta)
+
+
+def solve_batch_ragged(problems: Sequence[ScheduleProblem],
+                       config=None) -> list[Plan]:
+    """Schedule a heterogeneous fleet in one call (see module docstring).
+
+    Feasibility is pre-checked per problem so infeasible workloads surface
+    with their *fleet* index; buckets then solve independently through the
+    batched pipeline and results return in fleet order.
+    """
+    from . import lints  # deferred: lints' public shims delegate to the facade
+
+    problems = list(problems)
+    if config is None:
+        config = lints.LinTSConfig(backend="pdhg")
+    if config.backend != "pdhg":
+        raise ValueError("solve_batch_ragged drives the batched pdhg "
+                         f"pipeline; backend must be 'pdhg', got "
+                         f"{config.backend!r}")
+    if not problems:
+        return []
+    for i, p in enumerate(problems):
+        ok, why = workload_feasible(p)
+        if not ok:
+            raise InfeasibleError(f"workload {i} infeasible: {why}")
+
+    buckets: dict[tuple[int, int], list[int]] = {}
+    for i, p in enumerate(problems):
+        buckets.setdefault(bucket_shape(p.n_jobs, p.n_slots), []).append(i)
+
+    out: list[Plan | None] = [None] * len(problems)
+    for key in sorted(buckets):
+        idxs = buckets[key]
+        # The quantized key only GROUPS problems; the solve shape is the
+        # members' max extent, so a homogeneous bucket (e.g. a same-shape
+        # paper fleet) runs at its exact shape with ZERO padding and only
+        # genuinely mixed buckets pay for inert cells.
+        target = (max(problems[i].n_jobs for i in idxs),
+                  max(problems[i].n_slots for i in idxs))
+        padded = [pad_problem(problems[i], *target) for i in idxs]
+        plans = lints._solve_batch_same_shape(padded, config,
+                                              prechecked=True)
+        for k, i in enumerate(idxs):
+            out[i] = _unpad_plan(
+                problems[i], plans[k], fleet_index=i,
+                fleet_size=len(problems), bucket=target,
+                bucket_size=len(idxs))
+    return out

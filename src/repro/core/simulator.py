@@ -17,7 +17,7 @@ from typing import Sequence
 
 import numpy as np
 
-from .plan import Plan
+from .plan import Plan, report_keys
 from .power import GBPS, JOULES_PER_KWH  # noqa: F401  (canonical home: power)
 from .problem import ScheduleProblem, TransferRequest
 from .trace import TraceSet
@@ -85,7 +85,17 @@ def evaluate_many(
     plans: Sequence[Plan],
     cost_eval: np.ndarray | None = None,
 ) -> dict[str, EmissionsReport]:
-    return {p.algorithm: evaluate_plan(problem, p, cost_eval) for p in plans}
+    """Evaluate a roster of plans, keyed by unique policy name.
+
+    Keys come from :func:`repro.core.plan.report_keys`: the policy registry
+    name (falling back to the algorithm tag), with defensive ``#2``/``#3``
+    suffixes on collisions — two plans sharing an algorithm string (e.g.
+    two LinTS configs) no longer silently overwrite each other.
+    """
+    return {
+        key: evaluate_plan(problem, p, cost_eval)
+        for key, p in zip(report_keys(plans), plans)
+    }
 
 
 # Batched Monte-Carlo ensemble evaluation lives in core.montecarlo; re-export

@@ -15,6 +15,11 @@ This stays a pure LP (no integer path choice needed: splitting a transfer
 across routes is allowed and strictly helps the objective).  Implementation
 reuses the dense temporal machinery by expanding each (request, path) pair
 into a pseudo-job and adding shared byte constraints + per-link capacities.
+
+Reachable through the unified facade as
+``api.Scheduler(...).schedule_spatiotemporal(...)`` — the spatiotemporal LP
+has no per-policy variants, so it hangs off the Scheduler rather than the
+policy registry.
 """
 
 from __future__ import annotations
@@ -137,7 +142,8 @@ def solve_spatiotemporal(
         rho_bps=rho,
         path_share=share,
         objective=float((cost * rho).sum()),
-        meta={"n_variables": int(n_var),
+        meta={"policy": "spatiotemporal",
+              "n_variables": int(n_var),
               "n_links": len(link_ids),
               "solver_iterations": int(getattr(res, "nit", -1))},
     )

@@ -1,11 +1,15 @@
-"""Inter-datacenter transfer management: LinTS as a first-class service.
+"""Inter-datacenter transfer management: scheduling policies as a service.
 
 This is the paper's deployment story inside the training framework: the
 checkpoint manager's commit hook enqueues replication transfers (size =
 actual checkpoint bytes, deadline = replication SLA); the TransferManager
-plans them with LinTS against per-zone carbon forecasts and executes the
+plans them with a pluggable scheduling :class:`~repro.core.api.Policy`
+(default ``"lints"``) against per-zone carbon forecasts and executes the
 plan slot-by-slot on a simulated WAN, charging emissions on the *actual*
-(noisy) trace and tracking SLA compliance.
+(noisy) trace and tracking SLA compliance.  Because any registered policy
+plugs in (``TransferManager(..., policy="edf")``), the baselines run in
+the same online engine and a policy-comparison sweep is a loop over
+``api.available_policies()``.
 
 Beyond-paper: reactive replanning — §IV-C notes congestion can break plans
 and leaves replanning to future work; we implement it (``replan_on_drift``):
@@ -21,7 +25,7 @@ from typing import Sequence
 
 import numpy as np
 
-from ..core import lints
+from ..core import api, lints
 from ..core.plan import InfeasibleError
 from ..core.power import DEFAULT_POWER_MODEL, GBPS, PowerModel
 from ..core.problem import TransferRequest, build_problem
@@ -53,12 +57,16 @@ class ManagedTransfer:
     request_id: str
     size_gb: float
     path: tuple[str, ...]
-    deadline_slot: int       # absolute slot index
+    deadline_slot: int       # absolute slot index (post-truncation)
     submitted_slot: int
     remaining_bits: float
     done_slot: int | None = None
     emissions_g: float = 0.0
     violated: bool = False
+    # Slots the requested SLA reached past the forecast horizon and was
+    # truncated by (0 = the deadline fits the trace).  Surfaced in
+    # ``TransferManager.report()`` so silently tightened SLAs are visible.
+    deadline_truncated_slots: int = 0
 
 
 class TransferManager:
@@ -69,16 +77,43 @@ class TransferManager:
         actual: TraceSet | None = None,
         capacity_gbps: float = 1.0,
         power: PowerModel = DEFAULT_POWER_MODEL,
-        config: lints.LinTSConfig = lints.LinTSConfig(),
+        config: lints.LinTSConfig | None = None,
         replan_on_drift: bool = True,
         drift_tol: float = 0.10,
+        *,
+        # Keyword-only so the pre-facade positional signature (which ended
+        # at drift_tol) keeps working unchanged.
+        policy: str | api.Policy = "lints",
     ):
         self.topology = topology
         self.forecast = forecast
         self.actual = actual or forecast
         self.capacity_gbps = capacity_gbps
         self.power = power
-        self.config = config
+        resolved = api.resolve_policy(policy)
+        if (isinstance(policy, str)
+                and isinstance(resolved, api.HeuristicPolicy)
+                and not resolved.best_effort):
+            # The online engine does its own SLA accounting (violated
+            # flags, report()); a strict heuristic raising InfeasibleError
+            # mid-simulation would abort the service instead.  Registry
+            # *names* therefore resolve to best-effort here; pass a Policy
+            # instance to keep strict semantics on purpose.
+            resolved = dataclasses.replace(resolved, best_effort=True)
+        if config is not None:
+            # Back-compat: a LinTSConfig keyword reconfigures a LinTS policy
+            # (the pre-facade constructor signature).  For any other policy
+            # the kwarg would be silently dead — reject it instead.
+            if not isinstance(resolved, api.LinTSPolicy):
+                raise ValueError(
+                    f"config= only applies to LinTS policies, not "
+                    f"{resolved.name!r}; configure the policy instance "
+                    "(api.get_policy(name, **overrides)) instead"
+                )
+            resolved = dataclasses.replace(resolved, config=config)
+        self.policy = resolved
+        self.config = (resolved.config
+                       if isinstance(resolved, api.LinTSPolicy) else None)
         self.replan_on_drift = replan_on_drift
         self.drift_tol = drift_tol
         self.slot = 0
@@ -141,7 +176,12 @@ class TransferManager:
     def enqueue(self, size_gb: float, src: str, dst: str,
                 deadline_slots: int, request_id: str | None = None) -> str:
         rid = request_id or f"xfer-{next(self._ids):05d}"
-        deadline = min(self.slot + deadline_slots, self.forecast.n_slots)
+        requested = self.slot + deadline_slots
+        # An SLA past the forecast window can only be planned up to the
+        # horizon.  The truncation is RECORDED on the transfer (and
+        # surfaced by ``report()``) instead of silently tightening the
+        # deadline as the pre-facade manager did.
+        deadline = min(requested, self.forecast.n_slots)
         if deadline <= self.slot:
             raise ValueError("deadline beyond trace horizon or non-positive")
         self.transfers[rid] = ManagedTransfer(
@@ -149,6 +189,7 @@ class TransferManager:
             path=self.topology.path(src, dst), deadline_slot=deadline,
             submitted_slot=self.slot,
             remaining_bits=size_gb * 8.0e9,
+            deadline_truncated_slots=requested - deadline,
         )
         self._needs_plan = True
         return rid
@@ -179,7 +220,7 @@ class TransferManager:
         ]
         problem = build_problem(reqs, self.forecast, self.capacity_gbps,
                                 self.power)
-        plan = lints.solve(problem, self.config)
+        plan = self.policy.plan(problem)
         self._plan_last_slot = {}
         for i, t in enumerate(live):
             self._plan_rho[t.request_id] = plan.rho_bps[i]
@@ -265,10 +306,15 @@ class TransferManager:
     def report(self) -> dict:
         done = [t for t in self.transfers.values() if t.done_slot is not None]
         return {
+            "policy": self.policy.name,
             "total_emissions_kg": sum(t.emissions_g for t in self.transfers.values()) / 1000.0,
             "completed": len(done),
             "pending": len(self.pending()),
             "sla_violations": sum(t.violated for t in self.transfers.values()),
+            "deadline_truncations": sum(
+                t.deadline_truncated_slots > 0
+                for t in self.transfers.values()
+            ),
             "mean_completion_slots": (
                 float(np.mean([t.done_slot - t.submitted_slot for t in done]))
                 if done else float("nan")

@@ -14,9 +14,13 @@ def paper_traces():
 
 
 @pytest.fixture(scope="session")
-def small_problem(paper_traces):
-    reqs = problem.paper_workload(n_jobs=24, seed=3)
-    return lints.build(reqs, paper_traces, capacity_gbps=0.5)
+def paper_requests():
+    return problem.paper_workload(n_jobs=24, seed=3)
+
+
+@pytest.fixture(scope="session")
+def small_problem(paper_traces, paper_requests):
+    return lints.build(paper_requests, paper_traces, capacity_gbps=0.5)
 
 
 @pytest.fixture()

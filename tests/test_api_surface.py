@@ -1,0 +1,198 @@
+"""Guard the unified Policy API surface and the legacy deprecation shims."""
+
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import api, lints, problem, trace
+from repro.core.feasibility import check_plan
+from repro.core.plan import Plan
+
+PATH = ("US-NM", "US-WY", "US-SD")
+
+EXPECTED_POLICIES = {
+    "lints", "lints_pdhg", "lints+",
+    "fcfs", "edf", "worst_case", "single_threshold", "double_threshold",
+}
+
+
+@pytest.fixture(scope="module")
+def small_problem():
+    traces = trace.make_trace_set(PATH, hours=72, seed=0)
+    reqs = problem.paper_workload(n_jobs=5, seed=3)
+    return problem.build_problem(reqs, traces, capacity_gbps=0.5)
+
+
+# ------------------------------------------------------------------ exports
+
+def test_api_exports():
+    for name in ("Policy", "LinTSPolicy", "HeuristicPolicy", "Scheduler",
+                 "register_policy", "get_policy", "available_policies",
+                 "resolve_policy", "schedule"):
+        assert hasattr(api, name), name
+
+
+def test_core_reexports():
+    import repro.core as core
+
+    for name in ("Policy", "Scheduler", "get_policy", "available_policies",
+                 "register_policy"):
+        assert hasattr(core, name), name
+
+
+def test_default_roster():
+    assert set(api.available_policies()) == EXPECTED_POLICIES
+    assert api.available_policies() == tuple(sorted(EXPECTED_POLICIES))
+
+
+def test_get_policy_unknown_name_lists_available():
+    with pytest.raises(KeyError, match="edf"):
+        api.get_policy("no-such-policy")
+
+
+def test_policies_satisfy_protocol():
+    for name in api.available_policies():
+        pol = api.get_policy(name)
+        assert isinstance(pol, api.Policy)
+        assert pol.name == name
+
+
+def test_get_policy_overrides_build_variants():
+    strict = api.get_policy("edf")
+    lenient = api.get_policy("edf", best_effort=True)
+    assert not strict.best_effort and lenient.best_effort
+    # the registered instance is untouched
+    assert not api.get_policy("edf").best_effort
+
+    cfg = lints.LinTSConfig(backend="pdhg")
+    pol = api.get_policy("lints", config=cfg)
+    assert pol.config.backend == "pdhg" and pol.name == "lints"
+
+
+def test_register_policy_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        api.register_policy(api.HeuristicPolicy("edf", lambda p: None))
+
+
+def test_get_policy_overrides_require_dataclass(monkeypatch):
+    class Custom:
+        name = "custom"
+
+        def plan(self, problem):
+            raise NotImplementedError
+
+        def plan_batch(self, problems):
+            raise NotImplementedError
+
+    monkeypatch.setitem(api._REGISTRY, "custom", Custom())
+    assert api.get_policy("custom").name == "custom"   # plain lookup works
+    with pytest.raises(TypeError, match="dataclass"):
+        api.get_policy("custom", best_effort=True)
+
+
+# ----------------------------------------------------------------- planning
+
+def test_every_policy_plans_and_stamps_meta(small_problem):
+    for name in api.available_policies():
+        if name == "lints_pdhg":
+            continue  # iterative solver; covered by test_ragged.py
+        plan = api.get_policy(name).plan(small_problem)
+        assert isinstance(plan, Plan)
+        assert plan.meta["policy"] == name
+        assert plan.policy == name
+        assert check_plan(small_problem, plan.rho_bps, rel_tol=1e-5).feasible
+
+
+def test_scheduler_facade_end_to_end():
+    traces = trace.make_trace_set(PATH, hours=72, seed=0)
+    reqs = problem.paper_workload(n_jobs=4, seed=1)
+    sched = api.Scheduler("lints")
+    assert sched.name == "lints"
+    plan = sched.schedule(reqs, traces, capacity_gbps=0.5)
+    assert plan.meta["policy"] == "lints"
+    # module-level convenience matches the facade
+    plan2 = api.schedule(reqs, traces, 0.5, policy="lints")
+    np.testing.assert_allclose(plan2.rho_bps, plan.rho_bps)
+
+
+def test_scheduler_accepts_policy_instance(small_problem):
+    pol = api.get_policy("edf", best_effort=True)
+    plan = api.Scheduler(pol).plan(small_problem)
+    assert plan.meta["policy"] == "edf"
+
+
+def test_resolve_policy_rejects_non_policy():
+    with pytest.raises(TypeError):
+        api.resolve_policy(42)
+
+
+def test_scheduler_spatiotemporal_facade():
+    from repro.core.spatial import SpatialRequest
+    from repro.core.trace import TraceSet
+
+    traces = TraceSet(slot_seconds=900.0,
+                      zone_slots={"A": np.full(48, 200.0),
+                                  "B": np.full(48, 300.0)})
+    req = SpatialRequest(size_gb=5.0, deadline_slots=48,
+                         candidate_paths=(("A", "B"),), request_id="r0")
+    plan = api.Scheduler().schedule_spatiotemporal([req], traces, 1.0)
+    assert plan.meta["policy"] == "spatiotemporal"
+    assert plan.rho_bps.sum() > 0
+
+
+def test_heuristic_plan_batch_stamps_batch_meta(small_problem):
+    plans = api.get_policy("edf").plan_batch([small_problem, small_problem])
+    for i, p in enumerate(plans):
+        assert p.meta["batch_index"] == i
+        assert p.meta["batch_size"] == 2
+        assert p.meta["policy"] == "edf"
+
+
+# -------------------------------------------------------- deprecation shims
+
+def test_old_imports_still_work():
+    from repro.core.heuristics import HEURISTICS
+    from repro.core.lints import schedule, solve, solve_batch  # noqa: F401
+
+    assert set(HEURISTICS) == {"fcfs", "edf", "worst_case",
+                               "single_threshold", "double_threshold"}
+    assert callable(solve) and callable(schedule) and callable(solve_batch)
+
+
+def test_lints_solve_shim_warns_once_and_matches_facade(small_problem):
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("default")
+        for _ in range(2):  # same call site: the warning dedups to one
+            shim_plan = lints.solve(small_problem)
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "lints.solve is deprecated" in str(dep[0].message)
+    facade_plan = api.get_policy("lints").plan(small_problem)
+    np.testing.assert_allclose(shim_plan.rho_bps, facade_plan.rho_bps)
+
+
+def test_lints_schedule_shim_warns_and_delegates():
+    traces = trace.make_trace_set(PATH, hours=72, seed=0)
+    reqs = problem.paper_workload(n_jobs=4, seed=2)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        shim_plan = lints.schedule(reqs, traces, capacity_gbps=0.5)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert shim_plan.meta["policy"] == "lints"
+
+
+def test_lints_solve_batch_shim_warns_and_delegates(small_problem):
+    cfg = lints.LinTSConfig(
+        backend="pdhg",
+        pdhg=dataclasses.replace(lints.LinTSConfig().pdhg, max_iters=20_000,
+                                 check_every=200, tol=2e-5, use_kernel=False),
+    )
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        plans = lints.solve_batch([small_problem], cfg)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert len(plans) == 1
+    assert plans[0].meta["policy"] == "lints_pdhg"
+    assert plans[0].meta["batch_index"] == 0

@@ -1,0 +1,204 @@
+"""Ragged-fleet batching: bucketing, padding invariants, per-problem parity.
+
+The acceptance bar (ISSUE 4): a mixed-shape fleet (>=3 distinct
+(n_jobs, n_slots) shapes) through ``plan_batch`` matches per-problem
+``lints.solve`` objectives to <=1e-9 relative, padded jobs carry zero rate
+everywhere, and per-problem meta (iterations/converged/batch_index)
+survives bucketing.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import api, lints, problem, ragged, trace
+from repro.core.feasibility import check_plan
+from repro.core.pdhg import PDHGConfig
+from repro.core.plan import InfeasibleError
+
+PATH = ("US-NM", "US-WY", "US-SD")
+
+PDHG_FAST = PDHGConfig(max_iters=20_000, check_every=200, tol=2e-5,
+                       use_kernel=False)
+CFG = lints.LinTSConfig(backend="pdhg", pdhg=PDHG_FAST)
+
+
+def _mixed_fleet():
+    """Four distinct (n_jobs, n_slots) shapes, mixed capacities.  Buckets
+    solve at their members' max extent, so this exercises in-bucket job
+    padding (5->8 alongside the 8x288 member), in-bucket slot padding
+    (240->244 alongside the 6x244 member, both under quantized key
+    (8, 256)), and singleton buckets that solve at their exact shape."""
+    specs = [(5, 72, 0.5), (8, 60, 0.75), (3, 48, 0.5), (8, 72, 0.5),
+             (6, 61, 0.5)]
+    probs = []
+    for s, (n_jobs, hours, cap) in enumerate(specs):
+        traces = trace.make_trace_set(PATH, hours=hours, seed=s)
+        reqs = problem.paper_workload(
+            n_jobs=n_jobs, seed=s,
+            deadline_range_h=(int(hours * 0.6), hours - 1))
+        probs.append(lints.build(reqs, traces, cap))
+    return probs
+
+
+# ---------------------------------------------------------------- bucketing
+
+def test_bucket_shape_quantizes():
+    assert ragged.bucket_shape(5, 288) == (8, 288)
+    assert ragged.bucket_shape(8, 240) == (8, 256)
+    assert ragged.bucket_shape(3, 192) == (4, 192)
+    assert ragged.bucket_shape(1, 1) == (4, 32)
+    assert ragged.bucket_shape(9, 289) == (16, 320)
+    with pytest.raises(ValueError):
+        ragged.bucket_shape(0, 32)
+
+
+def test_pad_problem_invariants():
+    p = _mixed_fleet()[0]                      # (5, 288)
+    padded = ragged.pad_problem(p, 8, 320)
+    assert (padded.n_jobs, padded.n_slots) == (8, 320)
+    np.testing.assert_array_equal(padded.cost[:5, :288], p.cost)
+    np.testing.assert_array_equal(padded.mask[:5, :288], p.mask)
+    assert not padded.mask[5:, :].any()        # padded jobs: no usable slot
+    assert not padded.mask[:, 288:].any()      # padded slots: masked for all
+    assert (padded.size_bits[5:] == 0).all()
+    assert (padded.cost[5:, :] == 0).all() and (padded.cost[:, 288:] == 0).all()
+    np.testing.assert_array_equal(padded.size_bits[:5], p.size_bits)
+    np.testing.assert_array_equal(padded.deadlines[:5], p.deadlines)
+    assert padded.capacity_bps == p.capacity_bps
+    assert padded.rate_cap_bps == p.rate_cap_bps
+    # identity when the shape already matches
+    assert ragged.pad_problem(p, 5, 288) is p
+    with pytest.raises(ValueError):
+        ragged.pad_problem(p, 4, 288)
+
+
+# ------------------------------------------------------------------- parity
+
+@pytest.fixture(scope="module")
+def fleet_and_plans():
+    probs = _mixed_fleet()
+    plans = api.get_policy("lints_pdhg", config=CFG).plan_batch(probs)
+    return probs, plans
+
+
+def test_mixed_fleet_matches_per_problem_solve(fleet_and_plans):
+    """>=3 distinct shapes; batch objectives match solo ``lints.solve`` to
+    <=1e-9 relative (the ISSUE 4 acceptance bar)."""
+    probs, plans = fleet_and_plans
+    assert len({(p.n_jobs, p.n_slots) for p in probs}) >= 3
+    for p, plan in zip(probs, plans):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            solo = lints.solve(p, CFG)
+        ref = solo.objective(p)
+        assert plan.objective(p) == pytest.approx(ref, rel=1e-9)
+        assert plan.rho_bps.shape == (p.n_jobs, p.n_slots)
+        assert check_plan(p, plan.rho_bps, rel_tol=1e-5).feasible
+
+
+def test_per_problem_meta_survives_bucketing(fleet_and_plans):
+    probs, plans = fleet_and_plans
+    for i, (p, plan) in enumerate(zip(probs, plans)):
+        assert plan.meta["batch_index"] == i
+        assert plan.meta["batch_size"] == len(probs)
+        assert plan.meta["policy"] == "lints_pdhg"
+        assert plan.meta["converged"] is True
+        assert plan.meta["iterations"] > 0
+        bj, bs = plan.meta["bucket_shape"]
+        assert plan.meta["padded_jobs"] == bj - p.n_jobs >= 0
+        assert plan.meta["padded_slots"] == bs - p.n_slots >= 0
+    # both in-bucket padding modes really occurred in this fleet
+    assert any(plan.meta["padded_jobs"] > 0 for plan in plans)
+    assert any(plan.meta["padded_slots"] > 0 for plan in plans)
+    # bucket bookkeeping adds up (bucket_shape is the shared solve shape)
+    by_bucket: dict[tuple, int] = {}
+    for plan in plans:
+        key = tuple(plan.meta["bucket_shape"])
+        by_bucket[key] = by_bucket.get(key, 0) + 1
+    for plan in plans:
+        assert plan.meta["bucket_size"] == by_bucket[tuple(plan.meta["bucket_shape"])]
+
+
+def test_buckets_solve_at_member_max_not_quantized_ceiling(fleet_and_plans):
+    """The quantized key only groups; the solve shape is the members' max
+    extent — a homogeneous bucket pays zero padding."""
+    probs, plans = fleet_and_plans
+    shapes = {(p.n_jobs, p.n_slots): plan.meta["bucket_shape"]
+              for p, plan in zip(probs, plans)}
+    assert shapes[(5, 288)] == (8, 288)    # grouped with the 8x288 member
+    assert shapes[(8, 240)] == (8, 244)    # grouped with 6x244, NOT (8, 256)
+    assert shapes[(6, 244)] == (8, 244)
+    assert shapes[(3, 192)] == (3, 192)    # singleton: exact shape
+
+
+def test_homogeneous_fleet_pays_zero_padding():
+    traces = trace.make_trace_set(PATH, hours=72, seed=0)
+    probs = [lints.build(problem.paper_workload(n_jobs=6, seed=s),
+                         traces, 0.5) for s in range(3)]
+    plans = api.get_policy("lints_pdhg", config=CFG).plan_batch(probs)
+    for plan in plans:
+        assert plan.meta["bucket_shape"] == (6, 288)
+        assert plan.meta["padded_jobs"] == 0
+        assert plan.meta["padded_slots"] == 0
+        assert plan.meta["bucket_size"] == 3
+
+
+def test_padded_jobs_carry_zero_rate_everywhere():
+    """Solve a padded bucket directly and check the padded region of the
+    returned plans is EXACTLY zero (the invariant _unpad_plan asserts)."""
+    p = _mixed_fleet()[2]                       # (3, 192) -> pad to (4, 224)
+    padded = ragged.pad_problem(p, 4, 224)
+    plans = lints._solve_batch_same_shape([padded], CFG, prechecked=True)
+    rho = plans[0].rho_bps
+    assert rho.shape == (4, 224)
+    assert np.abs(rho[3:, :]).max() == 0.0
+    assert np.abs(rho[:, 192:]).max() == 0.0
+    # and the real block is a feasible plan for the original problem
+    assert check_plan(p, rho[:3, :192], rel_tol=1e-5).feasible
+
+
+def test_unpad_plan_raises_on_violated_invariant():
+    from repro.core.plan import Plan
+
+    p = _mixed_fleet()[2]                       # (3, 192)
+    rho = np.zeros((4, 224))
+    rho[3, 0] = 1.0                             # rate on a padded job
+    with pytest.raises(RuntimeError, match="padding invariant"):
+        ragged._unpad_plan(p, Plan(rho, "lints"), fleet_index=0,
+                           fleet_size=1, bucket=(4, 224), bucket_size=1)
+
+
+# -------------------------------------------------------------------- edges
+
+def test_empty_fleet():
+    assert ragged.solve_batch_ragged([], CFG) == []
+    assert api.get_policy("lints_pdhg").plan_batch([]) == []
+
+
+def test_infeasible_member_reports_fleet_index():
+    probs = _mixed_fleet()[:2]
+    traces = trace.make_trace_set(("US-NM",), hours=72, seed=0)
+    bad = lints.build(
+        [problem.TransferRequest(size_gb=1e6, deadline_slots=4,
+                                 path=("US-NM",), request_id="huge")],
+        traces, capacity_gbps=0.25)
+    with pytest.raises(InfeasibleError, match="workload 2 infeasible"):
+        ragged.solve_batch_ragged(probs + [bad], CFG)
+
+
+def test_ragged_rejects_scipy_backend():
+    with pytest.raises(ValueError, match="pdhg"):
+        ragged.solve_batch_ragged(_mixed_fleet()[:1],
+                                  lints.LinTSConfig(backend="scipy"))
+
+
+def test_scipy_policy_plan_batch_loops_mixed_shapes():
+    """The scipy backend accepts ragged fleets too (per-problem loop)."""
+    probs = _mixed_fleet()[:2]
+    plans = api.get_policy("lints").plan_batch(probs)
+    for i, (p, plan) in enumerate(zip(probs, plans)):
+        assert plan.rho_bps.shape == (p.n_jobs, p.n_slots)
+        assert plan.meta["batch_index"] == i
+        assert check_plan(p, plan.rho_bps, rel_tol=1e-5).feasible

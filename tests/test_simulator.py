@@ -105,3 +105,39 @@ def test_noise_floor_unified():
     floor = trace_mod.INTENSITY_FLOOR_GCO2_PER_KWH
     assert noisy.zone_slots["US-NM"].min() >= floor
     assert trace_mod.synthetic_hourly_trace("US-NM").min() >= floor
+
+
+def test_evaluate_many_keys_by_policy_and_dedups(small_problem):
+    """Regression (ISSUE 4): two plans sharing an algorithm string used to
+    silently overwrite each other in evaluate_many's report dict."""
+    from repro.core.simulator import evaluate_many
+
+    rho = np.zeros_like(small_problem.cost)
+    a = Plan(rho.copy(), "lints", {"policy": "lints"})
+    b = Plan(rho.copy(), "lints", {"policy": "lints_pdhg"})   # same algorithm
+    c = Plan(rho.copy(), "lints")                             # no policy meta
+    d = Plan(rho.copy(), "lints")                             # collides with c
+    reports = evaluate_many(small_problem, [a, b, c, d])
+    assert set(reports) == {"lints", "lints_pdhg", "lints#2", "lints#3"}
+    assert len(reports) == 4
+
+
+def test_evaluate_ensemble_keys_by_policy(small_problem, paper_requests,
+                                          paper_traces):
+    from repro.core.simulator import evaluate_ensemble
+
+    rho = np.zeros_like(small_problem.cost)
+    plans = [Plan(rho.copy(), "lints", {"policy": "lints"}),
+             Plan(rho.copy(), "lints", {"policy": "lints+"}),
+             Plan(rho.copy(), "lints")]
+    reports = evaluate_ensemble(small_problem, plans, sigma=0.05, n_draws=2,
+                                requests=paper_requests, traces=paper_traces)
+    assert set(reports) == {"lints", "lints+", "lints#2"}
+
+
+def test_report_keys_fallbacks():
+    from repro.core.plan import report_keys
+
+    rho = np.zeros((1, 1))
+    plans = [Plan(rho, ""), Plan(rho, "edf"), Plan(rho, "edf")]
+    assert report_keys(plans) == ["plan", "edf", "edf#2"]

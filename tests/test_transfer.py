@@ -151,3 +151,127 @@ def test_unknown_route_raises():
     tm = _manager()
     with pytest.raises(KeyError):
         tm.enqueue(1.0, "a", "nowhere", 96)
+
+
+# ------------------------------------------------------- pluggable policies
+
+def test_policy_defaults_to_lints():
+    tm = _manager()
+    assert tm.policy.name == "lints"
+    # back-compat: the config kwarg reconfigures the LinTS policy
+    assert tm.config.backend == "scipy"
+    assert tm.policy.config.backend == "scipy"
+
+
+def test_policy_accepts_registry_name_and_instance():
+    from repro.core import api
+
+    traces = make_trace_set(ZONES, hours=72, seed=0)
+    topo = Topology(
+        datacenters=(Datacenter("a", "US-NM"), Datacenter("b", "US-SC")),
+        routes={("a", "b"): ZONES, ("b", "a"): ZONES[::-1]},
+    )
+    tm = TransferManager(topo, traces, policy="edf")
+    assert tm.policy.name == "edf"
+    assert tm.report()["policy"] == "edf"
+    pol = api.get_policy("fcfs", best_effort=True)
+    tm2 = TransferManager(topo, traces, policy=pol)
+    assert tm2.policy is pol
+    assert tm2.config is None
+
+
+def test_heuristic_name_resolves_best_effort_and_records_sla():
+    """Regression: a strict heuristic used to escape tick() as an uncaught
+    InfeasibleError on arrival-order-infeasible workloads.  Registry names
+    now resolve to best-effort in the engine (which owns SLA accounting);
+    an explicit Policy instance keeps strict semantics."""
+    from repro.core import api
+
+    traces = make_trace_set(ZONES, hours=72, seed=0)
+    topo = Topology(
+        datacenters=(Datacenter("a", "US-NM"), Datacenter("b", "US-SC")),
+        routes={("a", "b"): ZONES, ("b", "a"): ZONES[::-1]},
+    )
+    tm = TransferManager(topo, traces, capacity_gbps=0.25, policy="fcfs")
+    assert tm.policy.best_effort
+    for i in range(10):
+        tm.enqueue(size_gb=40.0, src="a", dst="b", deadline_slots=15)
+    tm.run_until_idle(max_slots=30)          # must not raise
+    rep = tm.report()
+    assert rep["sla_violations"] >= 1        # misses are accounted, not fatal
+    # explicit instances are respected as configured
+    tm2 = TransferManager(topo, traces, policy=api.get_policy("fcfs"))
+    assert not tm2.policy.best_effort
+
+
+def test_config_kwarg_rejected_for_non_lints_policy():
+    """config= would be silently dead under a heuristic policy — the
+    manager now rejects the combination instead of ignoring it."""
+    traces = make_trace_set(ZONES, hours=72, seed=0)
+    topo = Topology(
+        datacenters=(Datacenter("a", "US-NM"), Datacenter("b", "US-SC")),
+        routes={("a", "b"): ZONES, ("b", "a"): ZONES[::-1]},
+    )
+    with pytest.raises(ValueError, match="config= only applies to LinTS"):
+        TransferManager(topo, traces, policy="edf",
+                        config=lints.LinTSConfig())
+
+
+@pytest.mark.parametrize("policy", ["edf", "fcfs"])
+def test_baseline_policy_completes_congestion_scenario(policy):
+    """The ISSUE 4 acceptance scenario: baselines run in the online engine
+    with the same SLA accounting the hardwired path gave LinTS."""
+    traces = make_trace_set(ZONES, hours=72, seed=0)
+    topo = Topology(
+        datacenters=(Datacenter("a", "US-NM"), Datacenter("b", "US-SC")),
+        routes={("a", "b"): ZONES, ("b", "a"): ZONES[::-1]},
+    )
+    tm = TransferManager(topo, traces, capacity_gbps=1.0, policy=policy,
+                         replan_on_drift=True)
+    tm.enqueue(size_gb=30.0, src="a", dst="b", deadline_slots=200)
+    tm.run_until_idle(congestion_fn=lambda s: 0.5 if s < 40 else 1.0)
+    rep = tm.report()
+    assert rep["policy"] == policy
+    assert rep["pending"] == 0
+    assert rep["completed"] == 1
+    assert rep["sla_violations"] == 0
+    assert rep["deadline_truncations"] == 0
+    # same accounting keys as the LinTS path
+    lints_rep = _manager(replan_on_drift=True).report()
+    assert set(rep) == set(lints_rep)
+
+
+def test_policy_plans_differ_between_lints_and_edf():
+    """EDF fills earliest slots; LinTS picks low-carbon ones — the engine
+    really is running the requested policy, not LinTS under an alias."""
+    traces = make_trace_set(ZONES, hours=72, seed=0)
+    topo = Topology(
+        datacenters=(Datacenter("a", "US-NM"), Datacenter("b", "US-SC")),
+        routes={("a", "b"): ZONES, ("b", "a"): ZONES[::-1]},
+    )
+    plans = {}
+    for policy in ("lints", "edf"):
+        tm = TransferManager(topo, traces, capacity_gbps=1.0, policy=policy)
+        rid = tm.enqueue(size_gb=10.0, src="a", dst="b", deadline_slots=288)
+        tm.replan()
+        plans[policy] = tm._plan_rho[rid]
+    edf_slots = np.flatnonzero(plans["edf"])
+    assert edf_slots[0] == 0            # EDF starts immediately
+    assert not np.array_equal(plans["lints"], plans["edf"])
+
+
+# ------------------------------------------------- deadline truncation (SLA)
+
+def test_enqueue_records_deadline_truncation():
+    tm = _manager()
+    n_slots = tm.forecast.n_slots
+    rid = tm.enqueue(size_gb=5.0, src="a", dst="b",
+                     deadline_slots=n_slots + 40)
+    t = tm.transfers[rid]
+    assert t.deadline_slot == n_slots
+    assert t.deadline_truncated_slots == 40
+    assert tm.report()["deadline_truncations"] == 1
+    # an in-horizon request records no truncation
+    rid2 = tm.enqueue(size_gb=5.0, src="a", dst="b", deadline_slots=96)
+    assert tm.transfers[rid2].deadline_truncated_slots == 0
+    assert tm.report()["deadline_truncations"] == 1
