@@ -22,6 +22,7 @@ from . import (
     power_model,
     roofline,
     solver_scaling,
+    spatial_scaling,
 )
 
 SUITES = {
@@ -32,6 +33,7 @@ SUITES = {
     "montecarlo": lambda fast: montecarlo.run(n_jobs=30 if fast else 60),
     "solver_scaling": lambda fast: solver_scaling.run(),
     "fleet_e2e": lambda fast: fleet_e2e.run(fast=fast),
+    "spatial_scaling": lambda fast: spatial_scaling.run(fast=fast),
     "roofline": lambda fast: roofline.run(),
 }
 

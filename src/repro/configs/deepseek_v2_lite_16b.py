@@ -4,7 +4,7 @@
 qk_rope=64, v=128), vocab=102400.  First layer is a dense FFN (d_ff=10944,
 HF value); layers 2..27 are MoE with 2 shared + 64 routed experts, top-6,
 expert d_ff=1408.  (The assignment block's "160 routed" note conflicts with
-its own "64e top-6"; the HF config says 64 — see DESIGN.md §Fidelity.)
+its own "64e top-6"; the HF config says 64 — see DESIGN.md §4 (Fidelity).)
 [arXiv:2405.04434; hf]
 """
 

@@ -14,6 +14,7 @@ Submodules:
   feasibility    checks, greedy fill, repair
   ragged         mixed-shape fleet bucketing/padding (DESIGN.md §10)
   lints          LinTS solver internals (+ legacy deprecation shims)
+  spatial        spatiotemporal (route+time) scheduling (DESIGN.md §11)
   api            the public scheduling surface: Policy registry + Scheduler
 """
 
@@ -30,6 +31,7 @@ from . import (  # noqa: F401
     ragged,
     scipy_backend,
     simulator,
+    spatial,
     trace,
 )
 from .api import (  # noqa: F401

@@ -46,6 +46,7 @@ __all__ = [
     "Policy",
     "LinTSPolicy",
     "HeuristicPolicy",
+    "SpatialPolicy",
     "Scheduler",
     "register_policy",
     "get_policy",
@@ -150,6 +151,71 @@ class HeuristicPolicy:
         ]
 
 
+@dataclasses.dataclass(frozen=True)
+class SpatialPolicy:
+    """Joint route+time scheduling (the paper's §V extension) as a Policy.
+
+    ``plan``/``plan_batch`` accept plain :class:`ScheduleProblem`\\ s — the
+    temporal LP is the spatiotemporal LP's degenerate case (one pseudo-job
+    per request, one shared link), so this policy drops into every sweep
+    and into the online engine unchanged.  The real spatial surface is
+    :meth:`plan_spatial`, which schedules fleets of
+    :class:`~repro.core.spatial.SpatialProblem`\\ s (candidate routes,
+    per-link capacities) through the batched spatiotemporal PDHG pipeline
+    (DESIGN.md §11); :class:`~repro.transfer.TransferManager` calls it to
+    route transfers over candidate paths online.
+
+    The default config rounds plans onto near-vertex cells (the plan is
+    headed for the nonlinear simulator); pass
+    ``config=SpatialSolveConfig()`` for raw LP-optimal output.
+    """
+
+    config: Any = None           # spatial.SpatialSolveConfig (lazy default)
+    name: str = "lints-spatial"
+
+    def _config(self):
+        from . import spatial as _spatial
+
+        if self.config is not None:
+            return self.config
+        return _spatial.SpatialSolveConfig(round=True, tol=1e-6)
+
+    def plan(self, problem: ScheduleProblem) -> Plan:
+        return self.plan_batch([problem])[0]
+
+    def plan_batch(self, problems: Sequence[ScheduleProblem]) -> list[Plan]:
+        from . import spatial as _spatial
+
+        problems = list(problems)
+        if not problems:
+            return []
+        spatials = [_spatial.problem_from_schedule(p) for p in problems]
+        plans = _spatial.solve_spatiotemporal_batch(spatials, self._config())
+        out = []
+        for i, (problem, splan) in enumerate(zip(problems, plans)):
+            meta = dict(splan.meta)
+            meta["objective"] = splan.objective
+            # The degenerate embedding has exactly one path per job.
+            plan = Plan(splan.rho_bps[:, 0, :], "lints-spatial", meta)
+            out.append(_stamp(plan, self.name, i, len(problems)))
+        return out
+
+    def plan_spatial(self, problems: Sequence[Any]) -> list[Any]:
+        """Fleet of spatial problems -> :class:`SpatialPlan`\\ s.
+
+        Accepts :class:`~repro.core.spatial.SpatialProblem`\\ s (build them
+        with :func:`~repro.core.spatial.build_spatial_problem`); every
+        returned plan is stamped ``meta["policy"] = name``.
+        """
+        from . import spatial as _spatial
+
+        plans = _spatial.solve_spatiotemporal_batch(list(problems),
+                                                    self._config())
+        for plan in plans:
+            plan.meta["policy"] = self.name
+        return plans
+
+
 # ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
@@ -233,9 +299,11 @@ class Scheduler:
         return self.policy.name
 
     def plan(self, problem: ScheduleProblem) -> Plan:
+        """Schedule one prebuilt problem under the wrapped policy."""
         return self.policy.plan(problem)
 
     def plan_batch(self, problems: Sequence[ScheduleProblem]) -> list[Plan]:
+        """Schedule a fleet (mixed shapes bucket through core.ragged)."""
         return self.policy.plan_batch(problems)
 
     def build(
@@ -245,6 +313,7 @@ class Scheduler:
         capacity_gbps: float,
         power: PowerModel = DEFAULT_POWER_MODEL,
     ) -> ScheduleProblem:
+        """Assemble the dense LP tensors (requests + forecasts -> problem)."""
         return build_problem(requests, traces, capacity_gbps, power)
 
     def schedule(
@@ -258,12 +327,20 @@ class Scheduler:
         return self.plan(self.build(requests, traces, capacity_gbps, power))
 
     def schedule_spatiotemporal(self, requests, traces, link_capacity_gbps,
-                                power: PowerModel = DEFAULT_POWER_MODEL):
-        """Joint route+time LP (see :mod:`repro.core.spatial`)."""
-        from .spatial import solve_spatiotemporal
+                                power: PowerModel = DEFAULT_POWER_MODEL,
+                                *, backend: str = "scipy", config=None):
+        """Joint route+time LP (see :mod:`repro.core.spatial`).
 
-        return solve_spatiotemporal(requests, traces, link_capacity_gbps,
-                                    power)
+        ``backend="scipy"`` is the paper-faithful sparse-LP oracle;
+        ``backend="pdhg"`` runs the batched fleet pipeline (one problem
+        here; use :func:`repro.core.spatial.solve_spatiotemporal_batch`
+        or ``get_policy("lints-spatial").plan_spatial`` for fleets).
+        """
+        from .spatial import SpatialSolveConfig, solve_spatiotemporal
+
+        return solve_spatiotemporal(
+            requests, traces, link_capacity_gbps, power, backend=backend,
+            config=config or SpatialSolveConfig())
 
 
 def schedule(
@@ -294,3 +371,4 @@ register_policy(HeuristicPolicy("single_threshold",
                                 _heuristics.single_threshold))
 register_policy(HeuristicPolicy("double_threshold",
                                 _heuristics.double_threshold))
+register_policy(SpatialPolicy())                     # §V: joint route+time

@@ -5,7 +5,7 @@
 are processed in an algorithm-specific priority order; each walks its
 candidate slots (an algorithm-specific ranking of its masked slots) taking
 ``min(per-request rate cap, remaining slot capacity)`` until its bytes are
-delivered.  See DESIGN.md §Fidelity for why capacity tracking is required.
+delivered.  See DESIGN.md §4 (Fidelity) for why capacity tracking is required.
 """
 
 from __future__ import annotations

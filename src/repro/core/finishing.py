@@ -379,6 +379,236 @@ def _refine_round_kernel(rho, cost, n_valid, ranking, inv_ranking, rate_cap,
                          theta_max)
 
 
+# ---------------------------------------------------------------------------
+# Spatiotemporal finishing: link-capacity-aware waterfilling (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+#
+# The temporal tail tracks ONE shared capacity vector; the spatiotemporal
+# LP (core/spatial.py) has a capacity vector PER LINK and pseudo-jobs
+# (request, path) that draw on every link of their path at once, while
+# bytes are owed per *request* across all its pseudo-jobs.  The waterfill
+# scan generalizes: the carry becomes (per-(link, slot) remaining bits,
+# per-request remaining need), and each pseudo-job's per-cell availability
+# is min(cell headroom, bottleneck link headroom at that slot).  Within one
+# pseudo-job all cells are distinct slots, so the cumsum waterfilling
+# stays exact — cross-cell capacity interaction only happens across scan
+# steps, where the carry accounts for it.
+
+
+@dataclasses.dataclass(frozen=True)
+class SpatialStack:
+    """Dense same-shape spatial fleet tensors (see :class:`ProblemStack`).
+
+    Pseudo-jobs process in deadline order of their owning request (ties:
+    request index, then cheaper-mean-cost path first) — precomputed
+    host-side with stable numpy sorts, like the temporal stack.
+    """
+
+    cost: np.ndarray            # (B, K, m) float64
+    mask: np.ndarray            # (B, K, m) bool
+    size_bits: np.ndarray       # (B, R)
+    ranking: np.ndarray         # (B, K, m) cheapest-first slot ranking
+    inv_ranking: np.ndarray     # (B, K, m) its inverse permutation
+    order: np.ndarray           # (B, K) pseudo-job processing order
+    inv_order: np.ndarray       # (B, K) its inverse permutation
+    pseudo_request: np.ndarray  # (B, K) owning request per pseudo-job
+    req_onehot: np.ndarray      # (B, R, K) request membership (float64)
+    link_use: np.ndarray        # (B, L, K) link membership (float64)
+    link_cap_bps: np.ndarray    # (B, L)
+    rate_cap_bps: np.ndarray    # (B, K)
+    slot_seconds: np.ndarray    # (B,)
+
+    @property
+    def n_problems(self) -> int:
+        return int(self.cost.shape[0])
+
+
+def stack_spatial_problems(problems) -> SpatialStack:
+    """Stack same-shape :class:`~repro.core.spatial.SpatialProblem`\\ s."""
+    if not problems:
+        raise ValueError("need at least one problem to stack")
+    shape = (problems[0].n_pseudo, problems[0].n_slots,
+             problems[0].n_req, problems[0].n_links)
+    for i, p in enumerate(problems):
+        got = (p.n_pseudo, p.n_slots, p.n_req, p.n_links)
+        if got != shape:
+            raise ValueError("spatial fleet finishing requires same-shape "
+                             f"problems (problem {i}: {got} vs {shape}); "
+                             "mixed-shape fleets go through "
+                             "core.ragged.solve_spatial_batch_ragged")
+    rankings, orders = [], []
+    for p in problems:
+        keyed = np.where(p.mask, p.cost, np.inf)
+        rankings.append(np.argsort(keyed, axis=1, kind="stable"))
+        counts = np.maximum(p.mask.sum(axis=1), 1)
+        mean_cost = np.where(p.mask, p.cost, 0.0).sum(axis=1) / counts
+        orders.append(np.lexsort((
+            p.pseudo_path, mean_cost, p.pseudo_request,
+            p.deadlines[p.pseudo_request],
+        )))
+    ranking = np.stack(rankings)
+    order = np.stack(orders)
+    return SpatialStack(
+        cost=np.stack([p.cost for p in problems]).astype(np.float64),
+        mask=np.stack([p.mask for p in problems]),
+        size_bits=np.stack([p.size_bits for p in problems]),
+        ranking=ranking,
+        inv_ranking=np.argsort(ranking, axis=-1),
+        order=order,
+        inv_order=np.argsort(order, axis=-1),
+        pseudo_request=np.stack([p.pseudo_request for p in problems]),
+        req_onehot=np.stack([p.req_onehot() for p in problems]),
+        link_use=np.stack([p.link_use.astype(np.float64) for p in problems]),
+        link_cap_bps=np.stack([p.link_cap_bps for p in problems]),
+        rate_cap_bps=np.stack([p.rate_cap_bps for p in problems]),
+        slot_seconds=np.array([p.slot_seconds for p in problems]),
+    )
+
+
+def _spatial_waterfill_one(rho, size_bits, mask, ranking, inv_ranking,
+                           order, inv_order, pseudo_request, req_onehot,
+                           link_use, link_cap, rate_cap, dt):
+    """Link-capacity-tracked greedy fill for ONE spatial problem.
+
+    Scan over pseudo-jobs in ``order``; carry = (remaining bits per
+    (link, slot), remaining need per request).  Per-cell availability is
+    the min of the cell's own headroom and the *bottleneck* link's
+    remaining bits at that slot; a take draws that amount from every link
+    on the pseudo-job's path.  All permutation moves are gathers, as in
+    :func:`_waterfill_one`.
+    """
+    cell_cap_bits = rate_cap[:, None] * dt
+    link_left0 = link_cap[:, None] * dt - (link_use @ rho) * dt
+    need0 = size_bits - req_onehot @ (rho.sum(axis=1) * dt)
+    avail_cell = jnp.take_along_axis(
+        jnp.where(mask, cell_cap_bits - rho * dt, 0.0), ranking, axis=-1)
+
+    def body(carry, k):
+        link_left, need = carry
+        use = link_use[:, k]                                  # (L,)
+        link_min = jnp.min(
+            jnp.where(use[:, None] > 0, link_left, jnp.inf), axis=0)
+        avail = jnp.maximum(
+            jnp.minimum(avail_cell[k], link_min[ranking[k]]), 0.0)
+        need_k = jnp.take(need, pseudo_request[k])
+        cum_before = jnp.cumsum(avail) - avail
+        take = jnp.clip(need_k - cum_before, 0.0, avail)
+        take = jnp.where(need_k > _BIT_TOL, take, 0.0)
+        take_slot = take[inv_ranking[k]]
+        link_left = link_left - use[:, None] * take_slot[None, :]
+        need = need - take.sum() * req_onehot[:, k]
+        return (link_left, need), take_slot
+
+    (_, need), takes = jax.lax.scan(body, (link_left0, need0), order)
+    rho = rho + takes[inv_order] / dt
+    return rho, jnp.maximum(need, 0.0)
+
+
+def _spatial_stack_args(stack: SpatialStack):
+    return (
+        jnp.asarray(stack.size_bits), jnp.asarray(stack.mask),
+        jnp.asarray(stack.ranking), jnp.asarray(stack.inv_ranking),
+        jnp.asarray(stack.order), jnp.asarray(stack.inv_order),
+        jnp.asarray(stack.pseudo_request), jnp.asarray(stack.req_onehot),
+        jnp.asarray(stack.link_use), jnp.asarray(stack.link_cap_bps),
+        jnp.asarray(stack.rate_cap_bps), jnp.asarray(stack.slot_seconds),
+    )
+
+
+@jax.jit
+def _spatial_repair_kernel(rho, size_bits, mask, ranking, inv_ranking, order,
+                           inv_order, pseudo_request, req_onehot, link_use,
+                           link_cap, rate_cap, dt):
+    def one(rho, size_bits, mask, ranking, inv_ranking, order, inv_order,
+            pseudo_request, req_onehot, link_use, link_cap, rate_cap, dt):
+        rho = jnp.where(mask, jnp.clip(rho, 0.0, rate_cap[:, None]), 0.0)
+        used = link_use @ rho                                  # (L, m)
+        scale_l = jnp.where(
+            used > link_cap[:, None],
+            link_cap[:, None] / jnp.maximum(used, 1e-30), 1.0)
+        # A cell on several oversubscribed links rescales by the tightest.
+        cell_scale = jnp.min(
+            jnp.where(link_use[:, :, None] > 0, scale_l[:, None, :], 1.0),
+            axis=0)                                            # (K, m)
+        rho = rho * cell_scale
+        return _spatial_waterfill_one(
+            rho, size_bits, mask, ranking, inv_ranking, order, inv_order,
+            pseudo_request, req_onehot, link_use, link_cap, rate_cap, dt)
+
+    return jax.vmap(one)(rho, size_bits, mask, ranking, inv_ranking, order,
+                         inv_order, pseudo_request, req_onehot, link_use,
+                         link_cap, rate_cap, dt)
+
+
+@jax.jit
+def _spatial_round_kernel(rho, size_bits, mask, ranking, inv_ranking, order,
+                          inv_order, pseudo_request, req_onehot, link_use,
+                          link_cap, rate_cap, dt, keep_frac):
+    def one(rho, size_bits, mask, ranking, inv_ranking, order, inv_order,
+            pseudo_request, req_onehot, link_use, link_cap, rate_cap, dt):
+        kept = jnp.where(rho >= keep_frac * rate_cap[:, None], rho, 0.0)
+        return _spatial_waterfill_one(
+            kept, size_bits, mask, ranking, inv_ranking, order, inv_order,
+            pseudo_request, req_onehot, link_use, link_cap, rate_cap, dt)
+
+    return jax.vmap(one)(rho, size_bits, mask, ranking, inv_ranking, order,
+                         inv_order, pseudo_request, req_onehot, link_use,
+                         link_cap, rate_cap, dt)
+
+
+def _spatial_strict_check(stack: SpatialStack, need_after: np.ndarray,
+                          stage: str) -> None:
+    bad = need_after > _BIT_TOL + 1e-9 * stack.size_bits
+    if bad.any():
+        b, i = (int(k) for k in np.argwhere(bad)[0])
+        raise InfeasibleError(
+            f"spatial {stage}: problem {b}, request {i}: "
+            f"{need_after[b, i]:.4g} bits undeliverable under the per-link "
+            "capacities")
+
+
+def spatial_repair_batch(stack: SpatialStack,
+                         rho_stack_bps: np.ndarray) -> np.ndarray:
+    """Batched spatial plan repair (strict).
+
+    Clip to bounds/mask, rescale cells on oversubscribed links by the
+    tightest link's factor, top up each request's shortfall on its
+    cheapest (path, slot) cells under the remaining link headroom — one
+    device call for the whole fleet.  Raises :class:`InfeasibleError`
+    naming the first stranded (problem, request) pair.
+    """
+    with enable_x64():
+        rho, need = _spatial_repair_kernel(
+            jnp.asarray(rho_stack_bps, jnp.float64),
+            *_spatial_stack_args(stack))
+    rho = np.array(rho, np.float64)
+    _spatial_strict_check(stack, np.asarray(need, np.float64), "repair")
+    return rho
+
+
+def spatial_round_batch(
+    stack: SpatialStack, rho_stack_bps: np.ndarray, keep_frac: float = 0.95
+) -> tuple[np.ndarray, np.ndarray]:
+    """Batched vertex-style rounding under per-link capacities.
+
+    Keeps cells at ≥ ``keep_frac`` of the pseudo-job's rate cap and
+    re-places each request's remainder greedily on its cheapest feasible
+    cells.  Problems whose rounding strands bytes fall back to their
+    input plan, flagged False in the returned (B,) ``rounded`` mask —
+    same contract as :func:`vertex_round_batch`.
+    """
+    rho_in = np.asarray(rho_stack_bps, np.float64)
+    with enable_x64():
+        rho, need = _spatial_round_kernel(
+            jnp.asarray(rho_in, jnp.float64), *_spatial_stack_args(stack),
+            jnp.asarray(keep_frac, jnp.float64))
+    need = np.asarray(need, np.float64)
+    rounded = ~(need > _BIT_TOL + 1e-9 * stack.size_bits).any(axis=1)
+    out = np.where(rounded[:, None, None], np.asarray(rho, np.float64),
+                   rho_in)
+    return out, rounded
+
+
 def refine_batch(
     stack: ProblemStack, rho_stack_bps: np.ndarray, max_rounds: int = 4
 ) -> tuple[np.ndarray, np.ndarray]:

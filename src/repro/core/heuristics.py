@@ -2,7 +2,7 @@
 
 All heuristics run requests at the highest thread count (theta_max) — i.e. at
 ``rate_cap`` throughput — in their chosen slots, with capacity-tracked sharing
-(DESIGN.md §Fidelity).  Each returns a :class:`~repro.core.plan.Plan`.
+(DESIGN.md §4 (Fidelity)).  Each returns a :class:`~repro.core.plan.Plan`.
 
 The public way to run these is the :mod:`repro.core.api` registry — every
 heuristic is registered as a named :class:`~repro.core.api.HeuristicPolicy`

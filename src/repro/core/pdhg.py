@@ -314,6 +314,249 @@ def vertex_round(problem: ScheduleProblem, plan: Plan, keep_frac: float = 0.95) 
     return Plan(rounded, plan.algorithm, meta)
 
 
+# ---------------------------------------------------------------------------
+# Spatiotemporal PDHG: grouped byte rows + link-capacity dual rows
+# ---------------------------------------------------------------------------
+#
+# The spatiotemporal LP (core/spatial.py, DESIGN.md §11) expands every
+# (request, path) pair into a pseudo-job, so the primal iterate is still one
+# dense (pseudo_jobs × slots) plane — but the constraint structure
+# generalizes: bytes couple all pseudo-jobs of a request (membership matrix
+# G_req, one dual per request) and capacity couples all pseudo-jobs sharing
+# a link (membership matrix G_link, one dual per (link, slot)).  The
+# temporal LP is the special case G_req = I, G_link = all-ones row.
+
+def _spatial_cell_update(x, c, ub, u, v, g_req, g_link, tau):
+    """Projected primal step of the spatiotemporal PDHG iteration.
+
+    ``x``/``c``/``ub`` are (pseudo_jobs, slots); ``u`` is (requests,) byte
+    duals, ``v`` is (links, slots) capacity duals; ``g_req`` (requests,
+    pseudo_jobs) and ``g_link`` (links, pseudo_jobs) are 0/1 membership
+    matrices.  Returns ``(x_new, rs_bar, cs_bar)`` where ``rs_bar`` is the
+    per-request byte row sums and ``cs_bar`` the per-(link, slot) usage of
+    the extrapolated iterate — the quantities the dual steps consume.
+    """
+    g = c - jnp.matmul(u, g_req)[..., :, None] + jnp.matmul(
+        jnp.swapaxes(g_link, -1, -2), v)
+    x_new = jnp.clip(x - tau * g, 0.0, ub)
+    x_bar = 2.0 * x_new - x
+    rs = jnp.matmul(g_req, x_bar.sum(axis=-1)[..., None])[..., 0]
+    cs = jnp.matmul(g_link, x_bar)
+    return x_new, rs, cs
+
+
+def pdhg_spatial_window_ref(x, c, ub, u, v, rs, cs, b_req, b_cap, g_req,
+                            g_link, tau, sigma, n_iters: int):
+    """Pure-jnp spatial restart window (oracle for the Pallas kernel).
+
+    Same carry discipline as :func:`pdhg_window_ref`: ``rs``/``cs`` enter as
+    the previous window's extrapolated sums, and the returned ``ax``/``au``/
+    ``av`` are window *sums* (divide by ``n_iters`` for the average).
+    """
+
+    def inner(_, carry):
+        x, u, v, rs, cs, ax, au, av = carry
+        u = jnp.maximum(0.0, u + sigma * (b_req - rs))
+        v = jnp.maximum(0.0, v + sigma * (cs - b_cap[..., :, None]))
+        x, rs, cs = _spatial_cell_update(x, c, ub, u, v, g_req, g_link, tau)
+        return (x, u, v, rs, cs, ax + x, au + u, av + v)
+
+    carry = (x, u, v, rs, cs,
+             jnp.zeros_like(x), jnp.zeros_like(u), jnp.zeros_like(v))
+    return jax.lax.fori_loop(0, n_iters, inner, carry)
+
+
+def _spatial_kkt(c, ub, b_req, b_cap, g_req, g_link, x, u, v):
+    """(primal_residual, duality_gap) for the spatiotemporal LP, normalized.
+
+    Mirrors :func:`_kkt`: the primal residual is the worst relative byte
+    shortfall / link-capacity overshoot; the gap compares the primal
+    objective against the bound-aware dual objective (padded links carry
+    zero membership and positive ``b_cap``, so they contribute nothing).
+    """
+    rs = jnp.matmul(g_req, x.sum(axis=-1)[..., None])[..., 0]
+    cs = jnp.matmul(g_link, x)
+    req_viol = jnp.max(jnp.maximum(b_req - rs, 0.0)) / (1.0 + jnp.max(b_req))
+    cap_viol = jnp.max(jnp.maximum(cs - b_cap[..., :, None], 0.0)) / (
+        1.0 + jnp.max(b_cap))
+    pr = jnp.maximum(req_viol, cap_viol)
+    g = (c - jnp.matmul(u, g_req)[..., :, None]
+         + jnp.matmul(jnp.swapaxes(g_link, -1, -2), v)) * (ub > 0)
+    dual_obj = (
+        jnp.vdot(u, b_req) - jnp.vdot(v.sum(axis=-1), b_cap)
+        + jnp.sum(jnp.minimum(g, 0.0) * ub)
+    )
+    primal_obj = jnp.vdot(c, x)
+    gap = jnp.abs(primal_obj - dual_obj) / (
+        1.0 + jnp.abs(primal_obj) + jnp.abs(dual_obj)
+    )
+    return pr, gap
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_iters", "check_every", "use_kernel",
+                     "kernel_interpret"),
+)
+def pdhg_solve_spatial_batch(c, ub, b_req, b_cap, g_req, g_link,
+                             x0=None, u0=None, *,
+                             max_iters=200_000, check_every=250, tol=1e-7,
+                             omega0=1.0, omega_lo=1e-2, omega_hi=1e2,
+                             use_kernel: bool | None = None,
+                             kernel_interpret: bool | None = None):
+    """Fleet of spatiotemporal LPs with per-problem early exit.
+
+    Shapes: ``c``/``ub`` (B, pseudo_jobs, slots); ``b_req`` (B, requests);
+    ``b_cap`` (B, links); ``g_req`` (B, requests, pseudo_jobs); ``g_link``
+    (B, links, pseudo_jobs).  Same restart/rebalance/early-exit discipline
+    as :func:`pdhg_solve_batch`; the window body runs either as the
+    vmapped jnp oracle or as the batched spatial Pallas kernel
+    (``repro/kernels/pdhg_window.py``, one fleet launch per window with
+    ``pl.when`` per-problem skip).  Returns ``(x, diag)`` with per-problem
+    diagnostics of shape (B,).
+    """
+    dtype = c.dtype
+    bsz = c.shape[0]
+    # Step sizes need ||K|| of the (bytes + link-capacity) constraint
+    # operator.  The closed-form bound sqrt(||K||_1 ||K||_inf) is ~1.7x too
+    # large on multi-path instances (it charges every request its full
+    # active-cell count), which shrinks tau*sigma and costs real restart
+    # windows — so, like PDLP, we estimate sigma_max with a few batched
+    # power iterations on K^T K (restricted to active cells) and keep the
+    # closed-form bound only as the safe cap.
+    act = (ub > 0).astype(dtype)
+    row_req = jnp.max(jnp.matmul(g_req, act.sum(axis=-1)[..., None])[..., 0],
+                      axis=-1)
+    row_link = jnp.max(jnp.matmul(g_link, act), axis=(-2, -1))
+    row_max = jnp.maximum(row_req, row_link)
+    col_max = 1.0 + jnp.max(g_link.sum(axis=-2), axis=-1)
+    k_bound = jnp.sqrt(row_max * col_max) + 1e-6  # (B,)
+
+    def _power_step(z, _):
+        rs = jnp.einsum("brk,bk->br", g_req, z.sum(axis=-1))
+        cs = jnp.einsum("blk,bkm->blm", g_link, z)
+        z2 = (jnp.einsum("brk,br->bk", g_req, rs)[..., None]
+              + jnp.einsum("blk,blm->bkm", g_link, cs)) * act
+        nrm = jnp.sqrt(jnp.sum(z2 * z2, axis=(-2, -1), keepdims=True))
+        return z2 / jnp.maximum(nrm, 1e-30), nrm[..., 0, 0]
+
+    z0 = act / jnp.maximum(
+        jnp.sqrt(jnp.sum(act, axis=(-2, -1), keepdims=True)), 1e-30)
+    _, nrms = jax.lax.scan(_power_step, z0, None, length=32)
+    # ||K^T K z|| approaches sigma_max^2 FROM BELOW, so the 10% margin is
+    # a heuristic, not a certificate: a near-degenerate top singular pair
+    # could still leave k_power slightly under sigma_max.  That costs
+    # extra restart windows (oversized steps oscillate until the averaged
+    # iterate wins the restart comparison), never a wrong answer — the
+    # returned diagnostics are independent KKT residuals, and `converged`
+    # stays False if the tolerance is never certified.
+    k_power = 1.10 * jnp.sqrt(nrms[-1]) + 1e-6
+    k_norm = jnp.minimum(k_power, k_bound)  # (B,)
+
+    use_kernel = _resolve_use_kernel(use_kernel)
+    if use_kernel:
+        from repro.kernels.pdhg_window import spatial_window_fits
+
+        n_pseudo, n_slots = c.shape[1], c.shape[2]
+        if not spatial_window_fits(n_pseudo, n_slots, b_req.shape[1],
+                                   b_cap.shape[1],
+                                   jnp.dtype(dtype).itemsize):
+            use_kernel = False  # per-problem tile exceeds VMEM budget
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        def run_window(x, u, v, rs, cs, tau, sigma, done):
+            return kops.pdhg_spatial_window_batched(
+                x, c, ub, u, v, rs, cs, b_req, b_cap, g_req, g_link, tau,
+                sigma, done, n_iters=check_every, interpret=kernel_interpret)
+    else:
+        def run_window(x, u, v, rs, cs, tau, sigma, done):
+            def one(xi, ci, ubi, ui, vi, rsi, csi, bri, bci, gri, gli, ti,
+                    si):
+                return pdhg_spatial_window_ref(
+                    xi, ci, ubi, ui, vi, rsi, csi, bri, bci, gri, gli, ti,
+                    si, check_every)
+
+            return jax.vmap(one)(x, c, ub, u, v, rs, cs, b_req, b_cap,
+                                 g_req, g_link, tau, sigma)
+
+    kkt_all = jax.vmap(_spatial_kkt)
+
+    def outer_cond(state):
+        done, it_glob = state[9], state[10]
+        return jnp.logical_and(jnp.any(~done), it_glob < max_iters)
+
+    def outer_body(state):
+        x, u, v, rs, cs, omega, iters, pr, gap, done, it_glob = state
+        tau = omega / k_norm
+        sigma = 1.0 / (omega * k_norm)
+        nx, nu, nv, nrs, ncs, ax, au, av = run_window(
+            x, u, v, rs, cs, tau, sigma, done)
+        inv = 1.0 / check_every
+        xa, ua, va = ax * inv, au * inv, av * inv
+        pr_c, gap_c = kkt_all(c, ub, b_req, b_cap, g_req, g_link, nx, nu, nv)
+        pr_a, gap_a = kkt_all(c, ub, b_req, b_cap, g_req, g_link, xa, ua, va)
+        take_avg = jnp.maximum(pr_a, gap_a) < jnp.maximum(pr_c, gap_c)  # (B,)
+
+        def sel(flag, a, b):
+            return jnp.where(flag.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
+
+        nx = sel(take_avg, xa, nx)
+        nu = sel(take_avg, ua, nu)
+        nv = sel(take_avg, va, nv)
+        npr = jnp.where(take_avg, pr_a, pr_c)
+        ngap = jnp.where(take_avg, gap_a, gap_c)
+        ratio = jnp.sqrt((ngap + 1e-12) / (npr + 1e-12))
+        nomega = jnp.clip(omega * jnp.clip(ratio, 0.5, 2.0),
+                          omega_lo, omega_hi)
+        # Restart: recompute the extrapolated sums from the (possibly
+        # averaged) iterate — at a restart x_bar collapses onto x.
+        nrs = sel(take_avg,
+                  jnp.matmul(g_req, nx.sum(axis=-1)[..., None])[..., 0], nrs)
+        ncs = sel(take_avg, jnp.matmul(g_link, nx), ncs)
+        x = sel(done, x, nx)
+        u = sel(done, u, nu)
+        v = sel(done, v, nv)
+        rs = sel(done, rs, nrs)
+        cs = sel(done, cs, ncs)
+        omega = jnp.where(done, omega, nomega)
+        pr = jnp.where(done, pr, npr)
+        gap = jnp.where(done, gap, ngap)
+        iters = iters + jnp.where(done, 0, check_every)
+        done = jnp.logical_or(done, jnp.logical_and(pr < tol, gap < tol))
+        return (x, u, v, rs, cs, omega, iters, pr, gap, done,
+                it_glob + check_every)
+
+    n_pseudo, n_slots = c.shape[1], c.shape[2]
+    n_req, n_link = b_req.shape[1], b_cap.shape[1]
+    # Warm start (optional): a primal guess (e.g. a greedy fill) and
+    # bid-price byte duals.  The extrapolated sums restart from the guess,
+    # exactly as after a restart-to-average step.
+    if x0 is None:
+        x0 = jnp.zeros((bsz, n_pseudo, n_slots), dtype)
+    else:
+        x0 = jnp.clip(jnp.asarray(x0, dtype), 0.0, ub)
+    u0 = (jnp.zeros((bsz, n_req), dtype) if u0 is None
+          else jnp.maximum(jnp.asarray(u0, dtype), 0.0))
+    state = (
+        x0,
+        u0,
+        jnp.zeros((bsz, n_link, n_slots), dtype),
+        jnp.matmul(g_req, x0.sum(axis=-1)[..., None])[..., 0],
+        jnp.matmul(g_link, x0),
+        jnp.full((bsz,), omega0, dtype),
+        jnp.zeros((bsz,), jnp.int32),
+        jnp.full((bsz,), jnp.inf, dtype), jnp.full((bsz,), jnp.inf, dtype),
+        jnp.zeros((bsz,), bool), jnp.asarray(0, jnp.int32),
+    )
+    state = jax.lax.while_loop(outer_cond, outer_body, state)
+    x, iters, pr, gap, done, omega = (state[0], state[6], state[7], state[8],
+                                      state[9], state[5])
+    return x, {"iterations": iters, "primal_residual": pr, "gap": gap,
+               "converged": done, "omega": omega}
+
+
 # Batched scheduling: one call plans transfers for many independent paths /
 # datacenter pairs at once (the "scaling decisions" story at fleet scale).
 @functools.partial(

@@ -11,7 +11,7 @@ The rest of the framework works in bits/s; :data:`GBPS` converts.
 Note on Eq. 4: the paper prints ``theta(rho) = 1/(L s_P) * rho/(L - rho)``,
 but inverting Eq. 1 gives ``1/(L s_rho)``.  We use ``s_rho`` (the round-trip
 ``theta -> rho -> theta`` identity is covered by tests); see DESIGN.md
-§Fidelity.
+§4 (Fidelity).
 """
 
 from __future__ import annotations
@@ -84,7 +84,7 @@ class PowerModel:
         """Max throughput achievable with ``theta_max`` threads (Eq. 1).
 
         Plans are bounded by this instead of the raw L so Eq. 4 never asks
-        for infinite threads (DESIGN.md §Fidelity).
+        for infinite threads (DESIGN.md §4 (Fidelity)).
         """
         return float(self.throughput_gbps(np.float64(self.theta_max), l_gbps))
 

@@ -11,7 +11,7 @@ The deadline constraint is encoded *structurally* via ``mask`` (the paper
 encodes it "through the dimensions of the throughput vector"); masked-out
 cells are fixed at zero.  ``rate_cap_bps`` is ``rho(theta_max)`` rather than
 the raw bottleneck L so every plan converts to a finite thread count
-(DESIGN.md §Fidelity).
+(DESIGN.md §4 (Fidelity)).
 """
 
 from __future__ import annotations

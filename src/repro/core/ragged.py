@@ -123,6 +123,164 @@ def _unpad_plan(problem: ScheduleProblem, plan: Plan, *, fleet_index: int,
     return Plan(rho[:n, :m].copy(), plan.algorithm, meta)
 
 
+# ---------------------------------------------------------------------------
+# Spatiotemporal fleets (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+_LINK_BUCKET_MIN = 2
+
+
+def bucket_spatial_shape(n_pseudo: int, n_slots: int, n_req: int,
+                         n_link: int) -> tuple[int, int, int, int]:
+    """Quantized padding target for a spatial problem's 4D shape key.
+
+    Pseudo-jobs and requests round up to powers of two, slots to the next
+    multiple of 32, links to a power of two — the same
+    log-many-recompiles discipline as :func:`bucket_shape`, extended to
+    the two extra constraint axes of the spatiotemporal LP.
+    """
+    if n_slots <= 0 or n_req <= 0:
+        raise ValueError(
+            f"degenerate spatial shape ({n_pseudo}, {n_slots}, {n_req}, "
+            f"{n_link})")
+    b_pseudo = max(_JOB_BUCKET_MIN, 1 << max(n_pseudo - 1, 0).bit_length())
+    b_slots = -(-n_slots // _SLOT_BUCKET_MULTIPLE) * _SLOT_BUCKET_MULTIPLE
+    b_req = max(_JOB_BUCKET_MIN, 1 << max(n_req - 1, 0).bit_length())
+    b_link = max(_LINK_BUCKET_MIN, 1 << max(n_link - 1, 0).bit_length())
+    return b_pseudo, b_slots, b_req, b_link
+
+
+def pad_spatial_problem(problem, n_pseudo: int, n_slots: int, n_req: int,
+                        n_link: int):
+    """Embed a spatial problem in a larger canvas of inert cells.
+
+    Padded pseudo-jobs: all-False mask (zero LP upper bound), zero cost,
+    zero link membership, owned by request 0 — harmless, since their rate
+    is pinned at zero everywhere.  Padded requests: zero bytes (their byte
+    duals never activate) and zero candidate paths.  Padded links: zero
+    membership and a positive capacity, so their duals stay at zero.
+    Padded slots: masked for every pseudo-job.
+    """
+    from .spatial import SpatialProblem
+
+    k, m = problem.n_pseudo, problem.n_slots
+    r, l = problem.n_req, problem.n_links
+    if (k, m, r, l) == (n_pseudo, n_slots, n_req, n_link):
+        return problem
+    if n_pseudo < k or n_slots < m or n_req < r or n_link < l:
+        raise ValueError(
+            f"cannot pad ({k}, {m}, {r}, {l}) down to "
+            f"({n_pseudo}, {n_slots}, {n_req}, {n_link})")
+    cost = np.zeros((n_pseudo, n_slots), dtype=np.float64)
+    cost[:k, :m] = problem.cost
+    mask = np.zeros((n_pseudo, n_slots), dtype=bool)
+    mask[:k, :m] = problem.mask
+    size_bits = np.zeros(n_req)
+    size_bits[:r] = problem.size_bits
+    pseudo_request = np.zeros(n_pseudo, dtype=np.int64)
+    pseudo_request[:k] = problem.pseudo_request
+    pseudo_path = np.zeros(n_pseudo, dtype=np.int64)
+    pseudo_path[:k] = problem.pseudo_path
+    link_use = np.zeros((n_link, n_pseudo), dtype=bool)
+    link_use[:l, :k] = problem.link_use
+    link_cap = np.full(n_link, problem.link_cap_bps.max(initial=1.0e9))
+    link_cap[:l] = problem.link_cap_bps
+    rate_cap = np.zeros(n_pseudo)
+    rate_cap[:k] = problem.rate_cap_bps
+    deadlines = np.full(n_req, n_slots, dtype=np.int64)
+    deadlines[:r] = problem.deadlines
+    offsets = np.zeros(n_req, dtype=np.int64)
+    offsets[:r] = problem.offsets
+    n_paths = np.zeros(n_req, dtype=np.int64)
+    n_paths[:r] = problem.n_paths
+    links = problem.links + tuple(
+        ("pad", f"pad-{i}") for i in range(n_link - l))
+    return SpatialProblem(
+        cost=cost,
+        mask=mask,
+        size_bits=size_bits,
+        pseudo_request=pseudo_request,
+        pseudo_path=pseudo_path,
+        link_use=link_use,
+        link_cap_bps=link_cap,
+        rate_cap_bps=rate_cap,
+        deadlines=deadlines,
+        offsets=offsets,
+        n_paths=n_paths,
+        slot_seconds=problem.slot_seconds,
+        links=links,
+        skipped_requests=problem.skipped_requests,
+    )
+
+
+def solve_spatial_batch_ragged(problems, config=None) -> list:
+    """Schedule a heterogeneous spatiotemporal fleet in one call.
+
+    The spatial twin of :func:`solve_batch_ragged`: bucket by the
+    quantized 4D shape key, pad within buckets, solve each bucket through
+    ``spatial._solve_spatial_same_shape`` (batched PDHG + link-aware
+    finishing), assert the padded region carries zero rate, and expand
+    pseudo-level planes into :class:`~repro.core.spatial.SpatialPlan`\\ s
+    in fleet order with fleet/bucket metadata.
+    """
+    from . import spatial as sp
+
+    problems = list(problems)
+    if config is None:
+        config = sp.SpatialSolveConfig()
+    if not problems:
+        return []
+
+    buckets: dict[tuple[int, int, int, int], list[int]] = {}
+    for i, p in enumerate(problems):
+        key = bucket_spatial_shape(p.n_pseudo, p.n_slots, p.n_req, p.n_links)
+        buckets.setdefault(key, []).append(i)
+
+    out: list = [None] * len(problems)
+    for key in sorted(buckets):
+        idxs = buckets[key]
+        # As in the temporal path, the quantized key only GROUPS; the
+        # solve shape is the members' max extent per axis.  The pseudo-job
+        # and link axes floor at 1 so a bucket of all-skipped (zero-size)
+        # request sets still solves at a non-degenerate shape.
+        target = tuple(
+            max(floor, *(getattr(problems[i], attr) for i in idxs))
+            for attr, floor in (("n_pseudo", 1), ("n_slots", 1),
+                                ("n_req", 1), ("n_links", 1)))
+        padded = [pad_spatial_problem(problems[i], *target) for i in idxs]
+        rho_stack, diag = sp._solve_spatial_same_shape(padded, config)
+        for b, i in enumerate(idxs):
+            p = problems[i]
+            rho = rho_stack[b]
+            pad_rate = max(
+                float(np.abs(rho[p.n_pseudo:, :]).max(initial=0.0)),
+                float(np.abs(rho[:, p.n_slots:]).max(initial=0.0)),
+            )
+            if pad_rate > 0.0:
+                raise RuntimeError(
+                    f"spatial ragged padding invariant violated: problem "
+                    f"{i} carries {pad_rate:.3g} bps on padded cells")
+            meta = {
+                "backend": "pdhg",
+                "iterations": int(diag["iterations"][b]),
+                "converged": bool(diag["converged"][b]),
+                "primal_residual": float(diag["primal_residual"][b]),
+                "gap": float(diag["gap"][b]),
+                "rounded": bool(diag["rounded"][b]),
+                "batch_index": i,
+                "batch_size": len(problems),
+                "bucket_shape": target,
+                "bucket_size": len(idxs),
+                "padded_pseudo_jobs": target[0] - p.n_pseudo,
+                "padded_slots": target[1] - p.n_slots,
+                "padded_requests": target[2] - p.n_req,
+                "padded_links": target[3] - p.n_links,
+            }
+            out[i] = sp._expand_plan(
+                p, rho[:p.n_pseudo, :p.n_slots].copy(), meta)
+    return out
+
+
 def solve_batch_ragged(problems: Sequence[ScheduleProblem],
                        config=None) -> list[Plan]:
     """Schedule a heterogeneous fleet in one call (see module docstring).

@@ -50,6 +50,18 @@ def pdhg_window_batched(x, c, ub, u, v, rs, cs, b_row, b_col, tau, sigma,
     )
 
 
+def pdhg_spatial_window_batched(x, c, ub, u, v, rs, cs, b_req, b_cap, g_req,
+                                g_link, tau, sigma, done, *, n_iters: int,
+                                interpret: bool | None = None):
+    """Batched spatiotemporal chunked PDHG window (grouped byte rows +
+    link-capacity dual rows, DESIGN.md §11); ``done`` (B,) problems skip
+    their window via ``pl.when`` and pass their carry through unchanged."""
+    return _pdhg_window.pdhg_spatial_window_batched_pallas(
+        x, c, ub, u, v, rs, cs, b_req, b_cap, g_req, g_link, tau, sigma,
+        done, n_iters=n_iters, interpret=_auto_interpret(interpret)
+    )
+
+
 def _power_params(power: PowerModel, l_gbps: float, slot_seconds: float) -> dict:
     return dict(
         slot_seconds=float(slot_seconds),

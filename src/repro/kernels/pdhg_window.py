@@ -298,6 +298,187 @@ def pdhg_window_batched_pallas(x, c, ub, u, v, rs, cs, b_row, b_col, tau,
 
 
 # ---------------------------------------------------------------------------
+# Spatiotemporal variant: grouped byte rows + link-capacity dual rows.
+# ---------------------------------------------------------------------------
+#
+# The spatiotemporal LP (DESIGN.md §11) keeps the dense (pseudo_jobs ×
+# slots) primal plane of the temporal kernel but generalizes both
+# reductions: byte rows group pseudo-jobs per request (G_req @ row_sum) and
+# capacity rows couple pseudo-jobs per (link, slot) (G_link @ x̄).  Both
+# are small matmuls — MXU work — so the whole restart window still runs
+# VMEM-resident in one launch per fleet.  The temporal kernel is the
+# special case G_req = I, G_link = 1^T (and stays on its cheaper
+# reduction-only body).
+
+# Resident matrix-sized buffers for the spatial kernel: x/c/ub inputs,
+# x/ax outputs + ~3 loop temporaries on the (pseudo, slots) plane, plus the
+# (links, slots) dual planes (v/cs in+out, av out + temporary) and the two
+# membership matrices.
+_SPATIAL_RESIDENT_PLANES = 8
+_SPATIAL_RESIDENT_LINK_PLANES = 6
+
+
+def spatial_window_fits(
+    n_pseudo: int, n_slots: int, n_req: int, n_link: int, itemsize: int = 4,
+    budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
+) -> bool:
+    """True when one spatiotemporal LP's working set fits a VMEM tile."""
+    k_pad = _round_up(max(n_pseudo, 1), LANE)   # lane dim of G, sublane of x
+    m_pad = _round_up(max(n_slots, 1), LANE)
+    r_pad = _round_up(max(n_req, 1), SUBLANE)
+    l_pad = _round_up(max(n_link, 1), SUBLANE)
+    resident = (
+        _SPATIAL_RESIDENT_PLANES * k_pad * m_pad
+        + _SPATIAL_RESIDENT_LINK_PLANES * l_pad * m_pad
+        + 2 * (r_pad + l_pad) * k_pad
+    )
+    return resident * itemsize <= budget_bytes
+
+
+def _spatial_window_body(x, u, v, rs, cs, ax, au, av, *, c, ub, b_req,
+                         b_cap, g_req, g_link, tau, sigma):
+    """One spatiotemporal PDHG iteration on 2D tiles.
+
+    ``u``/``rs``/``b_req`` are (R, 1); ``v``/``cs`` are (L, m) planes with
+    ``b_cap`` (L, 1) broadcasting per link; ``g_req`` (R, K) and ``g_link``
+    (L, K) membership matrices ride along as VMEM-resident constants.
+    """
+    u = jnp.maximum(0.0, u + sigma * (b_req - rs))
+    v = jnp.maximum(0.0, v + sigma * (cs - b_cap))
+    g = c - jnp.dot(g_req.T, u, preferred_element_type=x.dtype) + jnp.dot(
+        g_link.T, v, preferred_element_type=x.dtype)
+    x_new = jnp.clip(x - tau * g, 0.0, ub)
+    x_bar = 2.0 * x_new - x
+    rs = jnp.dot(g_req, jnp.sum(x_bar, axis=-1, keepdims=True),
+                 preferred_element_type=x.dtype)
+    cs = jnp.dot(g_link, x_bar, preferred_element_type=x.dtype)
+    return x_new, u, v, rs, cs, ax + x_new, au + u, av + v
+
+
+def _spatial_batched_window_kernel(tau_ref, sigma_ref, flag_ref,
+                                   x_ref, c_ref, ub_ref, u_ref, v_ref,
+                                   rs_ref, cs_ref, breq_ref, bcap_ref,
+                                   greq_ref, glink_ref,
+                                   x_out, u_out, v_out, rs_out, cs_out,
+                                   ax_out, au_out, av_out, *, n_iters: int):
+    active = flag_ref[0, 0] == 0
+
+    @pl.when(active)
+    def _run():
+        step = functools.partial(
+            _spatial_window_body,
+            c=c_ref[0], ub=ub_ref[0], b_req=breq_ref[0], b_cap=bcap_ref[0],
+            g_req=greq_ref[0], g_link=glink_ref[0],
+            tau=tau_ref[0, 0], sigma=sigma_ref[0, 0],
+        )
+        x = x_ref[0]
+        u = u_ref[0]
+        v = v_ref[0]
+        carry = (x, u, v, rs_ref[0], cs_ref[0],
+                 jnp.zeros_like(x), jnp.zeros_like(u), jnp.zeros_like(v))
+        x, u, v, rs, cs, ax, au, av = jax.lax.fori_loop(
+            0, n_iters, lambda _, s: step(*s), carry)
+        x_out[0] = x
+        u_out[0] = u
+        v_out[0] = v
+        rs_out[0] = rs
+        cs_out[0] = cs
+        ax_out[0] = ax
+        au_out[0] = au
+        av_out[0] = av
+
+    @pl.when(jnp.logical_not(active))
+    def _skip():
+        # Converged LP: pass the carry through untouched, skip all n_iters.
+        x_out[0] = x_ref[0]
+        u_out[0] = u_ref[0]
+        v_out[0] = v_ref[0]
+        rs_out[0] = rs_ref[0]
+        cs_out[0] = cs_ref[0]
+        ax_out[0] = jnp.zeros_like(x_ref[0])
+        au_out[0] = jnp.zeros_like(u_ref[0])
+        av_out[0] = jnp.zeros_like(v_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "interpret"))
+def pdhg_spatial_window_batched_pallas(x, c, ub, u, v, rs, cs, b_req, b_cap,
+                                       g_req, g_link, tau, sigma, done, *,
+                                       n_iters: int, interpret: bool = True):
+    """One spatiotemporal restart window for a fleet (grid over batch).
+
+    Shapes: x/c/ub (B, K, m); u/rs/b_req (B, R); v/cs (B, L, m); b_cap
+    (B, L); g_req (B, R, K); g_link (B, L, K); tau/sigma (B,); done (B,)
+    bool.  Padding discipline: K pads to a lane multiple (it is the lane
+    dim of the membership matrices AND the sublane dim of x — padded
+    pseudo-jobs carry ub = 0 and zero membership columns), R/L pad to
+    sublane multiples (padded requests carry b_req = 0, padded links carry
+    zero membership rows and b_cap = 1 so their duals never activate), m
+    pads to a lane multiple (padded slots carry ub = 0).
+    """
+    bsz, n_pseudo, n_slots = x.shape
+    n_req = b_req.shape[1]
+    n_link = b_cap.shape[1]
+    dt = x.dtype
+    k_pad = _round_up(max(n_pseudo, 1), LANE)
+    m_pad = _round_up(max(n_slots, 1), LANE)
+    r_pad = _round_up(max(n_req, 1), SUBLANE)
+    l_pad = _round_up(max(n_link, 1), SUBLANE)
+
+    def pad3(a, rows, cols):
+        return jnp.pad(a, ((0, 0), (0, rows - a.shape[1]),
+                           (0, cols - a.shape[2])))
+
+    def col(a, rows):  # (B, n) -> (B, rows, 1)
+        return jnp.pad(a, ((0, 0), (0, rows - a.shape[1])))[..., None]
+
+    def svec(a, dtype=dt):  # (B,) -> (B, 1)
+        return jnp.asarray(a, dtype).reshape(bsz, 1)
+
+    def spec3(rows, cols):
+        return pl.BlockSpec((1, rows, cols), lambda b: (b, 0, 0))
+
+    one = pl.BlockSpec((1, 1), lambda b: (b, 0))
+    plane = spec3(k_pad, m_pad)
+    lplane = spec3(l_pad, m_pad)
+    rvec = spec3(r_pad, 1)
+    lvec = spec3(l_pad, 1)
+
+    outs = pl.pallas_call(
+        functools.partial(_spatial_batched_window_kernel, n_iters=n_iters),
+        grid=(bsz,),
+        in_specs=[one, one, one,
+                  plane, plane, plane, rvec, lplane, rvec, lplane,
+                  rvec, lvec, spec3(r_pad, k_pad), spec3(l_pad, k_pad)],
+        out_specs=[plane, rvec, lplane, rvec, lplane, plane, rvec, lplane],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, k_pad, m_pad), dt),  # x
+            jax.ShapeDtypeStruct((bsz, r_pad, 1), dt),      # u
+            jax.ShapeDtypeStruct((bsz, l_pad, m_pad), dt),  # v
+            jax.ShapeDtypeStruct((bsz, r_pad, 1), dt),      # rs
+            jax.ShapeDtypeStruct((bsz, l_pad, m_pad), dt),  # cs
+            jax.ShapeDtypeStruct((bsz, k_pad, m_pad), dt),  # ax
+            jax.ShapeDtypeStruct((bsz, r_pad, 1), dt),      # au
+            jax.ShapeDtypeStruct((bsz, l_pad, m_pad), dt),  # av
+        ],
+        interpret=interpret,
+    )(svec(tau), svec(sigma),
+      svec(jnp.asarray(done, jnp.int32), jnp.int32),
+      pad3(x, k_pad, m_pad), pad3(c, k_pad, m_pad), pad3(ub, k_pad, m_pad),
+      col(u, r_pad), pad3(v, l_pad, m_pad), col(rs, r_pad),
+      pad3(cs, l_pad, m_pad), col(b_req, r_pad),
+      # Padded links must keep their duals at zero: b_cap pads with 1.0
+      # (any positive value) so cs = 0 < b_cap there.
+      jnp.pad(b_cap, ((0, 0), (0, l_pad - n_link)),
+              constant_values=1.0)[..., None],
+      pad3(g_req, r_pad, k_pad), pad3(g_link, l_pad, k_pad))
+    xo, uo, vo, rso, cso, axo, auo, avo = outs
+    return (xo[:, :n_pseudo, :n_slots], uo[:, :n_req, 0],
+            vo[:, :n_link, :n_slots], rso[:, :n_req, 0],
+            cso[:, :n_link, :n_slots], axo[:, :n_pseudo, :n_slots],
+            auo[:, :n_req, 0], avo[:, :n_link, :n_slots])
+
+
+# ---------------------------------------------------------------------------
 # Tiled fallback: row tiles, col-dual state carried across the grid.
 # ---------------------------------------------------------------------------
 

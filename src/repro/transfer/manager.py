@@ -30,6 +30,7 @@ from ..core.plan import InfeasibleError
 from ..core.power import DEFAULT_POWER_MODEL, GBPS, PowerModel
 from ..core.problem import TransferRequest, build_problem
 from ..core.simulator import JOULES_PER_KWH
+from ..core.spatial import _links as _path_links
 from ..core.trace import TraceSet
 
 
@@ -44,12 +45,23 @@ class Topology:
     datacenters: tuple[Datacenter, ...]
     # (src, dst) -> tuple of zones traversed (src zone ... dst zone)
     routes: dict[tuple[str, str], tuple[str, ...]]
+    # Optional alternative routes per pair (overlay paths / alternate
+    # replicas).  A spatial policy ("lints-spatial") may split a transfer
+    # across the primary route and these; every other policy uses the
+    # primary route only.
+    alternates: dict[tuple[str, str], tuple[tuple[str, ...], ...]] = \
+        dataclasses.field(default_factory=dict)
 
     def path(self, src: str, dst: str) -> tuple[str, ...]:
         try:
             return self.routes[(src, dst)]
         except KeyError:
             raise KeyError(f"no route {src} -> {dst}") from None
+
+    def candidate_paths(self, src: str, dst: str) -> tuple[tuple[str, ...], ...]:
+        """Primary route first, then any registered alternates."""
+        return (self.path(src, dst),
+                *self.alternates.get((src, dst), ()))
 
 
 @dataclasses.dataclass
@@ -67,6 +79,9 @@ class ManagedTransfer:
     # truncated by (0 = the deadline fits the trace).  Surfaced in
     # ``TransferManager.report()`` so silently tightened SLAs are visible.
     deadline_truncated_slots: int = 0
+    # All routes a spatial policy may split this transfer across
+    # (primary first); non-spatial policies use ``path`` only.
+    candidate_paths: tuple[tuple[str, ...], ...] = ()
 
 
 class TransferManager:
@@ -119,6 +134,11 @@ class TransferManager:
         self.slot = 0
         self.transfers: dict[str, ManagedTransfer] = {}
         self._plan_rho: dict[str, np.ndarray] = {}   # rid -> (n_slots,) bps
+        # Spatial policies additionally keep the per-path split:
+        # rid -> (candidate paths, (n_paths, n_slots) bps) — execution
+        # charges each path's emissions on its own actual trace.
+        self._plan_path_rho: dict[
+            str, tuple[tuple[tuple[str, ...], ...], np.ndarray]] = {}
         self._plan_last_slot: dict[str, int] = {}
         # Stacked copy of _plan_rho for vectorized reserved-capacity sums;
         # rebuilt lazily after every replan.
@@ -163,6 +183,33 @@ class TransferManager:
         ])
         return float(self._plan_matrix[alive, j].sum())
 
+    def _reserved_link_bps(self, j: int) -> dict[tuple[str, str], float]:
+        """Planned (still-live) rate per WAN link at slot j (spatial plans).
+
+        The scalar ``_reserved_bps`` figure over-reserves for multi-path
+        plans: a transfer legitimately running 0.5 + 0.5 Gbps on two
+        disjoint paths would otherwise book 1.0 Gbps against the single
+        legacy capacity figure and starve other transfers' best-effort
+        tails.  With per-path plans available, best-effort headroom is
+        computed per link instead (every WAN link carries
+        ``capacity_gbps`` in the manager's model, matching what the
+        spatial LP was solved against).
+        """
+        out: dict[tuple[str, str], float] = {}
+        for rid, (paths, per_path) in self._plan_path_rho.items():
+            t = self.transfers.get(rid)
+            if t is None or (t.done_slot is not None and t.done_slot < j):
+                continue
+            if j >= per_path.shape[1]:
+                continue
+            for p, path in enumerate(paths):
+                rate = float(per_path[p, j])
+                if rate <= 0.0:
+                    continue
+                for link in _path_links(path):
+                    out[link] = out.get(link, 0.0) + rate
+        return out
+
     def _actual_path_intensity(self, path: tuple[str, ...]) -> np.ndarray:
         """Cached path-combined intensity on the actual (noisy) trace —
         recombining (n_slots,) zone traces per pending transfer per tick is
@@ -184,12 +231,14 @@ class TransferManager:
         deadline = min(requested, self.forecast.n_slots)
         if deadline <= self.slot:
             raise ValueError("deadline beyond trace horizon or non-positive")
+        candidates = self.topology.candidate_paths(src, dst)
         self.transfers[rid] = ManagedTransfer(
             request_id=rid, size_gb=size_gb,
-            path=self.topology.path(src, dst), deadline_slot=deadline,
+            path=candidates[0], deadline_slot=deadline,
             submitted_slot=self.slot,
             remaining_bits=size_gb * 8.0e9,
             deadline_truncated_slots=requested - deadline,
+            candidate_paths=candidates,
         )
         self._needs_plan = True
         return rid
@@ -204,9 +253,13 @@ class TransferManager:
         live = [t for t in self.pending()
                 if t.remaining_bits > 1.0 and t.deadline_slot > self.slot]
         self._plan_rho = {}
+        self._plan_path_rho = {}
         self._plan_matrix = None
         self._needs_plan = False
         if not live:
+            return
+        if isinstance(self.policy, api.SpatialPolicy):
+            self._replan_spatial(live)
             return
         reqs = [
             TransferRequest(
@@ -228,6 +281,43 @@ class TransferManager:
             self._plan_last_slot[t.request_id] = int(nz[-1]) if nz.size else -1
         self._plan_matrix = None
 
+    def _replan_spatial(self, live: list[ManagedTransfer]) -> None:
+        """Joint route+time replanning over each transfer's candidate paths.
+
+        Every WAN link gets ``capacity_gbps`` (the manager's model), so a
+        transfer with alternates can genuinely add bandwidth (and pick the
+        cleaner route), while transfers sharing a link still contend for
+        it.  The per-path split is kept for execution: ``tick`` charges
+        each path's emissions on its own actual trace, and best-effort
+        headroom is accounted per link (``_reserved_link_bps``) instead of
+        against the single legacy capacity figure.
+        """
+        from repro.core import spatial as _spatial
+
+        reqs = [
+            _spatial.SpatialRequest(
+                size_gb=t.remaining_bits / 8.0e9,
+                deadline_slots=t.deadline_slot,
+                offset_slots=self.slot,
+                candidate_paths=t.candidate_paths or (t.path,),
+                request_id=t.request_id,
+            )
+            for t in live
+        ]
+        problem = _spatial.build_spatial_problem(
+            reqs, self.forecast, self.capacity_gbps, self.power)
+        plan = self.policy.plan_spatial([problem])[0]
+        self._plan_last_slot = {}
+        for i, t in enumerate(live):
+            paths = t.candidate_paths or (t.path,)
+            per_path = np.asarray(plan.rho_bps[i][:len(paths)])
+            total = per_path.sum(axis=0)
+            self._plan_rho[t.request_id] = total
+            self._plan_path_rho[t.request_id] = (paths, per_path)
+            nz = np.flatnonzero(total)
+            self._plan_last_slot[t.request_id] = int(nz[-1]) if nz.size else -1
+        self._plan_matrix = None
+
     # ----------------------------------------------------------------- tick
     def tick(self, congestion: float = 1.0) -> None:
         """Advance one slot; execute the plan under a congestion factor."""
@@ -238,7 +328,12 @@ class TransferManager:
         drifted = False
         # Reserved capacity is computed ONCE per tick; each best-effort
         # grant is charged against it so two tail completions in the same
-        # slot can never jointly oversubscribe the link.
+        # slot can never jointly oversubscribe the link.  Spatial
+        # (multi-path) plans account per WAN link instead of against the
+        # single legacy capacity figure (see _reserved_link_bps).
+        link_reserved = (self._reserved_link_bps(j)
+                         if self._plan_path_rho else None)
+        best_effort_link: dict[tuple[str, str], float] = {}
         free_bps = self.capacity_bps_free(j)
         best_effort_bps = 0.0
         for t in self.pending():
@@ -259,23 +354,52 @@ class TransferManager:
                     continue
                 # Slivers (or congested links) finish best-effort at full
                 # rate: replanning them costs ~P_min per extra active slot.
-                rho = min(self.power.rate_cap_gbps(self.capacity_gbps) * GBPS,
-                          free_bps - best_effort_bps)
+                rate_cap = self.power.rate_cap_gbps(self.capacity_gbps) * GBPS
+                if link_reserved is not None:
+                    cap = self.capacity_gbps * GBPS
+                    head = min(
+                        cap - link_reserved.get(l, 0.0)
+                        - best_effort_link.get(l, 0.0)
+                        for l in _path_links(t.path))
+                    rho = min(rate_cap, max(head, 0.0))
+                else:
+                    rho = min(rate_cap, free_bps - best_effort_bps)
                 best_effort = True
             if rho <= 0.0:
                 if j >= t.deadline_slot and t.remaining_bits > 1.0:
                     t.violated = True
                 continue
             if best_effort:
-                best_effort_bps += rho
+                if link_reserved is not None:
+                    for l in _path_links(t.path):
+                        best_effort_link[l] = (
+                            best_effort_link.get(l, 0.0) + rho)
+                else:
+                    best_effort_bps += rho
             achieved = rho * congestion
             moved = min(achieved * dt, t.remaining_bits)
             # Emissions: threads for the *achieved* throughput, actual trace.
-            theta = float(self.power.threads(achieved / GBPS,
-                                             self.capacity_gbps))
-            p_w = float(self.power.power_w(np.float64(theta)))
-            ci = float(self._actual_path_intensity(t.path)[j])
-            t.emissions_g += p_w * dt / JOULES_PER_KWH * ci
+            # A spatial plan splits the slot's rate across candidate paths;
+            # each split charges power on its own path's intensity
+            # (best-effort tail traffic rides the primary path).
+            split = None if best_effort else \
+                self._plan_path_rho.get(t.request_id)
+            if split is not None:
+                for pth, rho_p in zip(split[0], split[1][:, j]):
+                    achieved_p = float(rho_p) * congestion
+                    if achieved_p <= 0.0:
+                        continue
+                    theta = float(self.power.threads(achieved_p / GBPS,
+                                                     self.capacity_gbps))
+                    p_w = float(self.power.power_w(np.float64(theta)))
+                    ci = float(self._actual_path_intensity(pth)[j])
+                    t.emissions_g += p_w * dt / JOULES_PER_KWH * ci
+            else:
+                theta = float(self.power.threads(achieved / GBPS,
+                                                 self.capacity_gbps))
+                p_w = float(self.power.power_w(np.float64(theta)))
+                ci = float(self._actual_path_intensity(t.path)[j])
+                t.emissions_g += p_w * dt / JOULES_PER_KWH * ci
             t.remaining_bits -= moved
             if t.remaining_bits <= 1.0:
                 t.done_slot = j

@@ -13,7 +13,7 @@ from repro.core.plan import Plan
 PATH = ("US-NM", "US-WY", "US-SD")
 
 EXPECTED_POLICIES = {
-    "lints", "lints_pdhg", "lints+",
+    "lints", "lints_pdhg", "lints+", "lints-spatial",
     "fcfs", "edf", "worst_case", "single_threshold", "double_threshold",
 }
 
@@ -28,9 +28,9 @@ def small_problem():
 # ------------------------------------------------------------------ exports
 
 def test_api_exports():
-    for name in ("Policy", "LinTSPolicy", "HeuristicPolicy", "Scheduler",
-                 "register_policy", "get_policy", "available_policies",
-                 "resolve_policy", "schedule"):
+    for name in ("Policy", "LinTSPolicy", "HeuristicPolicy", "SpatialPolicy",
+                 "Scheduler", "register_policy", "get_policy",
+                 "available_policies", "resolve_policy", "schedule"):
         assert hasattr(api, name), name
 
 
@@ -96,8 +96,8 @@ def test_get_policy_overrides_require_dataclass(monkeypatch):
 
 def test_every_policy_plans_and_stamps_meta(small_problem):
     for name in api.available_policies():
-        if name == "lints_pdhg":
-            continue  # iterative solver; covered by test_ragged.py
+        if name in ("lints_pdhg", "lints-spatial"):
+            continue  # iterative solvers; test_ragged.py / test_spatial_batch.py
         plan = api.get_policy(name).plan(small_problem)
         assert isinstance(plan, Plan)
         assert plan.meta["policy"] == name

@@ -1,0 +1,410 @@
+"""Fleet-scale spatiotemporal PDHG vs the sparse HiGHS oracle.
+
+Parity contract (DESIGN.md §11): ``solve_spatiotemporal_batch`` at its
+default (float64, tol 1e-7) config matches ``solve_spatial_scipy``
+objectives to ≤1e-6 relative on randomized multi-path fleets — through the
+ragged bucketing layer, the batched spatial PDHG windows, and the
+link-capacity-aware batched finishing.  Also covers the batched spatial
+Pallas kernel (interpret mode), link-saturation edge cases, the input
+validation added in PR 5, and the ``"lints-spatial"`` policy online
+through :class:`~repro.transfer.TransferManager`.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core import spatial as sp
+from repro.core.plan import InfeasibleError
+from repro.core.trace import TraceSet, make_trace_set
+
+PARITY_RTOL = 1e-6
+
+
+def _traces(n_slots=48, seed=0, zones=("A", "H1", "H2", "B")):
+    rng = np.random.default_rng(seed)
+    return TraceSet(
+        slot_seconds=900.0,
+        zone_slots={z: np.abs(rng.normal(300.0, 120.0, n_slots)) + 50.0
+                    for z in zones},
+    )
+
+
+_PATHS = (("A", "H1", "B"), ("A", "H2", "B"), ("A", "B"))
+_CAPS = {("A", "H1"): 1.0, ("B", "H1"): 1.0, ("A", "H2"): 0.8,
+         ("B", "H2"): 0.8, ("A", "B"): 0.5}
+
+
+def _random_problem(seed, n_req=6, n_slots=48, n_paths=3):
+    rng = np.random.default_rng(seed)
+    traces = _traces(n_slots, seed)
+    reqs = [
+        sp.SpatialRequest(
+            size_gb=float(rng.uniform(10, 60)),
+            deadline_slots=int(rng.integers(n_slots // 2, n_slots + 1)),
+            candidate_paths=_PATHS[:n_paths],
+            request_id=f"s{seed}-r{j}",
+        )
+        for j in range(n_req)
+    ]
+    return sp.build_spatial_problem(reqs, traces, _CAPS)
+
+
+def _rel(plan, oracle):
+    return abs(plan.objective - oracle.objective) / max(
+        abs(oracle.objective), 1e-30)
+
+
+# ------------------------------------------------------------------ parity
+
+def test_batched_matches_scipy_on_randomized_fleet():
+    probs = [_random_problem(seed) for seed in range(6)]
+    plans = sp.solve_spatiotemporal_batch(probs)
+    for i, (p, plan) in enumerate(zip(probs, plans)):
+        oracle = sp.solve_spatial_scipy(p)
+        assert plan.meta["converged"], i
+        assert _rel(plan, oracle) <= PARITY_RTOL, i
+        assert plan.meta["batch_index"] == i
+        assert plan.meta["batch_size"] == len(probs)
+
+
+def test_ragged_mixed_shape_spatial_fleet():
+    """Different request counts, horizons, and path counts in ONE call."""
+    probs = [
+        _random_problem(0, n_req=3, n_slots=40, n_paths=2),
+        _random_problem(1, n_req=6, n_slots=48, n_paths=3),
+        _random_problem(2, n_req=2, n_slots=24, n_paths=1),
+        _random_problem(3, n_req=5, n_slots=48, n_paths=3),
+    ]
+    plans = sp.solve_spatiotemporal_batch(probs)
+    for i, (p, plan) in enumerate(zip(probs, plans)):
+        oracle = sp.solve_spatial_scipy(p)
+        assert _rel(plan, oracle) <= PARITY_RTOL, i
+        assert plan.rho_bps.shape == (p.n_req, p.n_paths_max, p.n_slots)
+        assert plan.meta["bucket_shape"][0] >= p.n_pseudo
+        ok, worst, label = sp.check_spatial_plan(p, _pseudo(p, plan))
+        assert ok, (label, worst)
+
+
+def _pseudo(problem, plan):
+    """Collapse a SpatialPlan back to the (pseudo, slots) solver plane."""
+    return plan.rho_bps[problem.pseudo_request, problem.pseudo_path]
+
+
+def test_pdhg_backend_of_solve_spatiotemporal():
+    traces = _traces(48, 7)
+    rng = np.random.default_rng(7)
+    reqs = [
+        sp.SpatialRequest(
+            size_gb=float(rng.uniform(20, 60)), deadline_slots=48,
+            candidate_paths=_PATHS, request_id=f"r{j}")
+        for j in range(4)
+    ]
+    got = sp.solve_spatiotemporal(reqs, traces, _CAPS, backend="pdhg")
+    want = sp.solve_spatiotemporal(reqs, traces, _CAPS, backend="scipy")
+    assert abs(got.objective - want.objective) <= PARITY_RTOL * abs(
+        want.objective)
+    with pytest.raises(ValueError, match="unknown backend"):
+        sp.solve_spatiotemporal(reqs, traces, _CAPS, backend="hihgs")
+
+
+# ------------------------------------------------------- saturation edges
+
+def test_link_saturation_spills_to_dirty_route():
+    """Batched path reproduces the oracle's saturation behavior."""
+    n_slots = 8
+    traces = TraceSet(slot_seconds=900.0, zone_slots={
+        "A": np.full(n_slots, 200.0), "HUB-CLEAN": np.full(n_slots, 100.0),
+        "HUB-DIRTY": np.full(n_slots, 900.0), "B": np.full(n_slots, 200.0),
+    })
+    reqs = [
+        sp.SpatialRequest(
+            size_gb=300.0, deadline_slots=n_slots,
+            candidate_paths=(("A", "HUB-DIRTY", "B"), ("A", "HUB-CLEAN", "B")),
+            request_id=f"r{i}")
+        for i in range(4)
+    ]
+    prob = sp.build_spatial_problem(reqs, traces, 1.0)
+    plan = sp.solve_spatiotemporal_batch([prob])[0]
+    share_clean = plan.path_share[:, 1]
+    assert share_clean.mean() < 1.0          # demand must spill
+    assert share_clean.mean() > 0.3
+    clean_rho = plan.rho_bps[:, 1, :].sum(axis=0)
+    assert clean_rho.max() <= 1.0e9 * (1 + 1e-9)
+    oracle = sp.solve_spatial_scipy(prob)
+    assert _rel(plan, oracle) <= PARITY_RTOL
+
+
+def test_saturated_shared_link_respects_capacity_batched():
+    n_slots = 4
+    traces = _traces(n_slots, 3)
+    reqs = [
+        sp.SpatialRequest(
+            size_gb=10.0, deadline_slots=n_slots,
+            candidate_paths=(("A", "H1", "B"),), request_id=f"r{i}")
+        for i in range(6)
+    ]
+    prob = sp.build_spatial_problem(reqs, traces, 1.0)
+    plan = sp.solve_spatiotemporal_batch([prob])[0]
+    used = plan.rho_bps[:, 0, :].sum(axis=0)
+    assert used.max() <= 1.0e9 * (1 + 1e-9)
+    # every byte still delivered
+    bits = plan.rho_bps.sum(axis=(1, 2)) * 900.0
+    np.testing.assert_allclose(bits, [r.size_bits for r in reqs], rtol=1e-9)
+
+
+def test_infeasible_fleet_raises_with_problem_index():
+    traces = _traces(4, 1)
+    good = _random_problem(0, n_req=2, n_slots=48)
+    bad = sp.build_spatial_problem(
+        [sp.SpatialRequest(size_gb=1e5, deadline_slots=4,
+                           candidate_paths=(("A", "B"),))],
+        traces, 1.0)
+    with pytest.raises(InfeasibleError, match="workload 1"):
+        sp.solve_spatiotemporal_batch([good, bad])
+
+
+# ------------------------------------------------------- validation (bugfix)
+
+def test_empty_request_list_raises_clear_error():
+    with pytest.raises(ValueError, match="at least one SpatialRequest"):
+        sp.solve_spatiotemporal([], _traces(8), 1.0)
+
+
+def test_missing_link_capacity_named_up_front():
+    req = sp.SpatialRequest(size_gb=1.0, deadline_slots=8,
+                            candidate_paths=(("A", "H1", "B"),),
+                            request_id="r0")
+    with pytest.raises(KeyError, match="missing 1 link"):
+        sp.build_spatial_problem([req], _traces(8), {("A", "H1"): 1.0})
+
+
+def test_request_without_paths_and_bad_zone_rejected():
+    with pytest.raises(ValueError, match="no candidate paths"):
+        sp.build_spatial_problem(
+            [sp.SpatialRequest(1.0, 8, (), request_id="r0")], _traces(8), 1.0)
+    with pytest.raises(ValueError, match="no trace"):
+        sp.build_spatial_problem(
+            [sp.SpatialRequest(1.0, 8, (("A", "NOPE"),), request_id="r0")],
+            _traces(8), 1.0)
+    with pytest.raises(ValueError, match="at least 2 zones"):
+        sp.build_spatial_problem(
+            [sp.SpatialRequest(1.0, 8, (("A",),), request_id="r0")],
+            _traces(8), 1.0)
+    with pytest.raises(ValueError, match="non-positive link"):
+        sp.build_spatial_problem(
+            [sp.SpatialRequest(1.0, 8, (("A", "B"),), request_id="r0")],
+            _traces(8), 0.0)
+
+
+def test_negative_offset_rejected():
+    with pytest.raises(ValueError, match="negative offset"):
+        sp.build_spatial_problem(
+            [sp.SpatialRequest(1.0, 5, (("A", "B"),), offset_slots=-2,
+                               request_id="r0")],
+            _traces(8), 1.0)
+
+
+def test_zero_size_requests_skipped_and_recorded():
+    reqs = [
+        sp.SpatialRequest(0.0, 8, (("A", "B"),), request_id="empty"),
+        sp.SpatialRequest(5.0, 8, (("A", "B"),), request_id="real"),
+    ]
+    for backend in ("scipy", "pdhg"):
+        plan = sp.solve_spatiotemporal(reqs, _traces(8), 1.0, backend=backend)
+        assert plan.meta["skipped_requests"] == ["empty"]
+        assert plan.meta["validated"]["n_requests"] == 2
+        assert plan.rho_bps.shape[0] == 2
+        assert plan.rho_bps[0].sum() == 0.0
+        assert plan.rho_bps[1].sum() * 900.0 >= reqs[1].size_bits * (1 - 1e-9)
+
+
+# ------------------------------------------------------------ kernel parity
+
+def test_spatial_window_kernel_matches_oracle():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.pdhg import pdhg_spatial_window_ref
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(11)
+    B, K, m, R, L = 3, 9, 40, 4, 5
+    f = np.float32
+    ub = (rng.uniform(0, 1, (B, K, m)) > 0.3).astype(f)
+    x = (rng.uniform(0, 1, (B, K, m)).astype(f)) * ub
+    c = (rng.uniform(0, 3, (B, K, m)).astype(f)) * ub
+    u = rng.uniform(0, 2, (B, R)).astype(f)
+    v = rng.uniform(0, 2, (B, L, m)).astype(f)
+    b_req = rng.uniform(0.1, 2, (B, R)).astype(f)
+    b_cap = rng.uniform(0.5, 3, (B, L)).astype(f)
+    g_req = np.zeros((B, R, K), f)
+    for b in range(B):
+        g_req[b, rng.integers(0, R, K), np.arange(K)] = 1
+    g_link = (rng.uniform(0, 1, (B, L, K)) > 0.5).astype(f)
+    rs = np.einsum("brk,bkm->br", g_req, x).astype(f)
+    cs = np.einsum("blk,bkm->blm", g_link, x).astype(f)
+    tau = np.full(B, 0.05, f)
+    sigma = np.full(B, 0.04, f)
+    args = [jnp.asarray(a) for a in
+            (x, c, ub, u, v, rs, cs, b_req, b_cap, g_req, g_link,
+             tau, sigma)]
+    got = ops.pdhg_spatial_window_batched(
+        *args, jnp.zeros((B,), bool), n_iters=60, interpret=True)
+    want = jax.vmap(lambda *a: pdhg_spatial_window_ref(*a, 60))(*args)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=5e-5, atol=5e-5)
+
+    # a converged lane passes its carry through bit-identically
+    done = jnp.asarray([False, True, False])
+    got2 = ops.pdhg_spatial_window_batched(*args, done, n_iters=30,
+                                           interpret=True)
+    carry_in = [args[k] for k in (0, 3, 4, 5, 6)]   # x, u, v, rs, cs
+    for g, inp in zip(got2[:5], carry_in):
+        np.testing.assert_array_equal(np.asarray(g[1]), np.asarray(inp[1]))
+
+
+def test_batched_solve_kernel_path_matches_jnp_path():
+    probs = [_random_problem(s, n_req=3, n_slots=32) for s in range(2)]
+    cfg_jnp = sp.SpatialSolveConfig(dtype="float32", tol=3e-5,
+                                    max_iters=20_000, use_kernel=False)
+    cfg_kern = sp.SpatialSolveConfig(dtype="float32", tol=3e-5,
+                                     max_iters=20_000, use_kernel=True,
+                                     kernel_interpret=True)
+    a = sp.solve_spatiotemporal_batch(probs, cfg_jnp)
+    b = sp.solve_spatiotemporal_batch(probs, cfg_kern)
+    for pa, pb in zip(a, b):
+        assert pa.meta["iterations"] == pb.meta["iterations"]
+        np.testing.assert_allclose(pb.rho_bps, pa.rho_bps, rtol=1e-4,
+                                   atol=1e-4 * 1e9)
+
+
+# ----------------------------------------------- degenerate temporal parity
+
+def test_degenerate_embedding_matches_lints_objective():
+    """One path + one shared link == the temporal LP, so the spatial policy
+    must land on the lints (HiGHS) objective."""
+    from repro.core import problem as prob_mod
+
+    traces = make_trace_set(("US-NM", "US-WY", "US-SD"), hours=24, seed=0)
+    reqs = prob_mod.paper_workload(n_jobs=6, seed=4,
+                                   deadline_range_h=(12, 23))
+    problem = prob_mod.build_problem(reqs, traces, capacity_gbps=0.5)
+    ref = api.get_policy("lints").plan(problem)
+    got = api.get_policy(
+        "lints-spatial", config=sp.SpatialSolveConfig()).plan(problem)
+    rel = abs(got.meta["objective"] - ref.meta["objective"]) / abs(
+        ref.meta["objective"])
+    assert rel <= PARITY_RTOL
+    from repro.core.feasibility import check_plan
+
+    assert check_plan(problem, got.rho_bps, rel_tol=1e-5).feasible
+
+
+def test_spatial_policy_registered_and_protocol():
+    assert "lints-spatial" in api.available_policies()
+    pol = api.get_policy("lints-spatial")
+    assert isinstance(pol, api.Policy)
+    assert pol.name == "lints-spatial"
+
+
+# --------------------------------------------------------- online engine
+
+def _topology():
+    from repro.transfer import Datacenter, Topology
+
+    return Topology(
+        datacenters=(Datacenter("dc1", "US-NM"), Datacenter("dc2", "US-SD")),
+        routes={("dc1", "dc2"): ("US-NM", "US-WY", "US-SD")},
+        alternates={("dc1", "dc2"): (("US-NM", "US-SC", "US-SD"),)},
+    )
+
+
+def test_lints_spatial_through_transfer_manager():
+    from repro.transfer import TransferManager
+
+    traces = make_trace_set(("US-NM", "US-WY", "US-SD", "US-SC"), hours=24,
+                            seed=0)
+    mgr = TransferManager(_topology(), traces, capacity_gbps=1.0,
+                          policy="lints-spatial")
+    mgr.enqueue(40.0, "dc1", "dc2", deadline_slots=48)
+    mgr.enqueue(30.0, "dc1", "dc2", deadline_slots=72)
+    mgr.run_until_idle()
+    rep = mgr.report()
+    assert rep["policy"] == "lints-spatial"
+    assert rep["completed"] == 2
+    assert rep["sla_violations"] == 0
+    assert rep["total_emissions_kg"] > 0
+
+
+def test_spatial_manager_uses_alternate_path_when_cleaner():
+    """Force the primary route dirty: the spatial policy must move bytes to
+    the clean alternate, and the per-path split must be recorded."""
+    n_slots = 96
+    traces = TraceSet(slot_seconds=900.0, zone_slots={
+        "SRC": np.full(n_slots, 100.0), "DIRTY": np.full(n_slots, 2000.0),
+        "CLEAN": np.full(n_slots, 50.0), "DST": np.full(n_slots, 100.0),
+    })
+    from repro.transfer import Datacenter, Topology, TransferManager
+
+    topo = Topology(
+        datacenters=(Datacenter("a", "SRC"), Datacenter("b", "DST")),
+        routes={("a", "b"): ("SRC", "DIRTY", "DST")},
+        alternates={("a", "b"): (("SRC", "CLEAN", "DST"),)},
+    )
+    mgr = TransferManager(topo, traces, capacity_gbps=1.0,
+                          policy="lints-spatial")
+    rid = mgr.enqueue(20.0, "a", "b", deadline_slots=48)
+    mgr.replan()
+    paths, per_path = mgr._plan_path_rho[rid]
+    assert paths[1] == ("SRC", "CLEAN", "DST")
+    bits = per_path.sum(axis=1) * 900.0
+    assert bits[1] / bits.sum() > 0.999       # all bytes on the clean route
+    mgr.run_until_idle()
+    assert mgr.report()["sla_violations"] == 0
+
+
+def test_spatial_best_effort_accounts_per_link():
+    """A transfer split across two disjoint paths must not book the summed
+    rate against another transfer's (disjoint) best-effort headroom."""
+    from repro.transfer import Datacenter, Topology, TransferManager
+
+    n_slots = 24
+    traces = TraceSet(slot_seconds=900.0, zone_slots={
+        z: np.full(n_slots, 100.0)
+        for z in ("SRC", "H1", "H2", "DST", "OSRC", "ODST")})
+    topo = Topology(
+        datacenters=(Datacenter("a", "SRC"), Datacenter("b", "DST"),
+                     Datacenter("c", "OSRC"), Datacenter("d", "ODST")),
+        routes={("a", "b"): ("SRC", "H1", "DST"),
+                ("c", "d"): ("OSRC", "ODST")},
+        alternates={("a", "b"): (("SRC", "H2", "DST"),)},
+    )
+    mgr = TransferManager(topo, traces, capacity_gbps=1.0,
+                          policy="lints-spatial")
+    mgr.enqueue(50.0, "a", "b", deadline_slots=24)
+    mgr.enqueue(10.0, "c", "d", deadline_slots=24)
+    mgr.replan()
+    j = 0
+    reserved = mgr._reserved_link_bps(j)
+    # The split transfer's links never appear on the other pair's route,
+    # so its headroom along ("OSRC","ODST") is the full link capacity.
+    head = 1.0e9 - reserved.get(("ODST", "OSRC"), 0.0)
+    planned_other = mgr._plan_path_rho[list(mgr.transfers)[1]][1][:, j].sum()
+    assert head >= 1.0e9 - planned_other - 1e-6
+    mgr.run_until_idle()
+    assert mgr.report()["sla_violations"] == 0
+
+
+def test_non_spatial_policy_ignores_alternates():
+    from repro.transfer import TransferManager
+
+    traces = make_trace_set(("US-NM", "US-WY", "US-SD", "US-SC"), hours=24,
+                            seed=0)
+    mgr = TransferManager(_topology(), traces, capacity_gbps=1.0,
+                          policy="edf")
+    rid = mgr.enqueue(10.0, "dc1", "dc2", deadline_slots=48)
+    mgr.replan()
+    assert rid not in mgr._plan_path_rho
+    assert mgr.transfers[rid].path == ("US-NM", "US-WY", "US-SD")

@@ -1,0 +1,120 @@
+"""Documentation checker: internal links, anchors, and runnable snippets.
+
+Link-checks the repo's markdown front door (``README.md``, ``docs/API.md``,
+``DESIGN.md``): every relative link target must exist on disk, and every
+``#anchor`` must match a heading in the target file (GitHub slug rules).
+With ``--snippets`` it additionally executes every fenced ````` ```python
+````` block of README.md and docs/API.md in a subprocess with
+``PYTHONPATH=src`` — the README quickstart and every API reference snippet
+must run green.
+
+Usage (from the repo root; CI runs both):
+
+    python tools/check_docs.py
+    python tools/check_docs.py --snippets
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import tempfile
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOC_FILES = ("README.md", "docs/API.md", "DESIGN.md")
+SNIPPET_FILES = ("README.md", "docs/API.md")
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_FENCE_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces -> dashes."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    return slug.replace(" ", "-")
+
+
+def anchors_of(path: pathlib.Path) -> set[str]:
+    return {github_slug(h) for h in _HEADING_RE.findall(path.read_text())}
+
+
+def check_links(doc: pathlib.Path) -> list[str]:
+    errors = []
+    for target in _LINK_RE.findall(doc.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = (doc.parent / path_part).resolve() if path_part else doc
+        if not dest.exists():
+            errors.append(f"{doc}: broken link -> {target} "
+                          f"(no such file {dest})")
+            continue
+        if anchor:
+            if dest.suffix != ".md":
+                continue
+            if anchor not in anchors_of(dest):
+                errors.append(f"{doc}: broken anchor -> {target} "
+                              f"(no heading slugs to '{anchor}' in {dest})")
+    return errors
+
+
+def run_snippets(doc: pathlib.Path) -> list[str]:
+    errors = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    for i, code in enumerate(_FENCE_RE.findall(doc.read_text())):
+        with tempfile.NamedTemporaryFile(
+                "w", suffix=f"_snippet{i}.py", delete=False) as f:
+            f.write(code)
+            tmp = f.name
+        try:
+            proc = subprocess.run(
+                [sys.executable, tmp], env=env, cwd=ROOT,
+                capture_output=True, text=True, timeout=600)
+            if proc.returncode != 0:
+                errors.append(
+                    f"{doc} snippet #{i} failed "
+                    f"(exit {proc.returncode}):\n{proc.stderr[-2000:]}")
+            else:
+                print(f"{doc.relative_to(ROOT)} snippet #{i}: OK")
+        finally:
+            os.unlink(tmp)
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--snippets", action="store_true",
+                    help="also execute the ```python blocks of "
+                         "README.md and docs/API.md")
+    args = ap.parse_args()
+
+    errors = []
+    for name in DOC_FILES:
+        doc = ROOT / name
+        if not doc.exists():
+            errors.append(f"missing documentation file: {name}")
+            continue
+        errors.extend(check_links(doc))
+    if args.snippets:
+        for name in SNIPPET_FILES:
+            errors.extend(run_snippets(ROOT / name))
+
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        print(f"\n{len(errors)} documentation error(s)", file=sys.stderr)
+        return 1
+    print("docs OK: links, anchors"
+          + (", snippets" if args.snippets else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
