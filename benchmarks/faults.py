@@ -1,0 +1,269 @@
+"""Fault benchmark: emissions and SLA deltas under injected failures.
+
+DESIGN.md §12's numbers: run the online transfer engine through the
+declarative fault model (:mod:`repro.core.faults`) and measure what the
+fault-tolerance machinery actually buys, per scenario and per policy:
+
+* **outage_50pct** — the primary WAN link dies at the slot where the clean
+  plan has moved ~50% of the bytes and stays dead through the horizon.
+  With recovery the engine must detect the outage (link-health EWMA),
+  reroute over ``Topology.alternates`` and replan — meeting the SLA when
+  an alternate-path feasible schedule exists.  Fail-naive must record the
+  miss.  Both facts are *asserted*, so this file doubles as the
+  acceptance gate for the recovery path.
+* **degraded_link** — a soft 70% throughput degradation window; recovery
+  replans around the drift instead of grinding through it.
+* **stale_forecast** — a zone's forecast freezes mid-run (revisions stop
+  arriving); replans see the ``hold_last`` forecast, never the future.
+* **solver_faults** — injected PDHG/scipy failures on every solve; the
+  degradation ladder (:func:`repro.core.api.resilient_solve`) must land
+  every plan on a real rung (``meta["solver_status"]``) with zero SLA
+  cost, asserted against :data:`repro.core.api.LADDER_RUNGS`.
+
+Emits machine-readable ``BENCH_faults.json`` at the repo root (same idiom
+as ``BENCH_spatial.json``) so robustness deltas are diffable PR-over-PR.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+
+import numpy as np
+
+from repro.core import api, lints
+from repro.core.faults import FaultSchedule, ForecastFault, LinkFault, SolverFault
+from repro.core.trace import make_trace_set
+from repro.transfer import Datacenter, Topology, TransferManager
+
+from .common import csv_line, timed
+
+_BENCH_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_faults.json"
+
+ZONES = ("US-NM", "US-WY", "US-SD", "US-CO")
+PRIMARY = ("US-NM", "US-WY", "US-SD")
+ALTERNATE = ("US-NM", "US-CO", "US-SD")
+PRIMARY_LINK = ("US-NM", "US-WY")
+SLOT_SECONDS = 900.0
+
+
+def _topology() -> Topology:
+    return Topology(
+        datacenters=(Datacenter("dc-a", "US-NM"), Datacenter("dc-b", "US-SD")),
+        routes={("dc-a", "dc-b"): PRIMARY},
+        alternates={("dc-a", "dc-b"): (ALTERNATE,)},
+    )
+
+
+def _manager(hours: int, *, policy: str = "lints",
+             faults: FaultSchedule | None = None, recovery: bool = True,
+             resilient: bool = True, backend: str = "scipy",
+             seed: int = 0) -> TransferManager:
+    traces = make_trace_set(ZONES, hours=hours, slot_seconds=SLOT_SECONDS,
+                            seed=seed)
+    config = (lints.LinTSConfig(backend=backend)
+              if policy == "lints" else None)
+    return TransferManager(
+        _topology(), traces, capacity_gbps=1.0,
+        policy=policy, config=config,
+        faults=faults, recovery=recovery, resilient=resilient,
+    )
+
+
+def _workload(tm: TransferManager, size_gb: float, deadline: int) -> str:
+    return tm.enqueue(size_gb, "dc-a", "dc-b", deadline)
+
+
+def _half_progress_slot(hours: int, size_gb: float, deadline: int,
+                        policy: str) -> int:
+    """First slot after the clean plan has moved ~50% of the bytes."""
+    tm = _manager(hours, policy=policy)
+    rid = _workload(tm, size_gb, deadline)
+    tm.replan()
+    rho = tm._plan_rho[rid]
+    cum = np.cumsum(rho) * SLOT_SECONDS
+    return int(np.searchsorted(cum, 0.5 * size_gb * 8e9)) + 1
+
+
+def _report(tm: TransferManager) -> dict:
+    rep = tm.report()
+    return {
+        "emissions_kg": round(rep["total_emissions_kg"], 6),
+        "completed": rep["completed"],
+        "sla_violations": rep["sla_violations"],
+        "reroutes": rep["reroutes"],
+        "panics": rep["panics"],
+        "replan_failures": rep["replan_failures"],
+        "solver_status": rep["solver_status"],
+    }
+
+
+def _run_scenario(hours: int, size_gb: float, deadline: int, *,
+                  policy: str, faults: FaultSchedule | None,
+                  recovery: bool, resilient: bool) -> dict:
+    tm = _manager(hours, policy=policy, faults=faults,
+                  recovery=recovery, resilient=resilient)
+    _workload(tm, size_gb, deadline)
+    tm.run_until_idle()
+    return _report(tm)
+
+
+def run(fast: bool = False, quiet: bool = False) -> dict:
+    hours = 12
+    n_slots = int(hours * 3600 / SLOT_SECONDS)
+    size_gb, deadline = 600.0, 40
+
+    bench: dict = {
+        "bench": "faults",
+        "fast": bool(fast),
+        "environment": {
+            "cpu_count": os.cpu_count(),
+            "zones": list(ZONES),
+            "n_slots": n_slots,
+            "size_gb": size_gb,
+            "deadline_slots": deadline,
+        },
+        "scenarios": {},
+    }
+    lines: list[str] = []
+
+    def emit(name: str, rep: dict, us: float) -> None:
+        derived = (f"emissions={rep['emissions_kg']:.3f}kg;"
+                   f"sla_violations={rep['sla_violations']};"
+                   f"reroutes={rep['reroutes']};panics={rep['panics']}")
+        lines.append(csv_line(f"faults_{name}", us, derived))
+        if not quiet:
+            print(lines[-1], flush=True)
+
+    # ---------------------------------------------- outage at 50% progress
+    outage: dict = {}
+    policies = ("lints",) if fast else ("lints", "edf")
+    for policy in policies:
+        half = _half_progress_slot(hours, size_gb, deadline, policy)
+        fs = FaultSchedule(seed=7, link_faults=(
+            LinkFault(PRIMARY_LINK, half, n_slots, factor=0.0),))
+        per: dict = {"outage_from_slot": half}
+        for variant, recovery in (("recovery", True), ("naive", False)):
+            rep, us = timed(_run_scenario, hours, size_gb, deadline,
+                            policy=policy, faults=fs, recovery=recovery,
+                            resilient=recovery)
+            per[variant] = rep
+            emit(f"outage50_{policy}_{variant}", rep, us)
+        per["delta_sla"] = (per["naive"]["sla_violations"]
+                           - per["recovery"]["sla_violations"])
+        per["delta_emissions_kg"] = round(
+            per["recovery"]["emissions_kg"] - per["naive"]["emissions_kg"], 6)
+        outage[policy] = per
+        # Acceptance gate: recovery meets the SLA over the alternate path,
+        # fail-naive records the miss.
+        assert per["recovery"]["sla_violations"] == 0, \
+            f"{policy}: recovery missed SLA under alternate-path outage"
+        assert per["recovery"]["reroutes"] >= 1, \
+            f"{policy}: outage recovered without a reroute?"
+        assert per["naive"]["sla_violations"] >= 1, \
+            f"{policy}: fail-naive met SLA — outage scenario has no teeth"
+    bench["scenarios"]["outage_50pct"] = outage
+
+    # -------------------------------------------------- soft degradation
+    # factor 0.25 sits below the health monitor's unhealthy threshold
+    # (0.3), so recovery detects the sick link and reroutes; fail-naive
+    # grinds through at quarter rate.
+    half = _half_progress_slot(hours, size_gb, deadline, "lints")
+    fs = FaultSchedule(seed=11, link_faults=(
+        LinkFault(PRIMARY_LINK, half, min(half + 8, n_slots), factor=0.25),))
+    degraded: dict = {}
+    for variant, recovery in (("recovery", True), ("naive", False)):
+        rep, us = timed(_run_scenario, hours, size_gb, deadline,
+                        policy="lints", faults=fs, recovery=recovery,
+                        resilient=recovery)
+        degraded[variant] = rep
+        emit(f"degraded_lints_{variant}", rep, us)
+    degraded["delta_sla"] = (degraded["naive"]["sla_violations"]
+                             - degraded["recovery"]["sla_violations"])
+    bench["scenarios"]["degraded_link"] = degraded
+
+    # -------------------------------------------------- stale forecast
+    # The initial plan predates the fault; a mid-run congestion dip forces
+    # replans *inside* the stale window, so the replanner schedules the
+    # tail against a frozen forecast while execution charges the real one.
+    fs = FaultSchedule(seed=13, forecast_faults=(
+        ForecastFault("US-WY", 4, n_slots, mode="stale"),))
+    # Anchor the dip at the plan's half-progress slot so it hits slots the
+    # plan actually uses (a dip over idle slots never triggers drift).
+    dip = lambda s: 0.75 if half <= s < half + 4 else 1.0  # noqa: E731
+
+    def stale_scenario(faults: FaultSchedule | None) -> dict:
+        tm = _manager(hours, policy="lints", faults=faults,
+                      recovery=True, resilient=True)
+        _workload(tm, size_gb, deadline)
+        tm.run_until_idle(congestion_fn=dip)
+        return _report(tm)
+
+    stale: dict = {}
+    for variant, faults in (("faulted", fs), ("clean", None)):
+        rep, us = timed(stale_scenario, faults)
+        stale[variant] = rep
+        emit(f"stale_forecast_{variant}", rep, us)
+    stale["delta_emissions_kg"] = round(
+        stale["faulted"]["emissions_kg"] - stale["clean"]["emissions_kg"], 6)
+    bench["scenarios"]["stale_forecast"] = stale
+
+    # -------------------------------------------------- solver faults
+    # Poison every solve the engine makes; the degradation ladder must land
+    # each plan on a real rung with zero SLA cost.  Fast mode keeps the
+    # scipy backend (ladder: scipy -> heuristic); full mode exercises the
+    # PDHG rungs too.
+    backend = "scipy" if fast else "pdhg"
+    n_poisoned = 8
+    fs = FaultSchedule(seed=17, solver_faults=tuple(
+        SolverFault(i, mode=("nan" if i % 2 == 0 else "no_converge"),
+                    rungs=1 + (i % 2))
+        for i in range(n_poisoned)))
+
+    def solver_scenario(resilient: bool) -> dict:
+        tm = _manager(hours, policy="lints", faults=fs, recovery=True,
+                      resilient=resilient, backend=backend)
+        _workload(tm, size_gb, deadline)
+        # Congestion dips over the plan's active slots force extra replans
+        # so several poisoned solve indices actually fire.  Two windows:
+        # heuristic-rung plans (EDF) run early, LP plans run near the
+        # carbon-optimal half-progress slots.
+        tm.run_until_idle(
+            congestion_fn=lambda s: 0.75 if (2 <= s < 6
+                                             or half <= s < half + 4)
+            else 1.0)
+        return _report(tm)
+
+    solver: dict = {"backend": backend, "n_poisoned": n_poisoned}
+    for variant, resilient in (("ladder", True), ("naive", False)):
+        rep, us = timed(solver_scenario, resilient)
+        solver[variant] = rep
+        emit(f"solver_faults_{variant}", rep, us)
+    ladder_counts = solver["ladder"]["solver_status"]
+    assert ladder_counts and sum(ladder_counts.values()) >= 1, \
+        "ladder ran no solves?"
+    assert set(ladder_counts) <= set(api.LADDER_RUNGS), \
+        f"unknown solver_status rungs: {ladder_counts}"
+    assert solver["ladder"]["sla_violations"] == 0, \
+        "degradation ladder failed to preserve the SLA under solver faults"
+    bench["scenarios"]["solver_faults"] = solver
+
+    bench["csv"] = lines
+    _BENCH_PATH.write_text(json.dumps(bench, indent=2) + "\n")
+    if not quiet:
+        print(f"# wrote {_BENCH_PATH}", flush=True)
+    return bench
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller grid, scipy-only ladder")
+    args = ap.parse_args()
+    run(fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

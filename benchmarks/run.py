@@ -16,6 +16,7 @@ import traceback
 from . import (
     congestion,
     emission_dist,
+    faults,
     fleet_e2e,
     montecarlo,
     paper_tables,
@@ -30,6 +31,7 @@ SUITES = {
     "power_model": lambda fast: power_model.run(),
     "emission_dist": lambda fast: emission_dist.run(n_jobs=30 if fast else 60),
     "congestion": lambda fast: congestion.run(n_transfers=6 if fast else 12),
+    "faults": lambda fast: faults.run(fast=fast),
     "montecarlo": lambda fast: montecarlo.run(n_jobs=30 if fast else 60),
     "solver_scaling": lambda fast: solver_scaling.run(),
     "fleet_e2e": lambda fast: fleet_e2e.run(fast=fast),

@@ -33,11 +33,15 @@ survive as thin deprecation shims delegating here.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Mapping, Protocol, Sequence, runtime_checkable
+
+import numpy as np
 
 from . import heuristics as _heuristics
 from . import lints as _lints
-from .plan import Plan
+from .feasibility import workload_feasible
+from .plan import InfeasibleError, Plan
 from .power import DEFAULT_POWER_MODEL, PowerModel
 from .problem import ScheduleProblem, TransferRequest, build_problem
 from .trace import TraceSet
@@ -52,6 +56,9 @@ __all__ = [
     "get_policy",
     "available_policies",
     "resolve_policy",
+    "resilient_solve",
+    "plan_failure",
+    "LADDER_RUNGS",
     "schedule",
 ]
 
@@ -112,6 +119,10 @@ class LinTSPolicy:
             from . import ragged
 
             plans = ragged.solve_batch_ragged(problems, self.config)
+            # Fail closed on converged=False: unconverged fleet members
+            # re-enter the degradation ladder instead of shipping unmarked.
+            plans = _fail_closed_batch(problems, plans, self.config,
+                                       self.name)
             for plan in plans:  # ragged restores batch meta; add the name
                 _stamp(plan, self.name)
         else:
@@ -214,6 +225,192 @@ class SpatialPolicy:
         for plan in plans:
             plan.meta["policy"] = self.name
         return plans
+
+
+# ---------------------------------------------------------------------------
+# Solver degradation ladder
+# ---------------------------------------------------------------------------
+
+#: Ladder rungs in escalation order.  Every plan returned by
+#: :func:`resilient_solve` carries ``meta["solver_status"]`` from this set.
+LADDER_RUNGS = ("pdhg", "pdhg-retry", "scipy", "heuristic")
+
+_FAIL_CLOSED_WARNED = False
+
+
+def plan_failure(plan: Plan) -> str | None:
+    """Why ``plan`` must not be shipped, or ``None`` if it is sound.
+
+    A plan fails closed when its throughput matrix contains non-finite
+    values (a NaN'd PDHG iterate) or its solver diagnostics record
+    non-convergence (``meta["converged"] is False``).  Plans from solvers
+    without a convergence flag (scipy/HiGHS raises instead) pass.
+    """
+    rho = np.asarray(plan.rho_bps, dtype=np.float64)
+    if not np.isfinite(rho).all():
+        return "non-finite throughput plan (NaN/inf iterate)"
+    if plan.meta.get("converged") is False:
+        return (
+            f"pdhg unconverged after {plan.meta.get('iterations')} iters "
+            f"(primal_residual={plan.meta.get('primal_residual')}, "
+            f"gap={plan.meta.get('gap')})"
+        )
+    return None
+
+
+def resilient_solve(
+    problem: ScheduleProblem,
+    config: _lints.LinTSConfig | None = None,
+    *,
+    inject: Any = None,
+    first_attempt: Plan | None = None,
+) -> Plan:
+    """Solve with a degradation ladder: never ship a broken plan silently.
+
+    Escalation (DESIGN.md §12): solve with the configured backend; on
+    non-convergence, a NaN'd iterate, or a solver exception, retry PDHG
+    warm-started from the sanitized failed iterate with a doubled
+    iteration budget and twice the restart-window density; on failure,
+    fall back to the scipy/HiGHS oracle; as a last resort, schedule with
+    the EDF greedy heuristic (strict, then best-effort).  The returned
+    plan always carries ``meta["solver_status"]`` ∈ ``LADDER_RUNGS`` and
+    ``meta["solver_ladder"]`` — the failures of every earlier rung — so
+    an unconverged solve can never surface unmarked.
+
+    Genuine workload infeasibility is *not* a solver fault: it raises
+    :class:`~repro.core.plan.InfeasibleError` up-front, before the ladder.
+
+    ``inject`` (a :class:`repro.core.faults.SolverFault` or a mode string
+    ``"nan"``/``"no_converge"``) deterministically poisons the leading
+    rung attempts for chaos testing; ``first_attempt`` seeds the ladder
+    with an already-computed (failed) plan so batch callers don't pay for
+    the cold solve twice.
+    """
+    config = config or _lints.LinTSConfig(backend="pdhg")
+    ok, why = workload_feasible(problem)
+    if not ok:
+        raise InfeasibleError(f"workload infeasible: {why}")
+
+    fault = None
+    if inject is not None:
+        from .faults import SolverFault
+
+        fault = (inject if isinstance(inject, SolverFault)
+                 else SolverFault(solve_index=0, mode=str(inject)))
+
+    if config.backend == "pdhg":
+        rungs = ["pdhg", "pdhg-retry", "scipy", "heuristic"]
+    else:
+        rungs = ["scipy", "heuristic"]
+
+    attempts: list[dict[str, str]] = []
+    prev_plan: Plan | None = None
+    for i, rung in enumerate(rungs):
+        poisoned = (fault is not None and i < fault.rungs
+                    and rung != "heuristic")
+        plan: Plan | None = None
+        failure: str | None = None
+        try:
+            if rung == "pdhg":
+                if first_attempt is not None:
+                    plan = first_attempt
+                elif poisoned and fault.mode == "nan":
+                    plan = Plan(
+                        np.full((problem.n_jobs, problem.n_slots), np.nan),
+                        "lints",
+                        {"backend": "pdhg", "converged": False,
+                         "injected": "nan"},
+                    )
+                elif poisoned:  # zero iteration budget: the silent-breakage case
+                    zcfg = dataclasses.replace(
+                        config, validate=False, vertex_round=False,
+                        refine=False,
+                        pdhg=dataclasses.replace(config.pdhg, max_iters=0))
+                    plan = _lints._solve(problem, zcfg)
+                    plan.meta["injected"] = "no_converge"
+                else:
+                    plan = _lints._solve(problem, config)
+            elif rung == "pdhg-retry":
+                if poisoned:
+                    raise InfeasibleError(f"injected {fault.mode} fault "
+                                          "persists through retry")
+                warm = prev_plan.rho_bps if prev_plan is not None else None
+                rcfg = dataclasses.replace(
+                    config,
+                    pdhg=dataclasses.replace(
+                        config.pdhg,
+                        max_iters=max(2 * config.pdhg.max_iters, 20_000),
+                        check_every=max(config.pdhg.check_every // 2, 10),
+                    ),
+                )
+                plan = _lints._solve(problem, rcfg, x0_bps=warm)
+            elif rung == "scipy":
+                if poisoned:
+                    raise InfeasibleError(
+                        f"injected {fault.mode} fault persists through "
+                        "the scipy oracle")
+                plan = _lints._solve(
+                    problem, dataclasses.replace(config, backend="scipy"))
+            else:  # heuristic — the rung of last resort, never poisoned
+                try:
+                    plan = _heuristics.edf(problem)
+                except InfeasibleError:
+                    plan = _heuristics.edf(problem, best_effort=True)
+                    plan.meta["best_effort"] = True
+        except (InfeasibleError, FloatingPointError, ValueError) as e:
+            failure = f"{type(e).__name__}: {e}"
+            plan = None
+        if failure is None and plan is not None:
+            failure = plan_failure(plan)
+        if failure is None:
+            assert plan is not None
+            plan.meta["solver_status"] = rung
+            if attempts:
+                plan.meta["solver_ladder"] = attempts
+            return plan
+        attempts.append({"rung": rung, "failure": failure})
+        if plan is not None:
+            prev_plan = plan
+    raise InfeasibleError(  # pragma: no cover — the heuristic rung returns
+        f"degradation ladder exhausted: {attempts}")
+
+
+def _fail_closed_batch(
+    problems: Sequence[ScheduleProblem],
+    plans: list[Plan],
+    config: _lints.LinTSConfig,
+    name: str,
+) -> list[Plan]:
+    """Route unconverged fleet members through the degradation ladder.
+
+    The batched pipeline used to return unconverged plans unmarked; now
+    each one re-enters :func:`resilient_solve` (seeded with the failed
+    attempt, so the cold solve isn't repeated) and a once-per-process
+    warning names the affected batch indices.
+    """
+    global _FAIL_CLOSED_WARNED
+    bad = [i for i, p in enumerate(plans) if plan_failure(p) is not None]
+    if not bad:
+        return plans
+    if not _FAIL_CLOSED_WARNED:
+        _FAIL_CLOSED_WARNED = True
+        warnings.warn(
+            f"plan_batch[{name}]: {len(bad)} fleet member(s) at batch "
+            f"indices {bad} did not converge; routing through the "
+            "resilient_solve degradation ladder (warning once per process)",
+            RuntimeWarning,
+            stacklevel=4,
+        )
+    for i in bad:
+        meta_keep = {k: plans[i].meta.get(k)
+                     for k in ("batch_index", "batch_size")}
+        plan = resilient_solve(problems[i], config,
+                               first_attempt=plans[i])
+        for k, v in meta_keep.items():
+            if v is not None:
+                plan.meta[k] = v
+        plans[i] = plan
+    return plans
 
 
 # ---------------------------------------------------------------------------

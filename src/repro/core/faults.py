@@ -1,0 +1,308 @@
+"""Deterministic fault injection: the chaos layer of the transfer engine.
+
+The paper's §IV-C admits congestion can break a committed plan and leaves
+recovery to future work; *Carbon-Aware Computing for Datacenters*
+(Radovanović et al.) and *Let's Wait Awhile* (Wiesner et al.) both stress
+that carbon-aware systems must degrade gracefully when forecasts and
+infrastructure misbehave.  This module is the declarative, seeded fault
+model the online engine (:class:`repro.transfer.TransferManager`), the
+solver degradation ladder (:func:`repro.core.api.resilient_solve`) and the
+fault benchmark (``benchmarks/faults.py``) all consume:
+
+* **Link faults** — per-WAN-link outage (factor 0.0) or throughput
+  degradation windows.  Links are undirected ``(zone_a, zone_b)`` pairs in
+  sorted order, matching :func:`repro.core.spatial._links`.
+* **Forecast faults** — per-zone staleness (revisions stop arriving: the
+  forecast freezes at its last fresh value for the rest of the horizon
+  while the fault is active) or dropout (a window of missing slots,
+  ``hold_last``-filled; data is fresh again after the window).
+* **Solver faults** — injected PDHG failures (NaN iterates or a
+  zero-iteration budget) consumed by the degradation ladder, with a
+  ``rungs`` depth so tests can force any rung of the ladder to fire.
+
+Everything is deterministic: explicit fault lists replay exactly, and
+:meth:`FaultSchedule.chaos` derives a random schedule purely from its
+seed, so a chaos CI job is reproducible run-to-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+
+from .trace import TraceSet
+
+__all__ = [
+    "Link",
+    "LinkFault",
+    "ForecastFault",
+    "SolverFault",
+    "FaultSchedule",
+    "path_links",
+]
+
+Link = tuple[str, str]
+
+_FORECAST_MODES = ("stale", "dropout")
+_SOLVER_MODES = ("nan", "no_converge")
+
+
+def _norm_link(link: Sequence[str]) -> Link:
+    """Undirected link key: sorted (zone_a, zone_b) pair."""
+    a, b = link
+    return tuple(sorted((a, b)))  # type: ignore[return-value]
+
+
+def path_links(path: Sequence[str]) -> list[Link]:
+    """The WAN links a zone path traverses (sorted-pair keys)."""
+    return [_norm_link((path[k], path[k + 1])) for k in range(len(path) - 1)]
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkFault:
+    """One link misbehaving over ``[start_slot, end_slot)``.
+
+    ``factor`` scales achieved throughput on the link: 0.0 is a hard
+    outage, 0.4 is 60% degradation, 1.0 is a no-op.
+    """
+
+    link: Link
+    start_slot: int
+    end_slot: int
+    factor: float = 0.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "link", _norm_link(self.link))
+        if self.end_slot <= self.start_slot:
+            raise ValueError(
+                f"link fault on {self.link}: empty window "
+                f"[{self.start_slot}, {self.end_slot})")
+        if not 0.0 <= self.factor <= 1.0:
+            raise ValueError(
+                f"link fault on {self.link}: factor {self.factor} "
+                "outside [0, 1]")
+
+
+@dataclasses.dataclass(frozen=True)
+class ForecastFault:
+    """A zone's forecast going stale or dropping out over a window."""
+
+    zone: str
+    start_slot: int
+    end_slot: int
+    mode: str = "stale"
+
+    def __post_init__(self):
+        if self.end_slot <= self.start_slot:
+            raise ValueError(
+                f"forecast fault on {self.zone!r}: empty window "
+                f"[{self.start_slot}, {self.end_slot})")
+        if self.mode not in _FORECAST_MODES:
+            raise ValueError(
+                f"forecast fault on {self.zone!r}: unknown mode "
+                f"{self.mode!r} (expected one of {_FORECAST_MODES})")
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverFault:
+    """An injected solver failure for the ``solve_index``-th solve call.
+
+    ``mode="nan"`` poisons the iterate with NaNs; ``mode="no_converge"``
+    gives the solve a zero iteration budget (the silently-broken-plan
+    scenario).  ``rungs`` is how many leading rungs of the degradation
+    ladder the fault poisons (1 = first PDHG attempt only; 2 adds the
+    warm-started retry; 3 adds the scipy oracle — the heuristic rung of
+    last resort is never poisoned).
+    """
+
+    solve_index: int
+    mode: str = "nan"
+    rungs: int = 1
+
+    def __post_init__(self):
+        if self.mode not in _SOLVER_MODES:
+            raise ValueError(
+                f"solver fault at solve {self.solve_index}: unknown mode "
+                f"{self.mode!r} (expected one of {_SOLVER_MODES})")
+        if not 1 <= self.rungs <= 3:
+            raise ValueError(
+                f"solver fault at solve {self.solve_index}: rungs "
+                f"{self.rungs} outside [1, 3]")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """A seeded, declarative fault schedule for one engine run.
+
+    Query surface (all pure, all deterministic):
+
+    * :meth:`link_factor` / :meth:`path_factor` — achieved-throughput
+      multiplier for a link / the min over a path's links at a slot.
+    * :meth:`degrade_forecast` — the forecast a replanner is allowed to
+      see at ``now_slot`` (stale zones frozen via
+      :meth:`~repro.core.trace.TraceSet.hold_last`, dropout windows
+      hold-filled).
+    * :meth:`solver_fault` — the injected failure for a solve call index,
+      if any.
+
+    The ``seed`` is bookkeeping for explicit fault lists (it names the
+    run); :meth:`chaos` derives the fault lists themselves from the seed.
+    """
+
+    seed: int = 0
+    link_faults: tuple[LinkFault, ...] = ()
+    forecast_faults: tuple[ForecastFault, ...] = ()
+    solver_faults: tuple[SolverFault, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "link_faults", tuple(self.link_faults))
+        object.__setattr__(self, "forecast_faults",
+                           tuple(self.forecast_faults))
+        object.__setattr__(self, "solver_faults", tuple(self.solver_faults))
+        seen: dict[int, SolverFault] = {}
+        for f in self.solver_faults:
+            if f.solve_index in seen:
+                raise ValueError(
+                    f"two solver faults target solve {f.solve_index}")
+            seen[f.solve_index] = f
+
+    # ------------------------------------------------------------- links
+    def link_factor(self, link: Sequence[str], slot: int) -> float:
+        """Throughput multiplier for ``link`` at ``slot`` (1.0 = healthy)."""
+        key = _norm_link(link)
+        factor = 1.0
+        for f in self.link_faults:
+            if f.link == key and f.start_slot <= slot < f.end_slot:
+                factor = min(factor, f.factor)
+        return factor
+
+    def path_factor(self, path: Sequence[str], slot: int) -> float:
+        """Min link factor along ``path`` at ``slot`` (0.0 = path down)."""
+        if not self.link_faults:
+            return 1.0
+        return min((self.link_factor(l, slot) for l in path_links(path)),
+                   default=1.0)
+
+    def faulty_links(self, slot: int) -> dict[Link, float]:
+        """Links with factor < 1 at ``slot`` (ground truth, not detection)."""
+        out: dict[Link, float] = {}
+        for f in self.link_faults:
+            if f.start_slot <= slot < f.end_slot:
+                out[f.link] = min(out.get(f.link, 1.0), f.factor)
+        return {l: v for l, v in out.items() if v < 1.0}
+
+    # ---------------------------------------------------------- forecasts
+    def forecast_fault(self, zone: str, slot: int) -> ForecastFault | None:
+        """The active forecast fault for ``zone`` at ``slot``, if any."""
+        for f in self.forecast_faults:
+            if f.zone == zone and f.start_slot <= slot < f.end_slot:
+                return f
+        return None
+
+    def degrade_forecast(self, traces: TraceSet, now_slot: int) -> TraceSet:
+        """The forecast as seen by a replanner at ``now_slot``.
+
+        Stale zones freeze from the fault start for the rest of the
+        horizon (no revisions are arriving); dropout zones hold-fill the
+        missing window only.  Zones without an active fault pass through
+        untouched; with no active faults the input is returned as-is.
+        """
+        stale: dict[str, int] = {}
+        patched: dict[str, np.ndarray] = {}
+        for zone in traces.zone_slots:
+            fault = self.forecast_fault(zone, now_slot)
+            if fault is None:
+                continue
+            if fault.mode == "stale":
+                stale[zone] = fault.start_slot
+            else:  # dropout: hold-fill the missing window only
+                t = np.array(traces.zone_slots[zone], dtype=np.float64)
+                lo = max(fault.start_slot, 0)
+                hi = min(fault.end_slot, t.shape[0])
+                if lo < hi:
+                    t[lo:hi] = t[max(lo - 1, 0)]
+                patched[zone] = t
+        if not stale and not patched:
+            return traces
+        out = traces
+        if stale:
+            out = out.hold_last(stale)
+        if patched:
+            zone_slots = dict(out.zone_slots)
+            zone_slots.update(patched)
+            out = TraceSet(out.slot_seconds, zone_slots)
+        return out
+
+    # ------------------------------------------------------------- solver
+    def solver_fault(self, solve_index: int) -> SolverFault | None:
+        """The injected failure for the ``solve_index``-th solve, if any."""
+        for f in self.solver_faults:
+            if f.solve_index == solve_index:
+                return f
+        return None
+
+    # -------------------------------------------------------------- chaos
+    @classmethod
+    def chaos(
+        cls,
+        seed: int,
+        *,
+        n_slots: int,
+        links: Iterable[Sequence[str]] = (),
+        zones: Iterable[str] = (),
+        n_link_faults: int = 2,
+        n_forecast_faults: int = 1,
+        n_solver_faults: int = 1,
+        max_window_slots: int | None = None,
+        outage_prob: float = 0.5,
+    ) -> "FaultSchedule":
+        """A random-but-reproducible schedule derived purely from ``seed``.
+
+        Draws fault windows uniformly over ``[0, n_slots)`` (length capped
+        at ``max_window_slots``, default ``n_slots // 4``), makes each
+        link fault a hard outage with probability ``outage_prob`` (else a
+        uniform 0.2–0.8 degradation), and scatters solver faults over the
+        first ~dozen solve calls.  Same seed, same schedule — the chaos
+        CI tier runs on exactly this property.
+        """
+        rng = np.random.default_rng(seed)
+        max_win = max_window_slots or max(n_slots // 4, 1)
+        links = [_norm_link(l) for l in links]
+        zones = list(zones)
+
+        def window() -> tuple[int, int]:
+            start = int(rng.integers(0, max(n_slots - 1, 1)))
+            length = int(rng.integers(1, max_win + 1))
+            return start, min(start + length, n_slots)
+
+        link_faults = []
+        for _ in range(n_link_faults if links else 0):
+            start, end = window()
+            outage = bool(rng.random() < outage_prob)
+            factor = 0.0 if outage else float(rng.uniform(0.2, 0.8))
+            link_faults.append(LinkFault(
+                link=links[int(rng.integers(len(links)))],
+                start_slot=start, end_slot=end, factor=factor))
+        forecast_faults = []
+        for _ in range(n_forecast_faults if zones else 0):
+            start, end = window()
+            mode = _FORECAST_MODES[int(rng.integers(len(_FORECAST_MODES)))]
+            forecast_faults.append(ForecastFault(
+                zone=zones[int(rng.integers(len(zones)))],
+                start_slot=start, end_slot=end, mode=mode))
+        solver_faults = []
+        taken: set[int] = set()
+        for _ in range(n_solver_faults):
+            idx = int(rng.integers(0, 12))
+            if idx in taken:
+                continue
+            taken.add(idx)
+            mode = _SOLVER_MODES[int(rng.integers(len(_SOLVER_MODES)))]
+            solver_faults.append(SolverFault(
+                solve_index=idx, mode=mode,
+                rungs=int(rng.integers(1, 3))))
+        return cls(seed=seed, link_faults=tuple(link_faults),
+                   forecast_faults=tuple(forecast_faults),
+                   solver_faults=tuple(solver_faults))

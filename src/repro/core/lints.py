@@ -76,15 +76,21 @@ def build(
     return build_problem(requests, traces, capacity_gbps, power)
 
 
-def _solve(problem: ScheduleProblem, config: LinTSConfig = LinTSConfig()) -> Plan:
-    """Solve one problem (the implementation behind ``api.LinTSPolicy``)."""
+def _solve(problem: ScheduleProblem, config: LinTSConfig = LinTSConfig(),
+           *, x0_bps: np.ndarray | None = None) -> Plan:
+    """Solve one problem (the implementation behind ``api.LinTSPolicy``).
+
+    ``x0_bps`` warm-starts the pdhg backend from a throughput-space primal
+    guess (ignored by scipy); the degradation ladder uses it to retry a
+    failed solve from its sanitized last iterate.
+    """
     ok, why = workload_feasible(problem)
     if not ok:
         raise InfeasibleError(f"workload infeasible: {why}")
     if config.backend == "scipy":
         plan = solve_scipy(problem)
     elif config.backend == "pdhg":
-        plan = solve_pdhg(problem, config.pdhg)
+        plan = solve_pdhg(problem, config.pdhg, x0_bps=x0_bps)
     else:
         raise ValueError(f"unknown backend {config.backend!r}")
     if config.vertex_round:

@@ -162,6 +162,8 @@ def pdhg_solve(
     ub,
     b_row,
     b_col,
+    x0=None,
+    u0=None,
     *,
     max_iters: int = 60_000,
     check_every: int = 250,
@@ -180,6 +182,12 @@ def pdhg_solve(
     ``pallas_call`` holding the whole problem in VMEM; the "step" mode is
     the legacy per-iteration cell-update kernel; the jnp path is the
     oracle.  All three share the identical window/restart math.
+
+    ``x0`` (normalized primal, clipped into ``[0, ub]``) and ``u0``
+    (byte duals, clipped nonnegative) warm-start the restart loop — the
+    same hooks the spatial batch solver exposes; the degradation ladder
+    (:func:`repro.core.api.resilient_solve`) uses them to retry a failed
+    solve from its sanitized last iterate instead of from cold.
     """
     dtype = c.dtype
     n_jobs, n_slots = c.shape
@@ -244,8 +252,12 @@ def pdhg_solve(
         done = jnp.logical_and(pr < tol, gap < tol)
         return (x, u, v, rsb, csb, xa, ua, va, omega, it + check_every, done, pr, gap)
 
-    x0 = jnp.zeros((n_jobs, n_slots), dtype)
-    u0 = jnp.zeros((n_jobs,), dtype)
+    if x0 is None:
+        x0 = jnp.zeros((n_jobs, n_slots), dtype)
+    else:
+        x0 = jnp.clip(jnp.asarray(x0, dtype), 0.0, ub)
+    u0 = (jnp.zeros((n_jobs,), dtype) if u0 is None
+          else jnp.maximum(jnp.asarray(u0, dtype), 0.0))
     v0 = jnp.zeros((n_slots,), dtype)
     state = (
         x0, u0, v0, x0.sum(axis=-1), x0.sum(axis=-2),
@@ -260,10 +272,27 @@ def pdhg_solve(
                "dual_row": u, "dual_col": v, "omega": state[8]}
 
 
-def solve_pdhg(problem: ScheduleProblem, config: PDHGConfig = PDHGConfig()) -> Plan:
+def solve_pdhg(problem: ScheduleProblem, config: PDHGConfig = PDHGConfig(),
+               x0_bps: np.ndarray | None = None,
+               u0: np.ndarray | None = None) -> Plan:
+    """Solve one problem; ``x0_bps``/``u0`` optionally warm-start the loop.
+
+    ``x0_bps`` is a throughput-space primal guess (e.g. a previous plan or
+    a failed solve's sanitized iterate); it is normalized by the rate cap
+    and clipped into the feasible box before use.  Non-finite warm-start
+    cells are zeroed — a NaN'd iterate must never poison the retry.
+    """
     c, ub, b_row, b_col, _ = normalize_problem(problem, config.dtype)
+    x0 = None
+    if x0_bps is not None:
+        x0 = np.nan_to_num(
+            np.asarray(x0_bps, dtype=np.float64), nan=0.0,
+            posinf=0.0, neginf=0.0) / problem.rate_cap_bps
+    if u0 is not None:
+        u0 = np.nan_to_num(np.asarray(u0, dtype=np.float64), nan=0.0,
+                           posinf=0.0, neginf=0.0)
     x, diag = pdhg_solve(
-        c, ub, b_row, b_col,
+        c, ub, b_row, b_col, x0, u0,
         max_iters=config.max_iters,
         check_every=config.check_every,
         tol=config.tol,

@@ -139,10 +139,41 @@ def combine_path(
 
 @dataclasses.dataclass(frozen=True)
 class TraceSet:
-    """A bundle of per-zone slot-level traces over a common horizon."""
+    """A bundle of per-zone slot-level traces over a common horizon.
+
+    Construction validates every zone trace: NaN or negative intensities
+    are rejected *with the zone named* — a poisoned CSV cell used to flow
+    straight into the LP cost matrix and surface (if at all) as an opaque
+    solver failure.  All zones must cover the same horizon.
+    """
 
     slot_seconds: float
     zone_slots: Mapping[str, np.ndarray]  # zone -> (n_slots,) gCO2/kWh
+
+    def __post_init__(self):
+        if not self.zone_slots:
+            raise ValueError("TraceSet needs at least one zone trace")
+        lengths: dict[str, int] = {}
+        for zone, t in self.zone_slots.items():
+            t = np.asarray(t, dtype=np.float64)
+            if t.size == 0:
+                raise ValueError(f"zone {zone!r}: empty trace")
+            bad = np.isnan(t)
+            if bad.any():
+                raise ValueError(
+                    f"zone {zone!r}: NaN carbon intensity at slot "
+                    f"{int(np.flatnonzero(bad)[0])}")
+            bad = t < 0.0
+            if bad.any():
+                k = int(np.flatnonzero(bad)[0])
+                raise ValueError(
+                    f"zone {zone!r}: negative carbon intensity "
+                    f"{t[k]:.3g} at slot {k}")
+            lengths[zone] = t.size
+        if len(set(lengths.values())) > 1:
+            raise ValueError(
+                f"unequal trace lengths per zone: {lengths} — every zone "
+                "must cover the same horizon")
 
     @property
     def n_slots(self) -> int:
@@ -165,6 +196,30 @@ class TraceSet:
             for z, t in self.zone_slots.items()
         }
         return TraceSet(self.slot_seconds, noisy)
+
+    def hold_last(self, stale_from: Mapping[str, int]) -> "TraceSet":
+        """Staleness fill: freeze zones at their last fresh value.
+
+        ``stale_from`` maps zone -> first stale slot; from that slot to
+        the end of the horizon the zone's intensity is held at the value
+        of the last fresh slot (slot 0's value when the whole trace is
+        stale).  This is the fill the forecast-dropout fault
+        (:class:`repro.core.faults.ForecastFault`) applies before
+        replanning — the engine plans against held values rather than
+        silently trusting revisions that never arrived.
+        """
+        zone_slots = dict(self.zone_slots)
+        for zone, start in stale_from.items():
+            if zone not in zone_slots:
+                raise KeyError(
+                    f"hold_last: unknown zone {zone!r} (have "
+                    f"{sorted(zone_slots)})")
+            t = np.array(zone_slots[zone], dtype=np.float64)
+            s = int(np.clip(start, 0, t.shape[0]))
+            if s < t.shape[0]:
+                t[s:] = t[max(s - 1, 0)]
+            zone_slots[zone] = t
+        return TraceSet(self.slot_seconds, zone_slots)
 
 
 def make_trace_set(

@@ -38,6 +38,12 @@ class HeartbeatMonitor:
         ]
 
     def beat(self, worker: int, step_time_s: float) -> None:
+        if not 0 <= worker < self.n:
+            # A raw list index would wrap negatives silently and raise an
+            # anonymous IndexError past the end — name the contract instead.
+            raise ValueError(
+                f"heartbeat from worker {worker} outside the monitored "
+                f"range [0, {self.n})")
         self.last_seen[worker] = self.clock()
         self.steps[worker].append(step_time_s)
 
@@ -61,6 +67,10 @@ class HeartbeatMonitor:
         return [w for w, m in enumerate(meds) if m > self.factor * fleet]
 
     def status(self) -> list[WorkerStatus]:
+        """Per-worker :class:`WorkerStatus` snapshots (alive / straggler /
+        median step time).  This is the export surface the transfer
+        engine's ``LinkHealthMonitor`` builds per-link health on — one
+        monitored "worker" per WAN link."""
         meds = self._medians()
         dead = set(self.dead_workers())
         strag = set(self.stragglers())

@@ -15,6 +15,17 @@ Beyond-paper: reactive replanning — §IV-C notes congestion can break plans
 and leaves replanning to future work; we implement it (``replan_on_drift``):
 when executed progress falls behind plan by more than ``drift_tol``, the
 remaining bytes are rescheduled over the remaining horizon.
+
+Fault tolerance (DESIGN.md §12): the engine consumes a declarative
+:class:`~repro.core.faults.FaultSchedule` (link outages/degradation,
+forecast staleness/dropout, injected solver failures) and survives it —
+a :class:`LinkHealthMonitor` (per-link EWMA of achieved-vs-planned bps on
+the :class:`~repro.runtime.health.HeartbeatMonitor` pattern) detects sick
+links, transfers reroute over ``Topology.alternates``, failed replans
+retry with bounded exponential backoff, LinTS solves run through the
+:func:`~repro.core.api.resilient_solve` degradation ladder, and transfers
+whose residual SLA slack drops below the feasible-rate floor escalate to
+deadline-panic (full-rate, carbon-blind) execution.
 """
 
 from __future__ import annotations
@@ -26,12 +37,14 @@ from typing import Sequence
 import numpy as np
 
 from ..core import api, lints
+from ..core.faults import FaultSchedule, Link
 from ..core.plan import InfeasibleError
 from ..core.power import DEFAULT_POWER_MODEL, GBPS, PowerModel
 from ..core.problem import TransferRequest, build_problem
 from ..core.simulator import JOULES_PER_KWH
 from ..core.spatial import _links as _path_links
 from ..core.trace import TraceSet
+from ..runtime.health import HeartbeatMonitor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +77,100 @@ class Topology:
                 *self.alternates.get((src, dst), ()))
 
 
+@dataclasses.dataclass(frozen=True)
+class LinkStatus:
+    """One WAN link's health snapshot (see :class:`LinkHealthMonitor`)."""
+
+    link: Link
+    health: float        # EWMA of achieved/planned bps (1.0 = nominal)
+    alive: bool          # heartbeat seen within the timeout window
+    is_straggler: bool   # slowdown ≥ factor × fleet-median slowdown
+
+
+class LinkHealthMonitor:
+    """Per-link health from achieved-vs-planned throughput observations.
+
+    Built on the :class:`~repro.runtime.health.HeartbeatMonitor`
+    heartbeat/straggler pattern — one monitored "worker" per WAN link,
+    whose "step time" is the link's *slowdown* (planned/achieved bps), so
+    the straggler z-test flags degraded links exactly as it flags slow
+    workers.  On top of the heartbeat plumbing the monitor keeps a
+    per-link EWMA of the achieved/planned ratio; a link whose EWMA drops
+    below ``unhealthy_below`` is declared down and the engine reroutes
+    transfers off it (:meth:`TransferManager._recover`).
+
+    Health recovers through observations only — a dead link that no plan
+    routes traffic over stays flagged until probed, which is the honest
+    behavior for a monitor without out-of-band signals.
+    """
+
+    def __init__(self, links: Sequence[Link], *, alpha: float = 0.5,
+                 unhealthy_below: float = 0.3,
+                 straggler_factor: float = 4.0, clock=None):
+        self.links = tuple(dict.fromkeys(
+            tuple(sorted(l)) for l in links))
+        self._index = {l: i for i, l in enumerate(self.links)}
+        self.alpha = alpha
+        self.unhealthy_below = unhealthy_below
+        kwargs = {"clock": clock} if clock is not None else {}
+        self._hb = HeartbeatMonitor(
+            max(len(self.links), 1), straggler_factor=straggler_factor,
+            **kwargs)
+        self._ewma: list[float | None] = [None] * len(self.links)
+
+    def _idx(self, link: Sequence[str]) -> int:
+        key = tuple(sorted(link))
+        try:
+            return self._index[key]
+        except KeyError:
+            raise KeyError(
+                f"unmonitored link {key}; monitoring {list(self.links)}"
+            ) from None
+
+    def observe(self, link: Sequence[str], achieved_bps: float,
+                planned_bps: float) -> None:
+        """Record one slot's achieved vs planned bps on ``link``."""
+        if planned_bps <= 0.0:
+            return  # no planned traffic, no signal
+        i = self._idx(link)
+        ratio = max(float(achieved_bps) / float(planned_bps), 0.0)
+        prev = self._ewma[i]
+        self._ewma[i] = (ratio if prev is None
+                         else self.alpha * ratio + (1 - self.alpha) * prev)
+        # Heartbeat "step time" = slowdown; a hard outage beats with a
+        # large-but-finite slowdown so the straggler median stays sane.
+        slowdown = planned_bps / max(float(achieved_bps), 1e-6 * planned_bps)
+        self._hb.beat(i, slowdown)
+
+    def health(self, link: Sequence[str]) -> float:
+        """EWMA achieved/planned ratio (1.0 until first observed)."""
+        h = self._ewma[self._idx(link)]
+        return 1.0 if h is None else h
+
+    def unhealthy_links(self) -> set[Link]:
+        """Links currently considered down (EWMA below the threshold)."""
+        return {l for i, l in enumerate(self.links)
+                if self._ewma[i] is not None
+                and self._ewma[i] < self.unhealthy_below}
+
+    def degraded_links(self) -> set[Link]:
+        """Links the heartbeat straggler z-test flags as slow."""
+        return {self.links[w] for w in self._hb.stragglers()}
+
+    def status(self) -> dict[Link, LinkStatus]:
+        """Per-link snapshots, built on ``HeartbeatMonitor.status()``."""
+        worker_status = self._hb.status()
+        return {
+            l: LinkStatus(
+                link=l,
+                health=1.0 if self._ewma[i] is None else self._ewma[i],
+                alive=worker_status[i].alive,
+                is_straggler=worker_status[i].is_straggler,
+            )
+            for i, l in enumerate(self.links)
+        }
+
+
 @dataclasses.dataclass
 class ManagedTransfer:
     request_id: str
@@ -82,6 +189,12 @@ class ManagedTransfer:
     # All routes a spatial policy may split this transfer across
     # (primary first); non-spatial policies use ``path`` only.
     candidate_paths: tuple[tuple[str, ...], ...] = ()
+    # Fault-tolerance bookkeeping: how many times the transfer was moved
+    # off an unhealthy link, and whether it escalated to deadline-panic
+    # (full-rate, carbon-blind execution) because residual SLA slack fell
+    # below the feasible-rate floor.
+    reroutes: int = 0
+    panic: bool = False
 
 
 class TransferManager:
@@ -99,6 +212,15 @@ class TransferManager:
         # Keyword-only so the pre-facade positional signature (which ended
         # at drift_tol) keeps working unchanged.
         policy: str | api.Policy = "lints",
+        # Fault model + graceful degradation (DESIGN.md §12).  ``faults``
+        # injects deterministic link/forecast/solver faults; ``recovery``
+        # gates the reactive machinery (health-monitor rerouting, replan
+        # backoff, deadline panic) so benchmarks can compare against a
+        # fail-naive engine; ``resilient`` routes LinTS solves through the
+        # api.resilient_solve degradation ladder.
+        faults: FaultSchedule | None = None,
+        recovery: bool = True,
+        resilient: bool = True,
     ):
         self.topology = topology
         self.forecast = forecast
@@ -149,6 +271,23 @@ class TransferManager:
         self._path_ci: dict[tuple[str, ...], np.ndarray] = {}
         self._ids = itertools.count()
         self._needs_plan = False
+        # ---------------------------------------------- fault tolerance
+        self.faults = faults
+        self.recovery = recovery
+        self.resilient = resilient
+        all_links: list[Link] = []
+        for path in itertools.chain(
+                topology.routes.values(),
+                *(alts for alts in topology.alternates.values())):
+            all_links.extend(_path_links(path))
+        self.link_health = LinkHealthMonitor(all_links)
+        self._solve_calls = 0
+        self.solver_status_counts: dict[str, int] = {}
+        self.reroutes = 0
+        self.replan_failures = 0
+        self._replan_backoff = 1
+        self._replan_hold_until = 0
+        self._max_replan_backoff = 16
 
     def capacity_bps_free(self, j: int) -> float:
         """Unplanned capacity at slot j (for best-effort tail completion).
@@ -247,6 +386,56 @@ class TransferManager:
         return [t for t in self.transfers.values() if t.done_slot is None]
 
     # ----------------------------------------------------------------- plan
+    def _effective_forecast(self) -> TraceSet:
+        """The forecast a replan may trust *now*: zones with an active
+        staleness/dropout fault are ``hold_last``-filled instead of
+        pretending revisions arrived (see ``FaultSchedule.degrade_forecast``)."""
+        if self.faults is None:
+            return self.forecast
+        return self.faults.degrade_forecast(self.forecast, self.slot)
+
+    def _plan_problem(self, problem):
+        """One solve through the policy — via the degradation ladder for
+        LinTS policies when ``resilient`` — with per-call solver-fault
+        injection and ladder-rung accounting."""
+        fault = (self.faults.solver_fault(self._solve_calls)
+                 if self.faults is not None else None)
+        self._solve_calls += 1
+        if self.resilient and isinstance(self.policy, api.LinTSPolicy):
+            plan = api.resilient_solve(problem, self.policy.config,
+                                       inject=fault)
+            plan.meta.setdefault("policy", self.policy.name)
+        else:
+            plan = self.policy.plan(problem)
+        status = plan.meta.get("solver_status")
+        if status is not None:
+            self.solver_status_counts[status] = (
+                self.solver_status_counts.get(status, 0) + 1)
+        return plan
+
+    def _try_replan(self) -> bool:
+        """Replan with bounded exponential backoff on failure.
+
+        A replan that raises :class:`InfeasibleError` (the workload
+        genuinely can't meet its SLAs from here) is retried no sooner
+        than ``backoff`` slots later, doubling up to
+        ``_max_replan_backoff`` — the engine keeps executing the stale
+        plan meanwhile and SLA accounting flags what's lost, instead of
+        hammering the solver every tick of an incident.
+        """
+        if self.slot < self._replan_hold_until:
+            return False
+        try:
+            self.replan()
+        except InfeasibleError:
+            self.replan_failures += 1
+            self._replan_hold_until = self.slot + self._replan_backoff
+            self._replan_backoff = min(2 * self._replan_backoff,
+                                       self._max_replan_backoff)
+            return False
+        self._replan_backoff = 1
+        return True
+
     def replan(self) -> None:
         # Transfers already past their deadline stay violated; replanning
         # only covers those that can still meet their SLA.
@@ -258,8 +447,9 @@ class TransferManager:
         self._needs_plan = False
         if not live:
             return
+        forecast = self._effective_forecast()
         if isinstance(self.policy, api.SpatialPolicy):
-            self._replan_spatial(live)
+            self._replan_spatial(live, forecast)
             return
         reqs = [
             TransferRequest(
@@ -271,9 +461,9 @@ class TransferManager:
             )
             for t in live
         ]
-        problem = build_problem(reqs, self.forecast, self.capacity_gbps,
+        problem = build_problem(reqs, forecast, self.capacity_gbps,
                                 self.power)
-        plan = self.policy.plan(problem)
+        plan = self._plan_problem(problem)
         self._plan_last_slot = {}
         for i, t in enumerate(live):
             self._plan_rho[t.request_id] = plan.rho_bps[i]
@@ -281,7 +471,8 @@ class TransferManager:
             self._plan_last_slot[t.request_id] = int(nz[-1]) if nz.size else -1
         self._plan_matrix = None
 
-    def _replan_spatial(self, live: list[ManagedTransfer]) -> None:
+    def _replan_spatial(self, live: list[ManagedTransfer],
+                        forecast: TraceSet | None = None) -> None:
         """Joint route+time replanning over each transfer's candidate paths.
 
         Every WAN link gets ``capacity_gbps`` (the manager's model), so a
@@ -305,7 +496,8 @@ class TransferManager:
             for t in live
         ]
         problem = _spatial.build_spatial_problem(
-            reqs, self.forecast, self.capacity_gbps, self.power)
+            reqs, forecast if forecast is not None else self.forecast,
+            self.capacity_gbps, self.power)
         plan = self.policy.plan_spatial([problem])[0]
         self._plan_last_slot = {}
         for i, t in enumerate(live):
@@ -336,6 +528,7 @@ class TransferManager:
         best_effort_link: dict[tuple[str, str], float] = {}
         free_bps = self.capacity_bps_free(j)
         best_effort_bps = 0.0
+        rate_cap_bps = self.power.rate_cap_gbps(self.capacity_gbps) * GBPS
         for t in self.pending():
             planned = self._plan_rho.get(t.request_id)
             rho = (
@@ -344,27 +537,37 @@ class TransferManager:
                 else 0.0
             )
             best_effort = False
-            past_plan = j > self._plan_last_slot.get(t.request_id, -1)
-            if rho <= 0.0 and past_plan and t.remaining_bits > 1.0 \
-                    and j < t.deadline_slot:
-                # Congestion left residual bits beyond the planned slots.
-                substantial = t.remaining_bits > self.drift_tol * t.size_gb * 8e9
-                if self.replan_on_drift and substantial and congestion >= 0.7:
-                    drifted = True   # re-optimize the tail for carbon
-                    continue
-                # Slivers (or congested links) finish best-effort at full
-                # rate: replanning them costs ~P_min per extra active slot.
-                rate_cap = self.power.rate_cap_gbps(self.capacity_gbps) * GBPS
-                if link_reserved is not None:
-                    cap = self.capacity_gbps * GBPS
-                    head = min(
-                        cap - link_reserved.get(l, 0.0)
-                        - best_effort_link.get(l, 0.0)
-                        for l in _path_links(t.path))
-                    rho = min(rate_cap, max(head, 0.0))
-                else:
-                    rho = min(rate_cap, free_bps - best_effort_bps)
+            if t.panic and t.remaining_bits > 1.0 and j < t.deadline_slot:
+                # Deadline panic: residual slack fell below the feasible-rate
+                # floor, so the transfer runs full-rate and carbon-blind on
+                # its (possibly rerouted) primary path, riding the
+                # best-effort accounting so parallel tails don't stack on
+                # top of it.
+                rho = rate_cap_bps
                 best_effort = True
+            else:
+                past_plan = j > self._plan_last_slot.get(t.request_id, -1)
+                if rho <= 0.0 and past_plan and t.remaining_bits > 1.0 \
+                        and j < t.deadline_slot:
+                    # Congestion left residual bits beyond the planned slots.
+                    substantial = (t.remaining_bits
+                                   > self.drift_tol * t.size_gb * 8e9)
+                    if self.replan_on_drift and substantial \
+                            and congestion >= 0.7:
+                        drifted = True   # re-optimize the tail for carbon
+                        continue
+                    # Slivers (or congested links) finish best-effort at full
+                    # rate: replanning them costs ~P_min per extra active slot.
+                    if link_reserved is not None:
+                        cap = self.capacity_gbps * GBPS
+                        head = min(
+                            cap - link_reserved.get(l, 0.0)
+                            - best_effort_link.get(l, 0.0)
+                            for l in _path_links(t.path))
+                        rho = min(rate_cap_bps, max(head, 0.0))
+                    else:
+                        rho = min(rate_cap_bps, free_bps - best_effort_bps)
+                    best_effort = True
             if rho <= 0.0:
                 if j >= t.deadline_slot and t.remaining_bits > 1.0:
                     t.violated = True
@@ -376,17 +579,29 @@ class TransferManager:
                             best_effort_link.get(l, 0.0) + rho)
                 else:
                     best_effort_bps += rho
-            achieved = rho * congestion
-            moved = min(achieved * dt, t.remaining_bits)
             # Emissions: threads for the *achieved* throughput, actual trace.
             # A spatial plan splits the slot's rate across candidate paths;
             # each split charges power on its own path's intensity
-            # (best-effort tail traffic rides the primary path).
+            # (best-effort tail traffic rides the primary path).  Fault
+            # factors (link outage/degradation windows) multiply into the
+            # achieved rate per path; the planned baseline fed to the health
+            # monitor keeps the global congestion factor, so health reflects
+            # link-specific anomalies, not fleet-wide congestion.
             split = None if best_effort else \
                 self._plan_path_rho.get(t.request_id)
             if split is not None:
+                achieved = 0.0
                 for pth, rho_p in zip(split[0], split[1][:, j]):
-                    achieved_p = float(rho_p) * congestion
+                    rho_p = float(rho_p)
+                    if rho_p <= 0.0:
+                        continue
+                    expected_p = rho_p * congestion
+                    factor = (self.faults.path_factor(pth, j)
+                              if self.faults is not None else 1.0)
+                    achieved_p = expected_p * factor
+                    for link in _path_links(pth):
+                        self.link_health.observe(link, achieved_p, expected_p)
+                    achieved += achieved_p
                     if achieved_p <= 0.0:
                         continue
                     theta = float(self.power.threads(achieved_p / GBPS,
@@ -395,29 +610,89 @@ class TransferManager:
                     ci = float(self._actual_path_intensity(pth)[j])
                     t.emissions_g += p_w * dt / JOULES_PER_KWH * ci
             else:
-                theta = float(self.power.threads(achieved / GBPS,
-                                                 self.capacity_gbps))
-                p_w = float(self.power.power_w(np.float64(theta)))
-                ci = float(self._actual_path_intensity(t.path)[j])
-                t.emissions_g += p_w * dt / JOULES_PER_KWH * ci
+                expected = rho * congestion
+                factor = (self.faults.path_factor(t.path, j)
+                          if self.faults is not None else 1.0)
+                achieved = expected * factor
+                for link in _path_links(t.path):
+                    self.link_health.observe(link, achieved, expected)
+                if achieved > 0.0:
+                    theta = float(self.power.threads(achieved / GBPS,
+                                                     self.capacity_gbps))
+                    p_w = float(self.power.power_w(np.float64(theta)))
+                    ci = float(self._actual_path_intensity(t.path)[j])
+                    t.emissions_g += p_w * dt / JOULES_PER_KWH * ci
+            moved = min(achieved * dt, t.remaining_bits)
             t.remaining_bits -= moved
             if t.remaining_bits <= 1.0:
                 t.done_slot = j
             elif achieved < rho * (1.0 - self.drift_tol):
                 drifted = True
         self.slot += 1
+        recover_replan = self._maybe_recover() if self.recovery else False
         # Replan only once the link has (mostly) recovered: during a uniform
         # congestion incident shifting work to other still-congested slots
         # just adds P_min-hours — grind through, then re-optimize the tail
-        # (this is §IV-C's "monitoring service" in minimal form).
-        if drifted and self.replan_on_drift and congestion >= 0.7:
-            try:
-                self.replan()
-            except InfeasibleError:
-                pass  # keep executing the stale plan; SLA tracking will flag
+        # (this is §IV-C's "monitoring service" in minimal form).  A
+        # recovery action (reroute / panic) replans regardless of the
+        # congestion gate: an outage is not congestion, and the new route
+        # needs a schedule.
+        if recover_replan and self.replan_on_drift:
+            self._try_replan()
+        elif drifted and self.replan_on_drift and congestion >= 0.7:
+            if self.recovery:
+                self._try_replan()
+            else:
+                try:
+                    self.replan()
+                except InfeasibleError:
+                    pass  # keep executing stale plan; SLA tracking will flag
         for t in self.pending():
             if self.slot >= t.deadline_slot and t.remaining_bits > 1.0:
                 t.violated = True
+
+    # ------------------------------------------------------------- recovery
+    #: Fraction of the feasible-rate floor (the power model's rate cap) at
+    #: which a transfer's required catch-up rate trips deadline panic.
+    PANIC_FRAC = 0.95
+
+    def _maybe_recover(self) -> bool:
+        """Reactive fault handling after a tick: reroute transfers off
+        unhealthy links (over ``Topology.alternates``) and escalate
+        transfers whose residual SLA slack dropped below the feasible-rate
+        floor to deadline panic.  Returns True when a replan is warranted.
+        """
+        bad = self.link_health.unhealthy_links()
+        dt = self.forecast.slot_seconds
+        rate_cap_bps = self.power.rate_cap_gbps(self.capacity_gbps) * GBPS
+        spatial = isinstance(self.policy, api.SpatialPolicy)
+        need_replan = False
+        for t in self.pending():
+            if t.remaining_bits <= 1.0 or t.deadline_slot <= self.slot:
+                continue
+            # Reroute: first candidate path free of unhealthy links.  A
+            # spatial policy already splits across the candidates inside its
+            # LP, so single-path rerouting only applies to the others.
+            if bad and not spatial \
+                    and set(_path_links(t.path)) & bad:
+                for cand in t.candidate_paths or (t.path,):
+                    if set(_path_links(cand)) & bad:
+                        continue
+                    if cand != t.path:
+                        t.path = cand
+                        t.reroutes += 1
+                        self.reroutes += 1
+                        need_replan = True
+                    break
+            # Deadline panic: the catch-up rate the SLA now requires is at
+            # (or beyond) the feasible-rate floor — carbon-aware scheduling
+            # has no slack left to optimize, so execution goes full-rate.
+            slots_left = t.deadline_slot - self.slot
+            needed_bps = t.remaining_bits / max(slots_left * dt, 1e-9)
+            if not t.panic and needed_bps >= self.PANIC_FRAC * rate_cap_bps:
+                t.panic = True
+                need_replan = True
+        return need_replan
 
     def run_until_idle(self, max_slots: int | None = None,
                        congestion_fn=None) -> None:
@@ -443,6 +718,12 @@ class TransferManager:
                 float(np.mean([t.done_slot - t.submitted_slot for t in done]))
                 if done else float("nan")
             ),
+            # Fault-tolerance telemetry (DESIGN.md §12): zeros/empty when no
+            # fault ever fired, so the report shape is scenario-independent.
+            "reroutes": self.reroutes,
+            "panics": sum(t.panic for t in self.transfers.values()),
+            "replan_failures": self.replan_failures,
+            "solver_status": dict(self.solver_status_counts),
         }
 
 

@@ -1,0 +1,324 @@
+"""Fault model, solver degradation ladder, link health, chaos determinism.
+
+DESIGN.md §12: every fault is deterministic given ``FaultSchedule(seed=...)``,
+an injected solver failure must never surface an unconverged plan, and the
+online engine must reroute/replan through an injected outage.  The chaos
+reproducibility test honours ``REPRO_CHAOS_SEED`` (the CI chaos tier pins
+it) and defaults to 0.
+"""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import api, lints
+from repro.core.faults import (
+    FaultSchedule,
+    ForecastFault,
+    LinkFault,
+    SolverFault,
+    path_links,
+)
+from repro.core.plan import InfeasibleError
+from repro.core.problem import TransferRequest, build_problem
+from repro.core.trace import TraceSet, make_trace_set
+from repro.transfer import Datacenter, Topology, TransferManager
+from repro.transfer.manager import LinkHealthMonitor
+
+ZONES = ("US-NM", "US-WY", "US-SD", "US-CO")
+PRIMARY = ("US-NM", "US-WY", "US-SD")
+ALTERNATE = ("US-NM", "US-CO", "US-SD")
+
+CHAOS_SEED = int(os.environ.get("REPRO_CHAOS_SEED", "0"))
+
+
+def _traces(hours: int = 12, seed: int = 0) -> TraceSet:
+    return make_trace_set(ZONES, hours=hours, slot_seconds=900.0, seed=seed)
+
+
+def _problem(size_gb: float = 40.0, deadline: int = 40):
+    reqs = [TransferRequest(size_gb=size_gb, deadline_slots=deadline,
+                            offset_slots=0, path=PRIMARY, request_id="r0")]
+    return build_problem(reqs, _traces(), 1.0)
+
+
+def _manager(faults=None, *, recovery=True, resilient=True,
+             policy="lints", seed=0):
+    topo = Topology(
+        datacenters=(Datacenter("a", "US-NM"), Datacenter("b", "US-SD")),
+        routes={("a", "b"): PRIMARY},
+        alternates={("a", "b"): (ALTERNATE,)},
+    )
+    config = (lints.LinTSConfig(backend="scipy")
+              if policy == "lints" else None)
+    return TransferManager(
+        topo, _traces(seed=seed), capacity_gbps=1.0,
+        policy=policy, config=config,
+        faults=faults, recovery=recovery, resilient=resilient,
+    )
+
+
+# ------------------------------------------------------------ fault model
+
+def test_link_fault_windows_and_path_factor():
+    fs = FaultSchedule(seed=1, link_faults=(
+        LinkFault(("US-WY", "US-NM"), 10, 20, factor=0.0),
+        LinkFault(("US-WY", "US-SD"), 15, 25, factor=0.5),
+    ))
+    # link key is the sorted pair, either order queries the same fault
+    assert fs.link_factor(("US-NM", "US-WY"), 10) == 0.0
+    assert fs.link_factor(("US-WY", "US-NM"), 19) == 0.0
+    assert fs.link_factor(("US-NM", "US-WY"), 20) == 1.0  # half-open window
+    # path factor is the min over traversed links
+    assert fs.path_factor(PRIMARY, 17) == 0.0
+    assert fs.path_factor(PRIMARY, 22) == 0.5
+    assert fs.path_factor(ALTERNATE, 17) == 1.0
+    assert fs.faulty_links(17) == {
+        ("US-NM", "US-WY"): 0.0, ("US-SD", "US-WY"): 0.5}
+
+
+def test_fault_validation():
+    with pytest.raises(ValueError, match="empty window"):
+        LinkFault(("a", "b"), 5, 5)
+    with pytest.raises(ValueError, match="outside"):
+        LinkFault(("a", "b"), 0, 1, factor=1.5)
+    with pytest.raises(ValueError, match="unknown mode"):
+        ForecastFault("z", 0, 1, mode="gone")
+    with pytest.raises(ValueError, match="unknown mode"):
+        SolverFault(0, mode="explode")
+    with pytest.raises(ValueError, match="two solver faults"):
+        FaultSchedule(solver_faults=(SolverFault(0), SolverFault(0)))
+
+
+def test_path_links_sorted_pairs():
+    assert path_links(("c", "a", "b")) == [("a", "c"), ("a", "b")]
+
+
+def test_degrade_forecast_stale_freezes_rest_of_horizon():
+    traces = _traces()
+    fs = FaultSchedule(forecast_faults=(
+        ForecastFault("US-WY", 8, 40, mode="stale"),))
+    degraded = fs.degrade_forecast(traces, now_slot=10)
+    wy = degraded.zone_slots["US-WY"]
+    orig = traces.zone_slots["US-WY"]
+    np.testing.assert_array_equal(wy[:8], orig[:8])
+    assert (wy[8:] == orig[7]).all()          # frozen at last fresh value
+    # other zones untouched; inactive fault is a no-op
+    np.testing.assert_array_equal(
+        degraded.zone_slots["US-NM"], traces.zone_slots["US-NM"])
+    assert fs.degrade_forecast(traces, now_slot=50) is traces
+
+
+def test_degrade_forecast_dropout_fills_window_only():
+    traces = _traces()
+    fs = FaultSchedule(forecast_faults=(
+        ForecastFault("US-WY", 8, 12, mode="dropout"),))
+    degraded = fs.degrade_forecast(traces, now_slot=9)
+    wy = degraded.zone_slots["US-WY"]
+    orig = traces.zone_slots["US-WY"]
+    assert (wy[8:12] == orig[7]).all()        # window hold-filled
+    np.testing.assert_array_equal(wy[12:], orig[12:])  # fresh after window
+
+
+def test_chaos_schedule_deterministic():
+    links = path_links(PRIMARY) + path_links(ALTERNATE)
+    kw = dict(n_slots=48, links=links, zones=ZONES)
+    a = FaultSchedule.chaos(CHAOS_SEED, **kw)
+    b = FaultSchedule.chaos(CHAOS_SEED, **kw)
+    assert a == b
+    assert a != FaultSchedule.chaos(CHAOS_SEED + 1, **kw)
+
+
+# ------------------------------------------------- TraceSet validation
+
+def test_traceset_rejects_nan_naming_zone():
+    bad = np.ones(8); bad[3] = np.nan
+    with pytest.raises(ValueError, match="US-WY.*slot 3"):
+        TraceSet(900.0, {"US-NM": np.ones(8), "US-WY": bad})
+
+
+def test_traceset_rejects_negative_naming_zone():
+    bad = np.ones(8); bad[5] = -2.0
+    with pytest.raises(ValueError, match="US-NM"):
+        TraceSet(900.0, {"US-NM": bad})
+
+
+def test_traceset_hold_last():
+    ts = TraceSet(900.0, {"z": np.arange(1.0, 9.0)})
+    held = ts.hold_last({"z": 4})
+    np.testing.assert_array_equal(held.zone_slots["z"],
+                                  [1, 2, 3, 4, 4, 4, 4, 4])
+    # original is untouched; unknown zone is a named error
+    np.testing.assert_array_equal(ts.zone_slots["z"], np.arange(1.0, 9.0))
+    with pytest.raises(KeyError, match="nowhere"):
+        ts.hold_last({"nowhere": 0})
+
+
+# ------------------------------------------------- degradation ladder
+
+def test_resilient_solve_clean_stamps_backend_rung():
+    plan = api.resilient_solve(_problem(),
+                               lints.LinTSConfig(backend="scipy"))
+    assert plan.meta["solver_status"] == "scipy"
+    assert api.plan_failure(plan) is None
+
+
+def test_resilient_solve_nan_injection_lands_retry():
+    plan = api.resilient_solve(_problem(), inject="nan")
+    assert plan.meta["solver_status"] == "pdhg-retry"
+    assert api.plan_failure(plan) is None
+    assert plan.meta["solver_ladder"][0]["rung"] == "pdhg"
+
+
+def test_resilient_solve_no_converge_never_ships_unconverged():
+    """The silently-broken-plan case: a zero-iteration-budget solve returns
+    a feasible-looking but unconverged plan — the ladder must catch it via
+    the converged flag and escalate."""
+    plan = api.resilient_solve(
+        _problem(), inject=SolverFault(0, mode="no_converge", rungs=1))
+    assert plan.meta["solver_status"] in ("pdhg-retry", "scipy", "heuristic")
+    assert api.plan_failure(plan) is None
+    assert plan.meta.get("converged") is not False
+
+
+def test_resilient_solve_scipy_rung_objective_parity():
+    prob = _problem()
+    plan = api.resilient_solve(
+        prob, inject=SolverFault(0, mode="nan", rungs=2))
+    assert plan.meta["solver_status"] == "scipy"
+    oracle = lints._solve(prob, lints.LinTSConfig(backend="scipy"))
+    obj, ref = plan.objective(prob), oracle.objective(prob)
+    assert abs(obj - ref) <= 1e-6 * max(abs(ref), 1.0)
+
+
+def test_resilient_solve_heuristic_last_resort():
+    plan = api.resilient_solve(
+        _problem(), inject=SolverFault(0, mode="nan", rungs=3))
+    assert plan.meta["solver_status"] == "heuristic"
+    assert len(plan.meta["solver_ladder"]) == 3
+    # the heuristic plan still delivers the bytes
+    prob = _problem()
+    assert plan.bits_delivered(prob)[0] >= prob.size_bits[0] * (1 - 1e-9)
+
+
+def test_resilient_solve_every_rung_in_ladder_rungs():
+    for inject in (None, "nan",
+                   SolverFault(0, "no_converge", rungs=2),
+                   SolverFault(0, "nan", rungs=3)):
+        plan = api.resilient_solve(_problem(), inject=inject)
+        assert plan.meta["solver_status"] in api.LADDER_RUNGS
+
+
+def test_resilient_solve_infeasible_raises_before_ladder():
+    reqs = [TransferRequest(size_gb=1e6, deadline_slots=4, offset_slots=0,
+                            path=PRIMARY, request_id="huge")]
+    prob = build_problem(reqs, _traces(), 1.0)
+    with pytest.raises(InfeasibleError):
+        api.resilient_solve(prob)
+
+
+# ------------------------------------------------- fail-closed plan_batch
+
+def test_plan_batch_fails_closed_on_unconverged(monkeypatch):
+    """An iteration-starved batched solve must not ship unconverged plans:
+    affected fleet members re-enter the ladder and a once-per-process
+    warning names their batch indices."""
+    monkeypatch.setattr(api, "_FAIL_CLOSED_WARNED", False)
+    cfg = lints.LinTSConfig(backend="pdhg", pdhg=dataclasses.replace(
+        lints.LinTSConfig().pdhg, max_iters=100, check_every=50))
+    policy = api.get_policy("lints", config=cfg)
+    problems = [_problem(size_gb=s, deadline=40) for s in (35.0, 45.0)]
+    with pytest.warns(RuntimeWarning, match="batch indices"):
+        plans = policy.plan_batch(problems)
+    for plan in plans:
+        assert api.plan_failure(plan) is None
+        assert plan.meta["solver_status"] in api.LADDER_RUNGS
+    # second offending batch stays quiet (warning is once per process)
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error", RuntimeWarning)
+        policy.plan_batch(problems)
+
+
+# ------------------------------------------------- link health monitor
+
+def test_link_health_ewma_and_unhealthy():
+    links = path_links(PRIMARY)
+    mon = LinkHealthMonitor(links, alpha=0.5, unhealthy_below=0.3)
+    link = links[0]
+    assert mon.health(link) == 1.0            # unobserved = presumed healthy
+    mon.observe(link, achieved_bps=0.0, planned_bps=1e9)
+    assert mon.health(link) == 0.0            # first observation sets EWMA
+    assert mon.unhealthy_links() == {link}
+    for _ in range(6):
+        mon.observe(link, achieved_bps=1e9, planned_bps=1e9)
+    assert mon.health(link) > 0.9             # recovers through observations
+    assert mon.unhealthy_links() == set()
+
+
+def test_link_health_unknown_link_named():
+    mon = LinkHealthMonitor(path_links(PRIMARY))
+    with pytest.raises(KeyError, match="unmonitored link"):
+        mon.observe(("US-NM", "US-TX"), 1.0, 1.0)
+
+
+def test_link_health_status_built_on_heartbeat():
+    mon = LinkHealthMonitor(path_links(PRIMARY) + path_links(ALTERNATE))
+    mon.observe(path_links(PRIMARY)[0], 5e8, 1e9)
+    status = mon.status()
+    assert set(status) == set(mon.links)
+    st = status[path_links(PRIMARY)[0]]
+    assert st.alive and st.health == 0.5
+
+
+def test_heartbeat_beat_guards_worker_range():
+    from repro.runtime.health import HeartbeatMonitor
+
+    hb = HeartbeatMonitor(3)
+    hb.beat(2, 1.0)
+    with pytest.raises(ValueError, match="outside the monitored range"):
+        hb.beat(3, 1.0)
+    with pytest.raises(ValueError, match="outside the monitored range"):
+        hb.beat(-1, 1.0)
+
+
+# ------------------------------------------------- engine under faults
+
+def test_engine_solver_fault_never_ships_unconverged():
+    fs = FaultSchedule(seed=3, solver_faults=(SolverFault(0, "nan"),))
+    tm = _manager(fs)
+    tm.enqueue(600.0, "a", "b", 40)
+    tm.run_until_idle()
+    rep = tm.report()
+    assert rep["sla_violations"] == 0
+    assert rep["solver_status"]                      # every solve stamped
+    assert set(rep["solver_status"]) <= set(api.LADDER_RUNGS)
+
+
+def test_engine_chaos_run_is_reproducible():
+    """Same FaultSchedule seed, same engine trajectory — the chaos CI tier
+    pins REPRO_CHAOS_SEED and relies on exactly this."""
+    links = path_links(PRIMARY) + path_links(ALTERNATE)
+    fs = FaultSchedule.chaos(CHAOS_SEED, n_slots=48, links=links,
+                             zones=ZONES)
+
+    def run():
+        tm = _manager(fs)
+        tm.enqueue(600.0, "a", "b", 40)
+        tm.enqueue(100.0, "a", "b", 30)
+        tm.run_until_idle()
+        return tm.report()
+
+    assert run() == run()
+
+
+def test_forecast_fault_degrades_replanning_input():
+    fs = FaultSchedule(seed=5, forecast_faults=(
+        ForecastFault("US-WY", 2, 48, mode="stale"),))
+    tm = _manager(fs)
+    tm.slot = 10
+    degraded = tm._effective_forecast()
+    assert (degraded.zone_slots["US-WY"][2:]
+            == tm.forecast.zone_slots["US-WY"][1]).all()

@@ -260,6 +260,109 @@ def test_policy_plans_differ_between_lints_and_edf():
     assert not np.array_equal(plans["lints"], plans["edf"])
 
 
+# ------------------------------------------- outage recovery (DESIGN.md §12)
+
+FAULT_ZONES = ("US-NM", "US-WY", "US-SD", "US-CO")
+FAULT_PRIMARY = ("US-NM", "US-WY", "US-SD")
+FAULT_ALTERNATE = ("US-NM", "US-CO", "US-SD")
+
+
+def _fault_manager(faults=None, *, recovery=True, resilient=True):
+    from repro.core.faults import FaultSchedule  # noqa: F401 (type of faults)
+
+    traces = make_trace_set(FAULT_ZONES, hours=12, slot_seconds=900.0, seed=0)
+    topo = Topology(
+        datacenters=(Datacenter("a", "US-NM"), Datacenter("b", "US-SD")),
+        routes={("a", "b"): FAULT_PRIMARY},
+        alternates={("a", "b"): (FAULT_ALTERNATE,)},
+    )
+    return TransferManager(topo, traces, capacity_gbps=1.0,
+                           config=lints.LinTSConfig(backend="scipy"),
+                           faults=faults, recovery=recovery,
+                           resilient=resilient)
+
+
+def _outage_at_half_progress():
+    """Outage on the primary link from the clean plan's 50%-progress slot
+    through the end of the horizon (the ISSUE 6 acceptance scenario)."""
+    from repro.core.faults import FaultSchedule, LinkFault
+
+    tm = _fault_manager()
+    rid = tm.enqueue(size_gb=600.0, src="a", dst="b", deadline_slots=40)
+    tm.replan()
+    cum = np.cumsum(tm._plan_rho[rid]) * tm.forecast.slot_seconds
+    half = int(np.searchsorted(cum, 0.5 * 600.0 * 8e9)) + 1
+    return FaultSchedule(seed=7, link_faults=(
+        LinkFault(("US-NM", "US-WY"), half, tm.forecast.n_slots,
+                  factor=0.0),))
+
+
+def test_midtransfer_outage_reroutes_and_meets_sla():
+    """Primary link dies at ~50% progress; an alternate-path feasible
+    schedule exists, so the engine must detect the outage, fail over and
+    still meet the SLA."""
+    fs = _outage_at_half_progress()
+    tm = _fault_manager(fs)
+    rid = tm.enqueue(size_gb=600.0, src="a", dst="b", deadline_slots=40)
+    tm.run_until_idle()
+    t = tm.transfers[rid]
+    rep = tm.report()
+    assert t.path == FAULT_ALTERNATE          # failed over
+    assert t.reroutes >= 1 and rep["reroutes"] >= 1
+    assert t.done_slot is not None and not t.violated
+    assert rep["sla_violations"] == 0
+
+
+def test_midtransfer_outage_without_recovery_records_miss():
+    """Ladder/recovery disabled: the same outage must be *recorded* as an
+    SLA miss, not silently absorbed."""
+    fs = _outage_at_half_progress()
+    tm = _fault_manager(fs, recovery=False, resilient=False)
+    rid = tm.enqueue(size_gb=600.0, src="a", dst="b", deadline_slots=40)
+    tm.run_until_idle()
+    t = tm.transfers[rid]
+    assert t.path == FAULT_PRIMARY            # never moved
+    assert t.violated
+    assert tm.report()["sla_violations"] >= 1
+    assert tm.report()["reroutes"] == 0
+
+
+def test_alternate_path_failover_probes_then_stays():
+    """With BOTH candidate paths down: the monitor has no out-of-band
+    signal, so the engine fails over to the (unprobed, presumed-healthy)
+    alternate, discovers it dead through observations, and then stays put
+    — exactly one reroute, and the loss is recorded, not hidden."""
+    from repro.core.faults import FaultSchedule, LinkFault
+
+    n_slots = 48
+    both = FaultSchedule(seed=9, link_faults=(
+        LinkFault(("US-NM", "US-WY"), 0, n_slots, factor=0.0),
+        LinkFault(("US-NM", "US-CO"), 0, n_slots, factor=0.0),
+    ))
+    tm = _fault_manager(both)
+    rid = tm.enqueue(size_gb=100.0, src="a", dst="b", deadline_slots=20)
+    tm.run_until_idle(max_slots=25)
+    t = tm.transfers[rid]
+    assert t.path == FAULT_ALTERNATE          # probed the alternate...
+    assert t.reroutes == 1                    # ...and had nowhere else to go
+    assert t.violated                         # loss is recorded, not hidden
+
+
+def test_replan_on_drift_disabled_skips_recovery_replans():
+    """replan_on_drift=False keeps the engine static even under recovery:
+    reroutes may mark the transfer but no replan reshapes the plan."""
+    fs = _outage_at_half_progress()
+    tm = _fault_manager(fs)
+    tm.replan_on_drift = False
+    rid = tm.enqueue(size_gb=600.0, src="a", dst="b", deadline_slots=40)
+    tm.run_until_idle()
+    # Without replanning the rerouted path never gets a schedule, so the
+    # transfer can only finish via the best-effort tail — either way the
+    # engine must not crash and accounting must stay consistent.
+    t = tm.transfers[rid]
+    assert (t.done_slot is not None) or t.violated
+
+
 # ------------------------------------------------- deadline truncation (SLA)
 
 def test_enqueue_records_deadline_truncation():
