@@ -56,9 +56,11 @@ def run(n_transfers: int = 12, quiet: bool = False) -> list[str]:
 
     def scenario(replan: bool, policy):
         tm = _manager(replan, policy=policy)
-        for i in range(n_transfers):
-            tm.enqueue(float(sizes[i]), "us-west-2", "us-east-1",
-                       int(deadlines[i]))
+        # One batch, one arrival event, one initial solve.
+        tm.enqueue_many([
+            (float(sizes[i]), "us-west-2", "us-east-1", int(deadlines[i]))
+            for i in range(n_transfers)
+        ])
         tm.run_until_idle(congestion_fn=_congestion)
         return tm.report()
 

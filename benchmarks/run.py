@@ -19,6 +19,7 @@ from . import (
     faults,
     fleet_e2e,
     montecarlo,
+    online,
     paper_tables,
     power_model,
     roofline,
@@ -35,6 +36,7 @@ SUITES = {
     "montecarlo": lambda fast: montecarlo.run(n_jobs=30 if fast else 60),
     "solver_scaling": lambda fast: solver_scaling.run(),
     "fleet_e2e": lambda fast: fleet_e2e.run(fast=fast),
+    "online": lambda fast: online.run(fast=fast),
     "spatial_scaling": lambda fast: spatial_scaling.run(fast=fast),
     "roofline": lambda fast: roofline.run(),
 }

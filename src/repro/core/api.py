@@ -48,6 +48,7 @@ from .trace import TraceSet
 
 __all__ = [
     "Policy",
+    "WarmStart",
     "LinTSPolicy",
     "HeuristicPolicy",
     "SpatialPolicy",
@@ -84,6 +85,12 @@ class Policy(Protocol):
         """Schedule a fleet of problems (shapes may differ per problem)."""
         ...
 
+    # Optional hook (NOT a required protocol member — minimal third-party
+    # policies stay valid): ``plan_incremental(problem, warm=None, *,
+    # inject=None, resilient=True)`` replans a revised problem from a
+    # :class:`WarmStart`.  The shipped policies all implement it; callers
+    # probe with ``getattr`` and fall back to ``plan`` (DESIGN.md §13).
+
 
 def _stamp(plan: Plan, name: str, index: int | None = None,
            size: int | None = None) -> Plan:
@@ -92,6 +99,33 @@ def _stamp(plan: Plan, name: str, index: int | None = None,
         plan.meta["batch_index"] = index
         plan.meta["batch_size"] = size
     return plan
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmStart:
+    """Previous primal/dual iterates mapped onto a revised problem's rows.
+
+    ``x0_bps`` is a throughput-space primal guess with this problem's
+    ``(n_jobs, n_slots)`` shape (rows for newly arrived jobs zero-filled,
+    rows of departed jobs dropped); ``u0`` the matching normalized byte
+    duals, one per job.  Because :func:`~repro.core.problem.build_problem`
+    always lays out full-horizon tensors with offset masking, slot columns
+    never shift between replans — expired-slot mass is clipped away by the
+    solver's box projection.  The online planner
+    (:class:`repro.transfer.planner.IncrementalPlanner`) assembles these
+    from the previous solve's ``meta["warm_state"]``; either field may be
+    ``None`` (a plain cold start when both are).
+    """
+
+    x0_bps: np.ndarray | None = None
+    u0: np.ndarray | None = None
+    # Per-slot capacity duals: slots never shift between replans, so these
+    # carry over verbatim (no row mapping needed).
+    v0: np.ndarray | None = None
+
+    @property
+    def empty(self) -> bool:
+        return self.x0_bps is None and self.u0 is None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +144,43 @@ class LinTSPolicy:
 
     def plan(self, problem: ScheduleProblem) -> Plan:
         return _stamp(_lints._solve(problem, self.config), self.name)
+
+    def plan_incremental(self, problem: ScheduleProblem,
+                         warm: "WarmStart | None" = None, *,
+                         inject: Any = None,
+                         resilient: bool = True) -> Plan:
+        """Replan a revised problem, resuming PDHG from ``warm`` iterates.
+
+        The warm solve runs bucket-padded (``lints._solve_incremental``)
+        so consecutive replans share one jitted shape; with
+        ``resilient=True`` it enters :func:`resilient_solve` as the
+        leading ``"pdhg-warm"`` rung, keeping the cold solve as the
+        automatic fallback when the warm resume fails to converge.  On
+        the scipy backend (or with no usable warm state) this is a plain
+        cold solve.  Returned plans carry ``meta["warm_started"]`` and —
+        on the pdhg backend — ``meta["warm_state"]`` to seed the next
+        call.
+        """
+        if self.config.backend != "pdhg":
+            plan = (resilient_solve(problem, self.config, inject=inject)
+                    if resilient else _lints._solve(problem, self.config))
+            plan.meta.setdefault("warm_started", False)
+            return _stamp(plan, self.name)
+        if warm is not None and warm.empty:
+            warm = None
+        if resilient:
+            plan = resilient_solve(problem, self.config, inject=inject,
+                                   warm=warm)
+        elif warm is None:
+            plan = _lints._solve_incremental(problem, self.config)
+        else:
+            plan = _lints._solve_incremental(
+                problem, self.config, x0_bps=warm.x0_bps, u0=warm.u0,
+                v0=warm.v0)
+            if plan_failure(plan) is not None:
+                plan = _lints._solve_incremental(problem, self.config)
+        plan.meta.setdefault("warm_started", False)
+        return _stamp(plan, self.name)
 
     def plan_batch(self, problems: Sequence[ScheduleProblem]) -> list[Plan]:
         problems = list(problems)
@@ -161,6 +232,13 @@ class HeuristicPolicy:
             for i, p in enumerate(problems)
         ]
 
+    def plan_incremental(self, problem: ScheduleProblem, warm=None, *,
+                         inject: Any = None, resilient: bool = True) -> Plan:
+        """Heuristics have no iterates to resume: every replan is cold."""
+        plan = self.plan(problem)
+        plan.meta.setdefault("warm_started", False)
+        return plan
+
 
 @dataclasses.dataclass(frozen=True)
 class SpatialPolicy:
@@ -211,6 +289,13 @@ class SpatialPolicy:
             out.append(_stamp(plan, self.name, i, len(problems)))
         return out
 
+    def plan_incremental(self, problem: ScheduleProblem, warm=None, *,
+                         inject: Any = None, resilient: bool = True) -> Plan:
+        """Spatial replans are cold for now (route choice re-derives)."""
+        plan = self.plan(problem)
+        plan.meta.setdefault("warm_started", False)
+        return plan
+
     def plan_spatial(self, problems: Sequence[Any]) -> list[Any]:
         """Fleet of spatial problems -> :class:`SpatialPlan`\\ s.
 
@@ -233,7 +318,10 @@ class SpatialPolicy:
 
 #: Ladder rungs in escalation order.  Every plan returned by
 #: :func:`resilient_solve` carries ``meta["solver_status"]`` from this set.
-LADDER_RUNGS = ("pdhg", "pdhg-retry", "scipy", "heuristic")
+#: ``pdhg-warm`` leads only when a :class:`WarmStart` is supplied — the
+#: warm resume of an incremental replan, with the cold solve right below
+#: it as the automatic fallback (DESIGN.md §13).
+LADDER_RUNGS = ("pdhg-warm", "pdhg", "pdhg-retry", "scipy", "heuristic")
 
 _FAIL_CLOSED_WARNED = False
 
@@ -264,6 +352,7 @@ def resilient_solve(
     *,
     inject: Any = None,
     first_attempt: Plan | None = None,
+    warm: "WarmStart | None" = None,
 ) -> Plan:
     """Solve with a degradation ladder: never ship a broken plan silently.
 
@@ -285,6 +374,12 @@ def resilient_solve(
     rung attempts for chaos testing; ``first_attempt`` seeds the ladder
     with an already-computed (failed) plan so batch callers don't pay for
     the cold solve twice.
+
+    ``warm`` (a :class:`WarmStart` from a previous replan) prepends a
+    ``"pdhg-warm"`` rung: the bucket-padded warm resume runs first and
+    the cold solve is its automatic fallback.  With a warm rung present,
+    ``SolverFault.rungs`` counts from the warm attempt, so a 1-rung fault
+    poisons only the warm resume and the recovery IS the cold solve.
     """
     config = config or _lints.LinTSConfig(backend="pdhg")
     ok, why = workload_feasible(problem)
@@ -298,8 +393,12 @@ def resilient_solve(
         fault = (inject if isinstance(inject, SolverFault)
                  else SolverFault(solve_index=0, mode=str(inject)))
 
+    if warm is not None and warm.empty:
+        warm = None
     if config.backend == "pdhg":
         rungs = ["pdhg", "pdhg-retry", "scipy", "heuristic"]
+        if warm is not None:
+            rungs.insert(0, "pdhg-warm")
     else:
         rungs = ["scipy", "heuristic"]
 
@@ -311,7 +410,27 @@ def resilient_solve(
         plan: Plan | None = None
         failure: str | None = None
         try:
-            if rung == "pdhg":
+            if rung == "pdhg-warm":
+                if poisoned and fault.mode == "nan":
+                    plan = Plan(
+                        np.full((problem.n_jobs, problem.n_slots), np.nan),
+                        "lints",
+                        {"backend": "pdhg", "converged": False,
+                         "warm_started": True, "injected": "nan"},
+                    )
+                elif poisoned:  # zero-budget warm resume: stalls unconverged
+                    zcfg = dataclasses.replace(
+                        config, validate=False, vertex_round=False,
+                        refine=False,
+                        pdhg=dataclasses.replace(config.pdhg, max_iters=0))
+                    plan = _lints._solve_incremental(
+                        problem, zcfg, x0_bps=warm.x0_bps, u0=warm.u0)
+                    plan.meta["injected"] = "no_converge"
+                else:
+                    plan = _lints._solve_incremental(
+                        problem, config, x0_bps=warm.x0_bps, u0=warm.u0,
+                        v0=warm.v0)
+            elif rung == "pdhg":
                 if first_attempt is not None:
                     plan = first_attempt
                 elif poisoned and fault.mode == "nan":

@@ -112,6 +112,85 @@ def _solve(problem: ScheduleProblem, config: LinTSConfig = LinTSConfig(),
     return plan
 
 
+def _solve_incremental(problem: ScheduleProblem,
+                       config: LinTSConfig = LinTSConfig(backend="pdhg"),
+                       *, x0_bps: np.ndarray | None = None,
+                       u0: np.ndarray | None = None,
+                       v0: np.ndarray | None = None) -> Plan:
+    """Bucket-padded PDHG solve that harvests a warm state for the NEXT solve.
+
+    The online replanner (``repro.transfer.planner``, DESIGN.md §13) calls
+    this for every incremental solve, warm or cold.  The problem is padded
+    to its :func:`repro.core.ragged.bucket_shape` before solving so
+    consecutive replans with nearby job counts (1000 arrivals later, 1001)
+    share one jitted shape — no recompile per arrival — and previous
+    primal/dual iterates map row-for-row onto the revised problem.
+    ``x0_bps``/``u0`` are the previous solve's throughput plan and byte
+    duals aligned to THIS problem's job rows (new jobs zero-filled);
+    ``v0`` the per-slot capacity duals (columns never shift, so they carry
+    over verbatim).  ``meta["warm_state"]`` on the returned plan carries
+    the raw LP iterate and duals to seed the next call.
+    """
+    if config.backend != "pdhg":
+        raise ValueError("incremental solves require backend 'pdhg'")
+    ok, why = workload_feasible(problem)
+    if not ok:
+        raise InfeasibleError(f"workload infeasible: {why}")
+    from . import ragged
+
+    n, m = problem.n_jobs, problem.n_slots
+    bucket = ragged.bucket_shape(n, m)
+    padded = ragged.pad_problem(problem, *bucket)
+    x0p = u0p = v0p = None
+    if x0_bps is not None:
+        x0p = np.zeros(bucket, dtype=np.float64)
+        x0p[:n, :m] = np.asarray(x0_bps, dtype=np.float64)[:n, :m]
+    if u0 is not None:
+        u0p = np.zeros(bucket[0], dtype=np.float64)
+        u0p[:n] = np.asarray(u0, dtype=np.float64)[:n]
+    if v0 is not None:
+        v0p = np.zeros(bucket[1], dtype=np.float64)
+        v0p[:m] = np.asarray(v0, dtype=np.float64)[:m]
+    plan = solve_pdhg(padded, config.pdhg, x0_bps=x0p, u0=u0p, v0=v0p,
+                      return_duals=True)
+    rho = np.asarray(plan.rho_bps, dtype=np.float64)
+    pad_rate = max(
+        float(np.abs(rho[n:, :]).max(initial=0.0)),
+        float(np.abs(rho[:, m:]).max(initial=0.0)),
+    )
+    if pad_rate > 0.0:
+        raise RuntimeError(
+            "incremental padding invariant violated: "
+            f"{pad_rate:.3g} bps on padded cells")
+    dual_row = plan.meta.pop("dual_row")
+    dual_col = plan.meta.pop("dual_col")
+    raw = rho[:n, :m].copy()
+    meta = dict(plan.meta)
+    meta["objective"] = float((problem.cost * raw).sum())
+    meta["warm_started"] = x0_bps is not None or u0 is not None
+    meta["bucket_shape"] = bucket
+    meta["warm_state"] = {"x_bps": raw.copy(), "u": dual_row[:n].copy(),
+                          "v": dual_col[:m].copy()}
+    plan = Plan(raw, "lints", meta)
+    if config.vertex_round:
+        try:
+            plan = vertex_round(problem, plan)
+        except InfeasibleError:
+            pass
+    if config.refine:
+        from .refine import refine_plan
+
+        plan = refine_plan(problem, plan)
+    if config.validate:
+        report = check_plan(problem, plan.rho_bps, rel_tol=1e-5)
+        if not report.feasible:
+            raise InfeasibleError(
+                "incremental pdhg produced an infeasible plan "
+                f"(worst violation {report.worst():.3g})"
+            )
+    return plan
+
+
 def _deprecated(old: str, new: str) -> None:
     warnings.warn(
         f"repro.core.lints.{old} is deprecated; use {new} "

@@ -164,6 +164,7 @@ def pdhg_solve(
     b_col,
     x0=None,
     u0=None,
+    v0=None,
     *,
     max_iters: int = 60_000,
     check_every: int = 250,
@@ -183,11 +184,14 @@ def pdhg_solve(
     the legacy per-iteration cell-update kernel; the jnp path is the
     oracle.  All three share the identical window/restart math.
 
-    ``x0`` (normalized primal, clipped into ``[0, ub]``) and ``u0``
-    (byte duals, clipped nonnegative) warm-start the restart loop — the
-    same hooks the spatial batch solver exposes; the degradation ladder
-    (:func:`repro.core.api.resilient_solve`) uses them to retry a failed
-    solve from its sanitized last iterate instead of from cold.
+    ``x0`` (normalized primal, clipped into ``[0, ub]``), ``u0`` (byte
+    duals) and ``v0`` (slot-capacity duals), all clipped nonnegative,
+    warm-start the restart loop — the same hooks the spatial batch solver
+    exposes; the degradation ladder (:func:`repro.core.api.resilient_solve`)
+    uses them to retry a failed solve from its sanitized last iterate
+    instead of from cold, and the incremental planner resumes from the
+    previous replan's iterate.  Column duals are per-slot and slots never
+    shift between replans, so ``v0`` carries over verbatim.
     """
     dtype = c.dtype
     n_jobs, n_slots = c.shape
@@ -258,7 +262,8 @@ def pdhg_solve(
         x0 = jnp.clip(jnp.asarray(x0, dtype), 0.0, ub)
     u0 = (jnp.zeros((n_jobs,), dtype) if u0 is None
           else jnp.maximum(jnp.asarray(u0, dtype), 0.0))
-    v0 = jnp.zeros((n_slots,), dtype)
+    v0 = (jnp.zeros((n_slots,), dtype) if v0 is None
+          else jnp.maximum(jnp.asarray(v0, dtype), 0.0))
     state = (
         x0, u0, v0, x0.sum(axis=-1), x0.sum(axis=-2),
         x0, u0, v0, jnp.asarray(omega0, dtype),
@@ -274,13 +279,20 @@ def pdhg_solve(
 
 def solve_pdhg(problem: ScheduleProblem, config: PDHGConfig = PDHGConfig(),
                x0_bps: np.ndarray | None = None,
-               u0: np.ndarray | None = None) -> Plan:
-    """Solve one problem; ``x0_bps``/``u0`` optionally warm-start the loop.
+               u0: np.ndarray | None = None,
+               v0: np.ndarray | None = None,
+               return_duals: bool = False) -> Plan:
+    """Solve one problem; ``x0_bps``/``u0``/``v0`` warm-start the loop.
 
     ``x0_bps`` is a throughput-space primal guess (e.g. a previous plan or
     a failed solve's sanitized iterate); it is normalized by the rate cap
     and clipped into the feasible box before use.  Non-finite warm-start
     cells are zeroed — a NaN'd iterate must never poison the retry.
+
+    ``return_duals`` stashes the final byte/capacity dual iterates in
+    ``meta["dual_row"]``/``meta["dual_col"]`` (normalized units, numpy) so
+    an incremental replanner can warm-start the *next* solve from them
+    (DESIGN.md §13).
     """
     c, ub, b_row, b_col, _ = normalize_problem(problem, config.dtype)
     x0 = None
@@ -291,8 +303,11 @@ def solve_pdhg(problem: ScheduleProblem, config: PDHGConfig = PDHGConfig(),
     if u0 is not None:
         u0 = np.nan_to_num(np.asarray(u0, dtype=np.float64), nan=0.0,
                            posinf=0.0, neginf=0.0)
+    if v0 is not None:
+        v0 = np.nan_to_num(np.asarray(v0, dtype=np.float64), nan=0.0,
+                           posinf=0.0, neginf=0.0)
     x, diag = pdhg_solve(
-        c, ub, b_row, b_col, x0, u0,
+        c, ub, b_row, b_col, x0, u0, v0,
         max_iters=config.max_iters,
         check_every=config.check_every,
         tol=config.tol,
@@ -306,19 +321,19 @@ def solve_pdhg(problem: ScheduleProblem, config: PDHGConfig = PDHGConfig(),
     rho = np.asarray(x, dtype=np.float64) * problem.rate_cap_bps
     # Guard solver epsilon: top up/clip so the simulator never sees SLA misses.
     rho = repair_plan(problem, rho)
-    return Plan(
-        rho,
-        "lints",
-        {
-            "backend": "pdhg",
-            "objective": float((problem.cost * rho).sum()),
-            "iterations": int(diag["iterations"]),
-            "converged": bool(diag["converged"]),
-            "primal_residual": float(diag["primal_residual"]),
-            "gap": float(diag["gap"]),
-            "omega": float(diag["omega"]),
-        },
-    )
+    meta = {
+        "backend": "pdhg",
+        "objective": float((problem.cost * rho).sum()),
+        "iterations": int(diag["iterations"]),
+        "converged": bool(diag["converged"]),
+        "primal_residual": float(diag["primal_residual"]),
+        "gap": float(diag["gap"]),
+        "omega": float(diag["omega"]),
+    }
+    if return_duals:
+        meta["dual_row"] = np.asarray(diag["dual_row"], dtype=np.float64)
+        meta["dual_col"] = np.asarray(diag["dual_col"], dtype=np.float64)
+    return Plan(rho, "lints", meta)
 
 
 def vertex_round(problem: ScheduleProblem, plan: Plan, keep_frac: float = 0.95) -> Plan:

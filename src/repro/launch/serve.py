@@ -1,7 +1,17 @@
-"""Serving launcher: continuous-batching engine over a (reduced) model.
+"""Serving launcher: continuous-batching LLM engine, or the online
+transfer-scheduling service.
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
         --reduced --requests 8 --max-new 16
+
+    PYTHONPATH=src python -m repro.launch.serve --transfers \
+        --requests 32 --policy lints_pdhg
+
+The ``--transfers`` mode drives a :class:`~repro.transfer.TransferService`
+(DESIGN.md §13): submits a burst of replication requests through admission
+control, lets the debounced replan worker coalesce them into few solves,
+and serves per-slot rate decisions from immutable schedule snapshots while
+the engine ticks.
 """
 
 from __future__ import annotations
@@ -9,18 +19,62 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from ..configs import registry
-from ..models import lm
-from ..serve import ServingEngine
+
+def _main_transfers(args) -> dict:
+    from ..core.trace import make_trace_set
+    from ..transfer import (Datacenter, Topology, TransferManager,
+                            TransferService)
+
+    zones = ("US-NM", "US-WY", "US-SC")
+    traces = make_trace_set(zones, hours=72, seed=args.seed)
+    topo = Topology(
+        datacenters=(Datacenter("a", zones[0]), Datacenter("b", zones[-1])),
+        routes={("a", "b"): zones, ("b", "a"): zones[::-1]},
+    )
+    tm = TransferManager(topo, traces, capacity_gbps=1.0,
+                         policy=args.policy)
+    svc = TransferService(tm, max_pending=max(args.requests, 4),
+                          debounce_s=0.02)
+    svc.start()
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    rids = svc.submit_many([
+        (float(rng.uniform(1.0, 20.0)), "a", "b",
+         int(rng.integers(24, traces.n_slots)))
+        for _ in range(args.requests)
+    ])
+    snap = svc.quiesce()
+    for _ in range(args.slots):
+        if not tm.pending():
+            break
+        snap = svc.tick()
+    svc.stop()
+    dt = time.time() - t0
+    rep = tm.report()
+    print(f"served {len(rids)} transfers for {args.slots} slots in "
+          f"{dt:.2f}s (snapshot v{snap.version}, "
+          f"{rep['replans']['count']} replans, "
+          f"{rep['replans']['warm']} warm)")
+    print(f"  completed={rep['completed']} pending={rep['pending']} "
+          f"violations={rep['sla_violations']} "
+          f"emissions={rep['total_emissions_kg']:.3f} kg")
+    for rid in rids[:4]:
+        print(f"  {rid}: rate_now={snap.rate(rid):.3e} bps")
+    return {"report": rep, "snapshot_version": snap.version,
+            "seconds": dt}
 
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="internlm2-1.8b",
-                    choices=registry.list_archs())
+    ap.add_argument("--transfers", action="store_true",
+                    help="serve the transfer scheduler instead of an LLM")
+    ap.add_argument("--policy", default="lints_pdhg",
+                    help="transfer scheduling policy (with --transfers)")
+    ap.add_argument("--slots", type=int, default=48,
+                    help="max engine slots to tick (with --transfers)")
+    ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
@@ -30,6 +84,20 @@ def main(argv=None) -> dict:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.transfers:
+        return _main_transfers(args)
+
+    # LLM-serving path; imports stay lazy so --transfers works even where
+    # the model stack is unavailable.
+    import jax
+
+    from ..configs import registry
+    from ..models import lm
+    from ..serve import ServingEngine
+
+    if args.arch not in registry.list_archs():
+        ap.error(f"unknown --arch {args.arch!r} "
+                 f"(choose from {registry.list_archs()})")
     cfg = registry.get(args.arch).model(reduced=args.reduced)
     key = jax.random.PRNGKey(args.seed)
     params = lm.init_params(key, cfg)

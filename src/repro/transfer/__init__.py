@@ -1,7 +1,15 @@
+from .events import (  # noqa: F401
+    EventQueue,
+    ManagedTransfer,
+    ReplanDelta,
+    ScheduleSnapshot,
+    ScheduleState,
+)
 from .manager import (  # noqa: F401
     CheckpointReplicator,
     Datacenter,
-    ManagedTransfer,
     Topology,
     TransferManager,
 )
+from .planner import IncrementalPlanner, ReplanTelemetry  # noqa: F401
+from .service import AdmissionError, TransferService  # noqa: F401

@@ -1,0 +1,359 @@
+"""State/event layer of the online scheduling service (DESIGN.md §13).
+
+The pre-refactor :class:`~repro.transfer.manager.TransferManager` tracked
+"something changed, replan eventually" with ad-hoc flags (``_needs_plan``,
+``drifted``, recovery booleans) scattered through ``tick``.  This module
+replaces the flags with typed events on a queue:
+
+* arrivals, forecast revisions, and explicit replan requests are *dirty*
+  events — the plan is stale until a replan consumes them;
+* completions, drift observations, link-health transitions, reroutes, and
+  panics are recorded for the audit trail and the coalescing telemetry but
+  do not by themselves dirty the plan (drift and recovery replans keep
+  their own gates — congestion threshold, backoff — in the manager, which
+  posts the matching event exactly when it acts on one).
+
+A replan drains the whole queue and coalesces it into one
+:class:`ReplanDelta` — many bursty arrivals cost ONE solve — and the
+number of events folded into each replan is reported as telemetry.
+
+:class:`ScheduleState` is the mutable store carved out of the manager:
+the transfer table, the per-transfer plan rows, the lazily stacked plan
+matrix used for vectorized reserved-capacity sums, and a monotonically
+increasing version.  :meth:`ScheduleState.snapshot` freezes it into an
+immutable :class:`ScheduleSnapshot` — the object the service facade
+(:mod:`repro.transfer.service`) hands to synchronous readers while the
+asynchronous replan worker mutates the live state behind a lock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from types import MappingProxyType
+from typing import Mapping
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ManagedTransfer:
+    request_id: str
+    size_gb: float
+    path: tuple[str, ...]
+    deadline_slot: int       # absolute slot index (post-truncation)
+    submitted_slot: int
+    remaining_bits: float
+    done_slot: int | None = None
+    emissions_g: float = 0.0
+    violated: bool = False
+    # Slots the requested SLA reached past the forecast horizon and was
+    # truncated by (0 = the deadline fits the trace).  Surfaced in
+    # ``TransferManager.report()`` so silently tightened SLAs are visible.
+    deadline_truncated_slots: int = 0
+    # All routes a spatial policy may split this transfer across
+    # (primary first); non-spatial policies use ``path`` only.
+    candidate_paths: tuple[tuple[str, ...], ...] = ()
+    # Fault-tolerance bookkeeping: how many times the transfer was moved
+    # off an unhealthy link, and whether it escalated to deadline-panic
+    # (full-rate, carbon-blind execution) because residual SLA slack fell
+    # below the feasible-rate floor.
+    reroutes: int = 0
+    panic: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Events
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """Base event: ``slot`` is the engine slot the event was posted at."""
+
+    slot: int
+
+    #: Whether this event leaves the current plan stale.  Dirty events
+    #: pending on the queue are exactly the old ``_needs_plan`` flag.
+    dirty = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalEvent(Event):
+    """One enqueue batch: ``enqueue`` posts a single rid, ``enqueue_many``
+    posts the whole batch as ONE event (one replan per batch)."""
+
+    rids: tuple[str, ...] = ()
+    dirty = True
+
+
+@dataclasses.dataclass(frozen=True)
+class CompletionEvent(Event):
+    """A transfer finished.  Informational: completed transfers fall out
+    of the next plan naturally, so completions never force one."""
+
+    rid: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ForecastRevisionEvent(Event):
+    """The carbon forecast was revised (``TransferManager.revise_forecast``)
+    — the cadence Wiesner et al. show temporal shifting lives or dies by."""
+
+    zones: tuple[str, ...] = ()
+    reason: str = "revision"
+    dirty = True
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanRequestedEvent(Event):
+    """An explicit replan request (the old ``_needs_plan = True``)."""
+
+    reason: str = "manual"
+    dirty = True
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftEvent(Event):
+    """Executed progress fell behind plan; posted when the drift gate
+    (congestion threshold) actually triggers a replan attempt."""
+
+    reason: str = "drift"
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkHealthEvent(Event):
+    """A link crossed the health threshold (EWMA below/above)."""
+
+    link: tuple[str, str] = ("", "")
+    healthy: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class RerouteEvent(Event):
+    """Recovery moved a transfer off an unhealthy link."""
+
+    rid: str = ""
+    path: tuple[str, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class PanicEvent(Event):
+    """A transfer escalated to deadline-panic (full-rate) execution."""
+
+    rid: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanDelta:
+    """What changed since the last plan — one coalesced queue drain.
+
+    The incremental planner keys its warm-start row mapping off the rid
+    sets; ``n_events``/``n_dirty`` feed the coalescing telemetry
+    (events folded into one replan).
+    """
+
+    arrived: tuple[str, ...] = ()
+    completed: tuple[str, ...] = ()
+    forecast_revised: bool = False
+    rerouted: tuple[str, ...] = ()
+    panicked: tuple[str, ...] = ()
+    drift: bool = False
+    n_events: int = 0
+    n_dirty: int = 0
+
+
+def coalesce(events: list[Event]) -> ReplanDelta:
+    """Fold a drained event list into one :class:`ReplanDelta`."""
+    arrived: list[str] = []
+    completed: list[str] = []
+    rerouted: list[str] = []
+    panicked: list[str] = []
+    forecast = False
+    drift = False
+    for e in events:
+        if isinstance(e, ArrivalEvent):
+            arrived.extend(e.rids)
+        elif isinstance(e, CompletionEvent):
+            completed.append(e.rid)
+        elif isinstance(e, ForecastRevisionEvent):
+            forecast = True
+        elif isinstance(e, RerouteEvent):
+            rerouted.append(e.rid)
+        elif isinstance(e, PanicEvent):
+            panicked.append(e.rid)
+        elif isinstance(e, DriftEvent):
+            drift = True
+    return ReplanDelta(
+        arrived=tuple(arrived),
+        completed=tuple(completed),
+        forecast_revised=forecast,
+        rerouted=tuple(rerouted),
+        panicked=tuple(panicked),
+        drift=drift,
+        n_events=len(events),
+        n_dirty=sum(1 for e in events if e.dirty),
+    )
+
+
+class EventQueue:
+    """FIFO of typed events with dirty-tracking and drain counters.
+
+    ``replan_pending()`` — any dirty event queued — is the successor of
+    the manager's ``_needs_plan`` flag; a replan calls :meth:`drain` and
+    coalesces the result.  The queue is not thread-safe by itself: the
+    service facade serializes access behind its lock.
+    """
+
+    def __init__(self) -> None:
+        self._events: list[Event] = []
+        self.posted = 0
+        self.drained = 0
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    def post(self, event: Event) -> Event:
+        self._events.append(event)
+        self.posted += 1
+        return event
+
+    def replan_pending(self) -> bool:
+        """True while a dirty event awaits a replan."""
+        return any(e.dirty for e in self._events)
+
+    def drain(self) -> list[Event]:
+        """Remove and return every queued event (a replan consumes all)."""
+        events, self._events = self._events, []
+        self.drained += len(events)
+        return events
+
+    def discard_dirty(self) -> int:
+        """Drop dirty events only (the old ``_needs_plan = False``);
+        informational events stay queued for the next drain."""
+        keep = [e for e in self._events if not e.dirty]
+        dropped = len(self._events) - len(keep)
+        self._events = keep
+        self.drained += dropped
+        return dropped
+
+
+# ---------------------------------------------------------------------------
+# Schedule state + snapshots
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleSnapshot:
+    """Immutable view of the current schedule for synchronous readers.
+
+    Built under the service lock, read without it: publication is one
+    atomic reference swap, and every array is flagged non-writeable, so a
+    reader can never observe (or cause) a half-applied replan.
+    """
+
+    version: int
+    slot: int
+    policy: str
+    rates_bps: Mapping[str, np.ndarray]   # rid -> (n_slots,) planned bps
+    plan_last_slot: Mapping[str, int]
+    pending: tuple[str, ...]
+
+    def rate(self, rid: str, slot: int | None = None) -> float:
+        """Planned bps for ``rid`` at ``slot`` (default: the current slot).
+        Unknown rids and out-of-horizon slots read as 0.0 — the decision
+        a dataplane needs is 'how fast right now', never an exception."""
+        row = self.rates_bps.get(rid)
+        if row is None:
+            return 0.0
+        j = self.slot if slot is None else slot
+        if j < 0 or j >= row.shape[0]:
+            return 0.0
+        return float(row[j])
+
+
+class ScheduleState:
+    """The mutable store carved out of ``TransferManager``.
+
+    Holds the transfer table, per-transfer plan rows (total and per-path),
+    the last planned slot per transfer, and the lazily stacked plan matrix
+    behind the vectorized reserved-capacity sums.  ``version`` increments
+    on every plan application and slot advance, so snapshot consumers can
+    cheaply detect staleness.
+    """
+
+    def __init__(self, n_slots: int) -> None:
+        self.n_slots = n_slots
+        self.slot = 0
+        self.version = 0
+        self.transfers: dict[str, ManagedTransfer] = {}
+        self.plan_rho: dict[str, np.ndarray] = {}    # rid -> (n_slots,) bps
+        # Spatial policies additionally keep the per-path split:
+        # rid -> (candidate paths, (n_paths, n_slots) bps).
+        self.plan_path_rho: dict[
+            str, tuple[tuple[tuple[str, ...], ...], np.ndarray]] = {}
+        self.plan_last_slot: dict[str, int] = {}
+        # Stacked copy of plan_rho for vectorized reserved-capacity sums;
+        # rebuilt lazily after every replan.
+        self._matrix: np.ndarray | None = None
+        self._matrix_rids: list[str] = []
+
+    def bump(self) -> int:
+        self.version += 1
+        return self.version
+
+    def pending(self) -> list[ManagedTransfer]:
+        return [t for t in self.transfers.values() if t.done_slot is None]
+
+    def live(self) -> list[ManagedTransfer]:
+        """Transfers a replan still covers: pending, bits left, SLA ahead."""
+        return [t for t in self.pending()
+                if t.remaining_bits > 1.0 and t.deadline_slot > self.slot]
+
+    def clear_plan(self) -> None:
+        """Drop plan rows ahead of a replan.  ``plan_last_slot`` is kept —
+        it documents the executed plan for transfers that fell out of the
+        live set (matching the pre-refactor manager)."""
+        self.plan_rho = {}
+        self.plan_path_rho = {}
+        self._matrix = None
+
+    def set_plan_row(self, rid: str, rho_row: np.ndarray,
+                     path_split=None) -> None:
+        """Install one transfer's plan row (and optional per-path split)."""
+        self.plan_rho[rid] = rho_row
+        if path_split is not None:
+            self.plan_path_rho[rid] = path_split
+        nz = np.flatnonzero(rho_row)
+        self.plan_last_slot[rid] = int(nz[-1]) if nz.size else -1
+        self._matrix = None
+
+    def reserved_bps(self, j: int) -> float:
+        """Planned (still-live) rate reserved on the link at slot j."""
+        if self._matrix is None:
+            self._matrix_rids = list(self.plan_rho)
+            self._matrix = (
+                np.stack([self.plan_rho[rid] for rid in self._matrix_rids])
+                if self._matrix_rids else np.zeros((0, self.n_slots))
+            )
+        if not self._matrix_rids or j >= self._matrix.shape[1]:
+            return 0.0
+        alive = np.array([
+            (t := self.transfers.get(rid)) is not None
+            and (t.done_slot is None or t.done_slot >= j)
+            for rid in self._matrix_rids
+        ])
+        return float(self._matrix[alive, j].sum())
+
+    def snapshot(self, policy: str) -> ScheduleSnapshot:
+        """Freeze the current schedule into an immutable snapshot."""
+        rates: dict[str, np.ndarray] = {}
+        for rid, row in self.plan_rho.items():
+            frozen = np.asarray(row, dtype=np.float64).copy()
+            frozen.setflags(write=False)
+            rates[rid] = frozen
+        return ScheduleSnapshot(
+            version=self.version,
+            slot=self.slot,
+            policy=policy,
+            rates_bps=MappingProxyType(rates),
+            plan_last_slot=MappingProxyType(dict(self.plan_last_slot)),
+            pending=tuple(t.request_id for t in self.pending()),
+        )

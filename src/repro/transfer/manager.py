@@ -11,6 +11,24 @@ plugs in (``TransferManager(..., policy="edf")``), the baselines run in
 the same online engine and a policy-comparison sweep is a loop over
 ``api.available_policies()``.
 
+The manager is a thin orchestrator over three layers (DESIGN.md §13):
+
+* **state/events** (:mod:`repro.transfer.events`): the transfer table and
+  plan rows live in a :class:`~repro.transfer.events.ScheduleState`;
+  arrivals, completions, forecast revisions, drift, and link-health
+  transitions are typed events on an :class:`~repro.transfer.events
+  .EventQueue` whose dirty-tracking replaces the old ``_needs_plan``
+  flag.  A replan drains and coalesces the queue — a burst of arrivals
+  costs one solve.
+* **incremental planning** (:mod:`repro.transfer.planner`): replans go
+  through an :class:`~repro.transfer.planner.IncrementalPlanner` that
+  warm-starts PDHG from the previous solve's primal/dual iterates
+  (``Policy.plan_incremental``), with the cold solve as the parity
+  oracle and automatic fallback rung in the degradation ladder.
+* **serving** (:mod:`repro.transfer.service`): a facade that publishes
+  immutable schedule snapshots for synchronous readers while replans run
+  asynchronously with debouncing and admission control.
+
 Beyond-paper: reactive replanning — §IV-C notes congestion can break plans
 and leaves replanning to future work; we implement it (``replan_on_drift``):
 when executed progress falls behind plan by more than ``drift_tol``, the
@@ -32,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from typing import Sequence
 
 import numpy as np
@@ -45,6 +64,9 @@ from ..core.simulator import JOULES_PER_KWH
 from ..core.spatial import _links as _path_links
 from ..core.trace import TraceSet
 from ..runtime.health import HeartbeatMonitor
+from . import events as ev
+from .events import ManagedTransfer, ScheduleState  # noqa: F401  (re-export)
+from .planner import IncrementalPlanner
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,7 +119,7 @@ class LinkHealthMonitor:
     workers.  On top of the heartbeat plumbing the monitor keeps a
     per-link EWMA of the achieved/planned ratio; a link whose EWMA drops
     below ``unhealthy_below`` is declared down and the engine reroutes
-    transfers off it (:meth:`TransferManager._recover`).
+    transfers off it (:meth:`TransferManager._maybe_recover`).
 
     Health recovers through observations only — a dead link that no plan
     routes traffic over stays flagged until probed, which is the honest
@@ -171,32 +193,6 @@ class LinkHealthMonitor:
         }
 
 
-@dataclasses.dataclass
-class ManagedTransfer:
-    request_id: str
-    size_gb: float
-    path: tuple[str, ...]
-    deadline_slot: int       # absolute slot index (post-truncation)
-    submitted_slot: int
-    remaining_bits: float
-    done_slot: int | None = None
-    emissions_g: float = 0.0
-    violated: bool = False
-    # Slots the requested SLA reached past the forecast horizon and was
-    # truncated by (0 = the deadline fits the trace).  Surfaced in
-    # ``TransferManager.report()`` so silently tightened SLAs are visible.
-    deadline_truncated_slots: int = 0
-    # All routes a spatial policy may split this transfer across
-    # (primary first); non-spatial policies use ``path`` only.
-    candidate_paths: tuple[tuple[str, ...], ...] = ()
-    # Fault-tolerance bookkeeping: how many times the transfer was moved
-    # off an unhealthy link, and whether it escalated to deadline-panic
-    # (full-rate, carbon-blind execution) because residual SLA slack fell
-    # below the feasible-rate floor.
-    reroutes: int = 0
-    panic: bool = False
-
-
 class TransferManager:
     def __init__(
         self,
@@ -253,24 +249,14 @@ class TransferManager:
                        if isinstance(resolved, api.LinTSPolicy) else None)
         self.replan_on_drift = replan_on_drift
         self.drift_tol = drift_tol
-        self.slot = 0
-        self.transfers: dict[str, ManagedTransfer] = {}
-        self._plan_rho: dict[str, np.ndarray] = {}   # rid -> (n_slots,) bps
-        # Spatial policies additionally keep the per-path split:
-        # rid -> (candidate paths, (n_paths, n_slots) bps) — execution
-        # charges each path's emissions on its own actual trace.
-        self._plan_path_rho: dict[
-            str, tuple[tuple[tuple[str, ...], ...], np.ndarray]] = {}
-        self._plan_last_slot: dict[str, int] = {}
-        # Stacked copy of _plan_rho for vectorized reserved-capacity sums;
-        # rebuilt lazily after every replan.
-        self._plan_matrix: np.ndarray | None = None
-        self._plan_rids: list[str] = []
+        # State/event/planner layers (DESIGN.md §13).
+        self.state = ScheduleState(forecast.n_slots)
+        self.events = ev.EventQueue()
+        self.planner = IncrementalPlanner(resolved)
         # Combined per-path actual-trace intensities; traces are frozen, so
         # entries never invalidate.
         self._path_ci: dict[tuple[str, ...], np.ndarray] = {}
         self._ids = itertools.count()
-        self._needs_plan = False
         # ---------------------------------------------- fault tolerance
         self.faults = faults
         self.recovery = recovery
@@ -281,6 +267,7 @@ class TransferManager:
                 *(alts for alts in topology.alternates.values())):
             all_links.extend(_path_links(path))
         self.link_health = LinkHealthMonitor(all_links)
+        self._unhealthy_prev: set[Link] = set()
         self._solve_calls = 0
         self.solver_status_counts: dict[str, int] = {}
         self.reroutes = 0
@@ -288,6 +275,81 @@ class TransferManager:
         self._replan_backoff = 1
         self._replan_hold_until = 0
         self._max_replan_backoff = 16
+
+    # ----------------------------------------------- state-layer back-compat
+    # The pre-decomposition manager kept these as plain attributes; tests
+    # and downstream tooling read (and write) them, so they stay as
+    # read/write views onto the ScheduleState store.
+
+    @property
+    def slot(self) -> int:
+        return self.state.slot
+
+    @slot.setter
+    def slot(self, value: int) -> None:
+        self.state.slot = int(value)
+
+    @property
+    def transfers(self) -> dict[str, ManagedTransfer]:
+        return self.state.transfers
+
+    @transfers.setter
+    def transfers(self, value: dict[str, ManagedTransfer]) -> None:
+        self.state.transfers = value
+        self.state._matrix = None
+
+    @property
+    def _plan_rho(self) -> dict[str, np.ndarray]:
+        return self.state.plan_rho
+
+    @_plan_rho.setter
+    def _plan_rho(self, value: dict[str, np.ndarray]) -> None:
+        self.state.plan_rho = value
+        self.state._matrix = None
+
+    @property
+    def _plan_path_rho(self):
+        return self.state.plan_path_rho
+
+    @_plan_path_rho.setter
+    def _plan_path_rho(self, value) -> None:
+        self.state.plan_path_rho = value
+
+    @property
+    def _plan_last_slot(self) -> dict[str, int]:
+        return self.state.plan_last_slot
+
+    @_plan_last_slot.setter
+    def _plan_last_slot(self, value: dict[str, int]) -> None:
+        self.state.plan_last_slot = value
+
+    @property
+    def _plan_matrix(self) -> np.ndarray | None:
+        return self.state._matrix
+
+    @_plan_matrix.setter
+    def _plan_matrix(self, value: np.ndarray | None) -> None:
+        self.state._matrix = value
+
+    @property
+    def _plan_rids(self) -> list[str]:
+        return self.state._matrix_rids
+
+    @_plan_rids.setter
+    def _plan_rids(self, value: list[str]) -> None:
+        self.state._matrix_rids = value
+
+    @property
+    def _needs_plan(self) -> bool:
+        """Dirty events pending on the queue (the old boolean flag)."""
+        return self.events.replan_pending()
+
+    @_needs_plan.setter
+    def _needs_plan(self, value: bool) -> None:
+        if value:
+            self.events.post(ev.ReplanRequestedEvent(self.slot))
+        else:
+            self.events.discard_dirty()
 
     def capacity_bps_free(self, j: int) -> float:
         """Unplanned capacity at slot j (for best-effort tail completion).
@@ -307,20 +369,7 @@ class TransferManager:
 
     def _reserved_bps(self, j: int) -> float:
         """Planned (still-live) rate reserved on the link at slot j."""
-        if self._plan_matrix is None:
-            self._plan_rids = list(self._plan_rho)
-            self._plan_matrix = (
-                np.stack([self._plan_rho[rid] for rid in self._plan_rids])
-                if self._plan_rids else np.zeros((0, self.forecast.n_slots))
-            )
-        if not self._plan_rids or j >= self._plan_matrix.shape[1]:
-            return 0.0
-        alive = np.array([
-            (t := self.transfers.get(rid)) is not None
-            and (t.done_slot is None or t.done_slot >= j)
-            for rid in self._plan_rids
-        ])
-        return float(self._plan_matrix[alive, j].sum())
+        return self.state.reserved_bps(j)
 
     def _reserved_link_bps(self, j: int) -> dict[tuple[str, str], float]:
         """Planned (still-live) rate per WAN link at slot j (spatial plans).
@@ -361,6 +410,36 @@ class TransferManager:
     # ------------------------------------------------------------------ API
     def enqueue(self, size_gb: float, src: str, dst: str,
                 deadline_slots: int, request_id: str | None = None) -> str:
+        rid = self._admit(size_gb, src, dst, deadline_slots, request_id)
+        self.events.post(ev.ArrivalEvent(self.slot, rids=(rid,)))
+        return rid
+
+    def enqueue_many(
+        self, requests: Sequence[tuple | dict]
+    ) -> list[str]:
+        """Admit a batch of transfers as ONE arrival event (one replan).
+
+        Each request is ``(size_gb, src, dst, deadline_slots)`` — a tuple,
+        optionally with a fifth ``request_id`` element, or a dict of
+        :meth:`enqueue` keywords.  A checkpoint commit replicating to N
+        destinations, or a bursty arrival wave, coalesces into a single
+        event and therefore a single solve at the next replan instead of
+        one per call.
+        """
+        rids: list[str] = []
+        for req in requests:
+            kwargs = dict(req) if isinstance(req, dict) else None
+            if kwargs is not None:
+                rids.append(self._admit(**kwargs))
+            else:
+                rids.append(self._admit(*req))
+        if rids:
+            self.events.post(ev.ArrivalEvent(self.slot, rids=tuple(rids)))
+        return rids
+
+    def _admit(self, size_gb: float, src: str, dst: str,
+               deadline_slots: int, request_id: str | None = None) -> str:
+        """Register one transfer in the state store (no event posted)."""
         rid = request_id or f"xfer-{next(self._ids):05d}"
         requested = self.slot + deadline_slots
         # An SLA past the forecast window can only be planned up to the
@@ -379,11 +458,27 @@ class TransferManager:
             deadline_truncated_slots=requested - deadline,
             candidate_paths=candidates,
         )
-        self._needs_plan = True
         return rid
 
     def pending(self) -> list[ManagedTransfer]:
-        return [t for t in self.transfers.values() if t.done_slot is None]
+        return self.state.pending()
+
+    def revise_forecast(self, forecast: TraceSet,
+                        zones: tuple[str, ...] = ()) -> None:
+        """Swap in a revised carbon forecast and mark the plan stale.
+
+        The revised trace set must keep the slot grid (same horizon and
+        slot length) — plan rows and warm-start iterates are indexed by
+        absolute slot.  The actual (noisy) execution trace is untouched.
+        """
+        if forecast.n_slots != self.forecast.n_slots \
+                or forecast.slot_seconds != self.forecast.slot_seconds:
+            raise ValueError(
+                "revised forecast must keep the slot grid "
+                f"({self.forecast.n_slots} slots x "
+                f"{self.forecast.slot_seconds}s)")
+        self.forecast = forecast
+        self.events.post(ev.ForecastRevisionEvent(self.slot, zones=zones))
 
     # ----------------------------------------------------------------- plan
     def _effective_forecast(self) -> TraceSet:
@@ -393,25 +488,6 @@ class TransferManager:
         if self.faults is None:
             return self.forecast
         return self.faults.degrade_forecast(self.forecast, self.slot)
-
-    def _plan_problem(self, problem):
-        """One solve through the policy — via the degradation ladder for
-        LinTS policies when ``resilient`` — with per-call solver-fault
-        injection and ladder-rung accounting."""
-        fault = (self.faults.solver_fault(self._solve_calls)
-                 if self.faults is not None else None)
-        self._solve_calls += 1
-        if self.resilient and isinstance(self.policy, api.LinTSPolicy):
-            plan = api.resilient_solve(problem, self.policy.config,
-                                       inject=fault)
-            plan.meta.setdefault("policy", self.policy.name)
-        else:
-            plan = self.policy.plan(problem)
-        status = plan.meta.get("solver_status")
-        if status is not None:
-            self.solver_status_counts[status] = (
-                self.solver_status_counts.get(status, 0) + 1)
-        return plan
 
     def _try_replan(self) -> bool:
         """Replan with bounded exponential backoff on failure.
@@ -437,19 +513,30 @@ class TransferManager:
         return True
 
     def replan(self) -> None:
-        # Transfers already past their deadline stay violated; replanning
-        # only covers those that can still meet their SLA.
-        live = [t for t in self.pending()
-                if t.remaining_bits > 1.0 and t.deadline_slot > self.slot]
-        self._plan_rho = {}
-        self._plan_path_rho = {}
-        self._plan_matrix = None
-        self._needs_plan = False
+        """Drain the event queue and re-solve for every live transfer.
+
+        Transfers already past their deadline stay violated; replanning
+        only covers those that can still meet their SLA.  LinTS policies
+        replan *incrementally*: the planner maps the previous solve's
+        primal/dual iterates onto the revised problem and resumes PDHG
+        from them (cold solve as automatic fallback).  Wall-clock, warm
+        vs cold, and the number of events coalesced land in the replan
+        telemetry (``report()["replans"]``).
+        """
+        t0 = time.perf_counter()
+        delta = ev.coalesce(self.events.drain())
+        self.state.clear_plan()
+        live = self.state.live()
         if not live:
+            self.state.bump()
             return
         forecast = self._effective_forecast()
         if isinstance(self.policy, api.SpatialPolicy):
             self._replan_spatial(live, forecast)
+            self.planner.telemetry.record(
+                (time.perf_counter() - t0) * 1e3, warm=False,
+                events=delta.n_events)
+            self.state.bump()
             return
         reqs = [
             TransferRequest(
@@ -463,13 +550,24 @@ class TransferManager:
         ]
         problem = build_problem(reqs, forecast, self.capacity_gbps,
                                 self.power)
-        plan = self._plan_problem(problem)
-        self._plan_last_slot = {}
+        fault = (self.faults.solver_fault(self._solve_calls)
+                 if self.faults is not None else None)
+        self._solve_calls += 1
+        plan = self.planner.plan(
+            problem, [t.request_id for t in live],
+            inject=fault, resilient=self.resilient)
+        status = plan.meta.get("solver_status")
+        if status is not None:
+            self.solver_status_counts[status] = (
+                self.solver_status_counts.get(status, 0) + 1)
+        self.state.plan_last_slot = {}
         for i, t in enumerate(live):
-            self._plan_rho[t.request_id] = plan.rho_bps[i]
-            nz = np.flatnonzero(plan.rho_bps[i])
-            self._plan_last_slot[t.request_id] = int(nz[-1]) if nz.size else -1
-        self._plan_matrix = None
+            self.state.set_plan_row(t.request_id, plan.rho_bps[i])
+        self.planner.telemetry.record(
+            (time.perf_counter() - t0) * 1e3,
+            warm=bool(plan.meta.get("warm_started", False)),
+            events=delta.n_events)
+        self.state.bump()
 
     def _replan_spatial(self, live: list[ManagedTransfer],
                         forecast: TraceSet | None = None) -> None:
@@ -499,21 +597,17 @@ class TransferManager:
             reqs, forecast if forecast is not None else self.forecast,
             self.capacity_gbps, self.power)
         plan = self.policy.plan_spatial([problem])[0]
-        self._plan_last_slot = {}
+        self.state.plan_last_slot = {}
         for i, t in enumerate(live):
             paths = t.candidate_paths or (t.path,)
             per_path = np.asarray(plan.rho_bps[i][:len(paths)])
-            total = per_path.sum(axis=0)
-            self._plan_rho[t.request_id] = total
-            self._plan_path_rho[t.request_id] = (paths, per_path)
-            nz = np.flatnonzero(total)
-            self._plan_last_slot[t.request_id] = int(nz[-1]) if nz.size else -1
-        self._plan_matrix = None
+            self.state.set_plan_row(t.request_id, per_path.sum(axis=0),
+                                    path_split=(paths, per_path))
 
     # ----------------------------------------------------------------- tick
     def tick(self, congestion: float = 1.0) -> None:
         """Advance one slot; execute the plan under a congestion factor."""
-        if self._needs_plan:
+        if self.events.replan_pending():
             self.replan()
         dt = self.forecast.slot_seconds
         j = self.slot
@@ -626,9 +720,11 @@ class TransferManager:
             t.remaining_bits -= moved
             if t.remaining_bits <= 1.0:
                 t.done_slot = j
+                self.events.post(ev.CompletionEvent(j, rid=t.request_id))
             elif achieved < rho * (1.0 - self.drift_tol):
                 drifted = True
         self.slot += 1
+        self.state.bump()
         recover_replan = self._maybe_recover() if self.recovery else False
         # Replan only once the link has (mostly) recovered: during a uniform
         # congestion incident shifting work to other still-congested slots
@@ -640,6 +736,7 @@ class TransferManager:
         if recover_replan and self.replan_on_drift:
             self._try_replan()
         elif drifted and self.replan_on_drift and congestion >= 0.7:
+            self.events.post(ev.DriftEvent(self.slot))
             if self.recovery:
                 self._try_replan()
             else:
@@ -661,8 +758,17 @@ class TransferManager:
         unhealthy links (over ``Topology.alternates``) and escalate
         transfers whose residual SLA slack dropped below the feasible-rate
         floor to deadline panic.  Returns True when a replan is warranted.
+        Each action (and every link health transition) posts its typed
+        event for the audit trail.
         """
         bad = self.link_health.unhealthy_links()
+        for link in bad - self._unhealthy_prev:
+            self.events.post(ev.LinkHealthEvent(self.slot, link=link,
+                                                healthy=False))
+        for link in self._unhealthy_prev - bad:
+            self.events.post(ev.LinkHealthEvent(self.slot, link=link,
+                                                healthy=True))
+        self._unhealthy_prev = set(bad)
         dt = self.forecast.slot_seconds
         rate_cap_bps = self.power.rate_cap_gbps(self.capacity_gbps) * GBPS
         spatial = isinstance(self.policy, api.SpatialPolicy)
@@ -683,6 +789,8 @@ class TransferManager:
                         t.reroutes += 1
                         self.reroutes += 1
                         need_replan = True
+                        self.events.post(ev.RerouteEvent(
+                            self.slot, rid=t.request_id, path=cand))
                     break
             # Deadline panic: the catch-up rate the SLA now requires is at
             # (or beyond) the feasible-rate floor — carbon-aware scheduling
@@ -692,6 +800,7 @@ class TransferManager:
             if not t.panic and needed_bps >= self.PANIC_FRAC * rate_cap_bps:
                 t.panic = True
                 need_replan = True
+                self.events.post(ev.PanicEvent(self.slot, rid=t.request_id))
         return need_replan
 
     def run_until_idle(self, max_slots: int | None = None,
@@ -724,6 +833,9 @@ class TransferManager:
             "panics": sum(t.panic for t in self.transfers.values()),
             "replan_failures": self.replan_failures,
             "solver_status": dict(self.solver_status_counts),
+            # Online-replanning telemetry (DESIGN.md §13): per-replan
+            # wall-clock p50/p99, warm vs cold counts, events coalesced.
+            "replans": self.planner.telemetry.summary(),
         }
 
 
@@ -739,10 +851,16 @@ class CheckpointReplicator:
         self.requests: list[str] = []
 
     def __call__(self, step: int, nbytes: int) -> None:
-        for dst in self.replicas:
-            rid = self.manager.enqueue(
-                size_gb=nbytes / 1e9, src=self.src, dst=dst,
-                deadline_slots=self.deadline_slots,
-                request_id=f"ckpt-{step:08d}-{dst}",
-            )
-            self.requests.append(rid)
+        # One commit -> one arrival event covering every replica (a single
+        # replan), instead of one event per destination.
+        rids = self.manager.enqueue_many([
+            {
+                "size_gb": nbytes / 1e9,
+                "src": self.src,
+                "dst": dst,
+                "deadline_slots": self.deadline_slots,
+                "request_id": f"ckpt-{step:08d}-{dst}",
+            }
+            for dst in self.replicas
+        ])
+        self.requests.extend(rids)

@@ -1,0 +1,226 @@
+"""Incremental planner: warm-started replans for the online engine.
+
+DESIGN.md §13.  The :class:`IncrementalPlanner` sits between the
+:class:`~repro.transfer.manager.TransferManager` and the Policy API: it
+remembers the previous solve's raw LP iterate (primal throughput rows plus
+normalized byte duals, harvested from ``meta["warm_state"]``), maps those
+rows onto the next revised problem by request id — arrivals get zero rows,
+departures drop theirs, forecast revisions keep everything — and calls the
+policy's ``plan_incremental`` hook so PDHG resumes from ``x0``/``u0``
+instead of from cold.  Because :func:`~repro.core.problem.build_problem`
+lays out full-horizon tensors with offset masking, slot columns never
+shift between replans; expired-slot mass is clipped away by the solver's
+box projection, and the bucket padding in ``lints._solve_incremental``
+keeps consecutive replans on one jitted shape.
+
+Policies without the hook (minimal third-party implementations) fall back
+to a cold ``plan`` call; LinTS policies route through
+:func:`~repro.core.api.resilient_solve`'s ladder, where the warm resume is
+the leading rung and the cold solve its automatic fallback.
+
+Telemetry (per-replan wall-clock, warm vs cold counts, events coalesced
+per replan) accumulates in :class:`ReplanTelemetry` and surfaces through
+``TransferManager.report()``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import numpy as np
+
+from ..core import api
+from ..core.plan import Plan
+from ..core.problem import ScheduleProblem
+
+
+def _percentile(samples: Sequence[float], q: float) -> float:
+    if not samples:
+        return float("nan")
+    return float(np.percentile(np.asarray(samples, dtype=np.float64), q))
+
+
+def greedy_fill_rows(problem: ScheduleProblem, x: np.ndarray,
+                     rows: Sequence[int],
+                     u: np.ndarray | None = None,
+                     v: np.ndarray | None = None) -> None:
+    """Seed newly arrived job rows with a greedy primal (and dual) guess.
+
+    A zero row for an arrival leaves its whole byte constraint violated, so
+    PDHG spends restart windows just pushing mass into the row.  Instead:
+    cheapest allowed slots first, at most the per-job rate cap, never past
+    the residual link capacity left by the carried-over rows.  When the
+    previous capacity duals ``v`` are available, the row's byte dual
+    ``u[k]`` is set to the reduced-cost threshold of its greedy slots —
+    ``max_j(c_kj/scale + v_j)``, the complementary-slackness value a
+    marginal row must reach before any mass flows — which is what turns a
+    single-arrival resume into roughly one restart window instead of
+    re-deriving the dual from zero.  The fill only sets the *starting*
+    iterate; the solver still converges to (and certifies) its own
+    optimum.  Mutates ``x`` (and ``u``) in place; rows the residual
+    capacity cannot fully cover stay partial.
+    """
+    free = np.maximum(problem.capacity_bps - x.sum(axis=0), 0.0)
+    # Same cost normalization as pdhg.normalize_problem (padding adds only
+    # masked-off cells, so the scale is identical on the padded problem).
+    scale = float(np.abs(problem.cost[problem.mask]).mean()) or 1.0
+    for k in rows:
+        need = float(problem.size_bits[k]) / problem.slot_seconds
+        cap = np.where(problem.mask[k],
+                       np.minimum(problem.rate_cap_bps, free), 0.0)
+        order = np.argsort(np.where(problem.mask[k], problem.cost[k],
+                                    np.inf), kind="stable")
+        got = 0.0
+        for j in order:
+            if got >= need:
+                break
+            take = min(cap[j], need - got)
+            if take <= 0.0:
+                continue
+            x[k, j] = take
+            free[j] -= take
+            got += take
+        if u is not None and v is not None:
+            used = x[k] > 0.0
+            if used.any():
+                u[k] = max(0.0, float(
+                    np.max(problem.cost[k][used] / scale + v[used])))
+
+
+class ReplanTelemetry:
+    """Latency/coalescing accounting for the online replanner."""
+
+    def __init__(self) -> None:
+        self.samples_ms: list[float] = []
+        self.warm = 0
+        self.cold = 0
+        self.events_coalesced: list[int] = []
+
+    @property
+    def count(self) -> int:
+        return len(self.samples_ms)
+
+    def record(self, elapsed_ms: float, *, warm: bool,
+               events: int = 0) -> None:
+        self.samples_ms.append(float(elapsed_ms))
+        if warm:
+            self.warm += 1
+        else:
+            self.cold += 1
+        self.events_coalesced.append(int(events))
+
+    def summary(self) -> dict:
+        """Shape-stable report block (NaNs before the first replan)."""
+        return {
+            "count": self.count,
+            "warm": self.warm,
+            "cold": self.cold,
+            "latency_ms_p50": _percentile(self.samples_ms, 50),
+            "latency_ms_p99": _percentile(self.samples_ms, 99),
+            "events_coalesced_mean": (
+                float(np.mean(self.events_coalesced))
+                if self.events_coalesced else float("nan")
+            ),
+        }
+
+
+class IncrementalPlanner:
+    """Warm-start bookkeeping + one ``plan_incremental`` dispatch per replan.
+
+    The planner is deliberately stateless about the *workload* — the
+    manager owns transfers and builds problems — and stateful only about
+    the previous solve: the rid-aligned iterate a warm start maps from.
+    """
+
+    def __init__(self, policy: api.Policy) -> None:
+        self.policy = policy
+        self.telemetry = ReplanTelemetry()
+        self._rids: tuple[str, ...] | None = None
+        self._x_bps: np.ndarray | None = None   # (n_prev, n_slots) raw LP rho
+        self._u: np.ndarray | None = None       # (n_prev,) normalized duals
+        self._v: np.ndarray | None = None       # (n_slots,) capacity duals
+
+    def invalidate(self) -> None:
+        """Drop warm state (e.g. topology change): next solve runs cold."""
+        self._rids = None
+        self._x_bps = None
+        self._u = None
+        self._v = None
+
+    @property
+    def has_state(self) -> bool:
+        return self._x_bps is not None
+
+    def warm_for(self, rids: Sequence[str],
+                 problem: ScheduleProblem) -> api.WarmStart | None:
+        """Map the previous iterate onto ``problem``'s job rows, or None.
+
+        Rows follow request ids: surviving transfers carry their primal
+        row and byte dual over, arrivals start from zero rows (their duals
+        activate within a few restart windows), departures simply drop.
+        A horizon change (different ``n_slots``) invalidates everything —
+        slot columns would no longer line up.
+        """
+        if self._x_bps is None or self._rids is None:
+            return None
+        if self._x_bps.shape[1] != problem.n_slots:
+            return None
+        index = {rid: i for i, rid in enumerate(self._rids)}
+        x = np.zeros((len(rids), problem.n_slots), dtype=np.float64)
+        u = (np.zeros(len(rids), dtype=np.float64)
+             if self._u is not None else None)
+        hits = 0
+        fresh: list[int] = []
+        for k, rid in enumerate(rids):
+            i = index.get(rid)
+            if i is None:
+                fresh.append(k)
+                continue
+            hits += 1
+            x[k] = self._x_bps[i]
+            if u is not None:
+                u[k] = self._u[i]
+        if hits == 0:
+            return None
+        v = (self._v if self._v is not None
+             and self._v.shape[0] == problem.n_slots else None)
+        greedy_fill_rows(problem, x, fresh, u=u, v=v)
+        return api.WarmStart(x0_bps=x, u0=u, v0=v)
+
+    def plan(self, problem: ScheduleProblem, rids: Sequence[str], *,
+             inject: Any = None, resilient: bool = True) -> Plan:
+        """One replan: warm when possible, cold otherwise; harvests the
+        returned iterate as the next warm state either way."""
+        rids = tuple(rids)
+        hook = getattr(self.policy, "plan_incremental", None)
+        if hook is None:
+            plan = self.policy.plan(problem)
+            plan.meta.setdefault("warm_started", False)
+        else:
+            warm = self.warm_for(rids, problem)
+            plan = hook(problem, warm, inject=inject, resilient=resilient)
+        self._harvest(plan, rids)
+        return plan
+
+    def _harvest(self, plan: Plan, rids: tuple[str, ...]) -> None:
+        """Stash the solve's iterate for the next warm start.
+
+        ``meta["warm_state"]`` (raw pre-rounding LP iterate + byte duals)
+        is popped off the plan so the big arrays don't ride along into
+        reports; solves without one — scipy, heuristics, ladder fallback
+        rungs — seed the next warm start from the shipped plan itself
+        (primal only).  PDHG converges from any feasible box point, so a
+        post-fault warm start still lands on the same optimum.
+        """
+        ws = plan.meta.pop("warm_state", None)
+        if ws is not None:
+            self._x_bps = np.asarray(ws["x_bps"], dtype=np.float64)
+            self._u = np.asarray(ws["u"], dtype=np.float64)
+            v = ws.get("v")
+            self._v = (np.asarray(v, dtype=np.float64)
+                       if v is not None else None)
+        else:
+            self._x_bps = np.asarray(plan.rho_bps, dtype=np.float64).copy()
+            self._u = None
+            self._v = None
+        self._rids = rids

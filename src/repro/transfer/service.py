@@ -1,0 +1,197 @@
+"""Service facade over the online transfer engine (DESIGN.md §13).
+
+:class:`TransferService` turns a :class:`~repro.transfer.manager
+.TransferManager` into something a dataplane can actually call into:
+
+* **synchronous reads**: :meth:`snapshot` / :meth:`rate` return the latest
+  *immutable* :class:`~repro.transfer.events.ScheduleSnapshot` with one
+  lock-free attribute read.  Snapshots are built under the service lock
+  and published by a single reference swap, so readers never observe a
+  half-applied replan — they just read the previous schedule until the
+  next one lands atomically.
+* **asynchronous replanning**: a background worker (:meth:`start`) wakes
+  on demand, debounces bursty arrivals (``debounce_s``: wait for the wave
+  to quiet before solving once), drains/coalesces the event queue through
+  ``manager.replan()``, and publishes the fresh snapshot.  Without the
+  worker, :meth:`pump` does the same replan-and-publish inline.
+* **admission control**: :meth:`submit` / :meth:`submit_many` reject work
+  past ``max_pending`` with :class:`AdmissionError` instead of letting an
+  arrival storm grow the LP without bound; accepted/rejected counts land
+  in :meth:`stats`.
+
+The manager itself stays single-threaded in spirit: every mutation —
+submit, tick, replan — runs under one re-entrant lock, and the only thing
+that escapes the lock is the immutable snapshot.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Sequence
+
+from .events import ScheduleSnapshot
+from .manager import TransferManager
+
+
+class AdmissionError(RuntimeError):
+    """Raised when admission control rejects a submit (queue at capacity)."""
+
+
+class TransferService:
+    """Snapshot-serving, optionally threaded wrapper around the manager."""
+
+    def __init__(self, manager: TransferManager, *,
+                 max_pending: int | None = None,
+                 debounce_s: float = 0.0):
+        self.manager = manager
+        self.max_pending = max_pending
+        self.debounce_s = float(debounce_s)
+        self._lock = threading.RLock()
+        self._wake = threading.Condition(self._lock)
+        self._worker: threading.Thread | None = None
+        self._stop = False
+        self.admitted = 0
+        self.rejected = 0
+        self._snapshot = manager.state.snapshot(manager.policy.name)
+
+    # ------------------------------------------------------------- reads
+    def snapshot(self) -> ScheduleSnapshot:
+        """Latest published schedule (lock-free: one reference read)."""
+        return self._snapshot
+
+    def rate(self, rid: str, slot: int | None = None) -> float:
+        """Planned bps for ``rid`` right now (or at ``slot``) — the one
+        number a dataplane polls per transfer per slot."""
+        return self._snapshot.rate(rid, slot)
+
+    def stats(self) -> dict:
+        """Admission + queue counters (snapshot-consistent best effort)."""
+        return {
+            "admitted": self.admitted,
+            "rejected": self.rejected,
+            "pending": len(self._snapshot.pending),
+            "snapshot_version": self._snapshot.version,
+            "events_queued": len(self.manager.events),
+            "events_posted": self.manager.events.posted,
+        }
+
+    # ----------------------------------------------------------- writes
+    def _check_admission(self, n_new: int) -> None:
+        if self.max_pending is None:
+            return
+        backlog = len(self.manager.pending())
+        if backlog + n_new > self.max_pending:
+            self.rejected += n_new
+            raise AdmissionError(
+                f"admission control: {backlog} pending + {n_new} new "
+                f"> max_pending={self.max_pending}")
+
+    def submit(self, size_gb: float, src: str, dst: str,
+               deadline_slots: int, request_id: str | None = None) -> str:
+        """Admit one transfer; wakes the replan worker (if running)."""
+        with self._lock:
+            self._check_admission(1)
+            rid = self.manager.enqueue(size_gb, src, dst, deadline_slots,
+                                       request_id)
+            self.admitted += 1
+            self._wake.notify_all()
+        return rid
+
+    def submit_many(self, requests: Sequence[tuple | dict]) -> list[str]:
+        """Admit a batch as ONE arrival event (one replan for the burst)."""
+        with self._lock:
+            self._check_admission(len(requests))
+            rids = self.manager.enqueue_many(requests)
+            self.admitted += len(rids)
+            self._wake.notify_all()
+        return rids
+
+    def pump(self) -> ScheduleSnapshot:
+        """Inline replan-if-dirty + publish; returns the fresh snapshot.
+
+        The synchronous path for callers that don't run the worker thread
+        (benchmarks, tests, single-threaded simulations).
+        """
+        with self._lock:
+            if self.manager.events.replan_pending():
+                self.manager.replan()
+            return self._publish()
+
+    def tick(self, congestion: float = 1.0) -> ScheduleSnapshot:
+        """Advance the engine one slot under the lock and publish."""
+        with self._lock:
+            self.manager.tick(congestion=congestion)
+            return self._publish()
+
+    def _publish(self) -> ScheduleSnapshot:
+        snap = self.manager.state.snapshot(self.manager.policy.name)
+        self._snapshot = snap   # atomic reference swap
+        return snap
+
+    # ----------------------------------------------------------- worker
+    def start(self) -> None:
+        """Start the asynchronous replan worker (idempotent)."""
+        with self._lock:
+            if self._worker is not None and self._worker.is_alive():
+                return
+            self._stop = False
+            self._worker = threading.Thread(
+                target=self._run, name="transfer-replan", daemon=True)
+            self._worker.start()
+
+    def stop(self) -> None:
+        """Stop the worker; outstanding dirty events are flushed first."""
+        with self._lock:
+            self._stop = True
+            self._wake.notify_all()
+        if self._worker is not None:
+            self._worker.join(timeout=30.0)
+            self._worker = None
+        self.pump()   # leave no dirty event behind
+
+    def quiesce(self, timeout: float = 30.0) -> ScheduleSnapshot:
+        """Block until the queue holds no dirty event, then return the
+        latest snapshot (used by tests and orderly shutdown)."""
+        deadline = threading.Event()
+        end = threading.Timer(timeout, deadline.set)
+        end.start()
+        try:
+            while not deadline.is_set():
+                with self._lock:
+                    if not self.manager.events.replan_pending():
+                        return self._snapshot
+                    if self._worker is None or not self._worker.is_alive():
+                        # No worker to wait for — flush inline.
+                        self.manager.replan()
+                        return self._publish()
+                    self._wake.notify_all()
+                deadline.wait(0.005)
+            raise TimeoutError("quiesce: replan queue still dirty")
+        finally:
+            end.cancel()
+
+    def _run(self) -> None:
+        while True:
+            with self._wake:
+                while not self._stop \
+                        and not self.manager.events.replan_pending():
+                    self._wake.wait(timeout=0.25)
+                if self._stop:
+                    return
+            # Debounce: let a burst of arrivals pile onto the queue so the
+            # drain coalesces them into one solve.  Sleeping OUTSIDE the
+            # lock is the point — submitters keep posting meanwhile.
+            if self.debounce_s > 0.0:
+                threading.Event().wait(self.debounce_s)
+            with self._lock:
+                if self._stop:
+                    return
+                if self.manager.events.replan_pending():
+                    try:
+                        self.manager.replan()
+                    except Exception:
+                        # The engine's own backoff/accounting covers solver
+                        # failure; the worker must survive to serve reads.
+                        pass
+                self._publish()
+                self._wake.notify_all()

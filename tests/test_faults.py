@@ -309,7 +309,13 @@ def test_engine_chaos_run_is_reproducible():
         tm.enqueue(600.0, "a", "b", 40)
         tm.enqueue(100.0, "a", "b", 30)
         tm.run_until_idle()
-        return tm.report()
+        rep = tm.report()
+        # Replan wall-clock percentiles are real time, not engine state —
+        # drop them; the deterministic telemetry (warm/cold/coalescing
+        # counts) stays in the comparison.
+        rep["replans"] = {k: v for k, v in rep["replans"].items()
+                          if not k.startswith("latency_ms")}
+        return rep
 
     assert run() == run()
 

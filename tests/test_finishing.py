@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from conftest import random_problem
-from repro.core import finishing, lints
+from repro.core import api, finishing, lints
 from repro.core.feasibility import (
     check_plan,
     check_plan_batch,
@@ -201,7 +201,7 @@ def test_solve_batch_routes_through_batched_finishing(paper_traces):
         refine=True,
     )
     assert cfg.finishing == "batched"   # the default fleet path
-    plans = lints.solve_batch(probs, cfg)
+    plans = api.get_policy("lints_pdhg", config=cfg).plan_batch(probs)
     for p, plan in zip(probs, plans):
         assert plan.meta["finishing"] == "batched"
         assert plan.algorithm == "lints+"

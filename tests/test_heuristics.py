@@ -11,7 +11,7 @@ pytest.importorskip("hypothesis")  # optional test dep: skip module cleanly when
 from hypothesis import given, settings, strategies as st
 
 from conftest import random_problem
-from repro.core import heuristics, lints
+from repro.core import api, heuristics, lints
 from repro.core.feasibility import check_plan, workload_feasible
 from repro.core.simulator import evaluate_plan
 
@@ -32,7 +32,8 @@ RAW_LP = lints.LinTSConfig(vertex_round=False)  # LP-optimality asserts use
 
 
 def test_lints_objective_dominates_heuristics(small_problem):
-    best = lints.solve(small_problem, RAW_LP).objective(small_problem)
+    best = api.get_policy("lints", config=RAW_LP).plan(
+        small_problem).objective(small_problem)
     for name, fn in heuristics.HEURISTICS.items():
         obj = fn(small_problem).objective(small_problem)
         assert best <= obj * (1 + 1e-9) + 1e-6, name
@@ -47,7 +48,8 @@ def test_worst_case_is_worst(small_problem):
             small_problem, heuristics.HEURISTICS[name](small_problem)
         ).total_gco2
         assert worst >= e * 0.999, name
-    lints_e = evaluate_plan(small_problem, lints.solve(small_problem)).total_gco2
+    lints_e = evaluate_plan(
+        small_problem, api.get_policy("lints").plan(small_problem)).total_gco2
     assert worst > lints_e
 
 
@@ -117,7 +119,7 @@ def test_property_all_algorithms_feasible_and_ordered(seed):
     if not ok:
         return
     try:
-        lp_obj = lints.solve(prob, RAW_LP).objective(prob)
+        lp_obj = api.get_policy("lints", config=RAW_LP).plan(prob).objective(prob)
     except lints.InfeasibleError:
         return  # workload_feasible is necessary, not sufficient
     for name, fn in heuristics.HEURISTICS.items():
@@ -157,6 +159,6 @@ def test_property_wider_deadlines_never_hurt(seed):
     relaxed = dataclasses.replace(
         relaxed, cost=np.where(relaxed_mask, base_row[None, :], 0.0)
     )
-    tight_obj = lints.solve(prob).objective(prob)
-    relax_obj = lints.solve(relaxed).objective(relaxed)
+    tight_obj = api.get_policy("lints").plan(prob).objective(prob)
+    relax_obj = api.get_policy("lints").plan(relaxed).objective(relaxed)
     assert relax_obj <= tight_obj * (1 + 1e-7) + 1e-6

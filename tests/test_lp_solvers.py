@@ -12,7 +12,7 @@ pytest.importorskip("hypothesis")  # optional test dep: skip module cleanly when
 from hypothesis import given, settings, strategies as st
 
 from conftest import random_problem
-from repro.core import lints
+from repro.core import api, lints
 from repro.core.feasibility import check_plan, workload_feasible
 from repro.core.pdhg import PDHGConfig, normalize_problem, pdhg_solve, solve_pdhg, vertex_round
 from repro.core.scipy_backend import solve_scipy
@@ -70,8 +70,9 @@ def test_pdhg_kernel_path_matches_jnp_path(small_problem):
 
 
 def test_lints_api_backends_agree(small_problem):
-    sp = lints.solve(small_problem, lints.LinTSConfig(backend="scipy"))
-    pd = lints.solve(small_problem, lints.LinTSConfig(backend="pdhg", pdhg=PD_CFG))
+    sp = api.get_policy("lints").plan(small_problem)
+    pd = api.get_policy("lints_pdhg", config=lints.LinTSConfig(
+        backend="pdhg", pdhg=PD_CFG)).plan(small_problem)
     assert pd.objective(small_problem) <= sp.objective(small_problem) * 1.02
 
 
@@ -82,7 +83,7 @@ def test_infeasible_workload_raises(paper_traces):
                             path=("US-NM",), request_id="huge")]
     prob = lints.build(reqs, paper_traces, capacity_gbps=0.25)
     with pytest.raises(lints.InfeasibleError):
-        lints.solve(prob)
+        api.get_policy("lints").plan(prob)
 
 
 def test_batched_pdhg_solves_multiple_problems(paper_traces):

@@ -1,0 +1,393 @@
+"""Online scheduling service: events, warm-started replans, service facade.
+
+DESIGN.md §13.  The load-bearing guarantee is warm-start *parity*: an
+incremental replan (resumed from the previous solve's primal/dual
+iterates) must land on the same objective as a cold solve to ≤ 1e-6
+relative — across arrival/completion/forecast-revision deltas, across
+ragged bucket boundaries, and after a solver-fault ladder rung.  The
+benchmarks (``benchmarks/online.py``) assert the same gate at scale.
+"""
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api, lints
+from repro.core.faults import FaultSchedule, SolverFault
+from repro.core.pdhg import PDHGConfig
+from repro.core.problem import TransferRequest, build_problem
+from repro.core.trace import make_trace_set
+from repro.transfer import (
+    AdmissionError,
+    Datacenter,
+    Topology,
+    TransferManager,
+    TransferService,
+)
+from repro.transfer import events as ev
+from repro.transfer.planner import IncrementalPlanner, ReplanTelemetry
+
+ZONES = ("US-NM", "US-WY", "US-SC")
+
+# f64 + tight tol so the 1e-6 parity bound measures the solver, not float
+# noise; no rounding so objectives compare exactly.
+CFG = lints.LinTSConfig(
+    backend="pdhg", vertex_round=False, refine=False,
+    pdhg=PDHGConfig(dtype=jnp.float64, tol=1e-7, max_iters=60_000,
+                    check_every=100),
+)
+
+
+@pytest.fixture(autouse=True)
+def _x64():
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        yield
+
+
+def _traces(hours=24, seed=0):
+    return make_trace_set(ZONES, hours=hours, seed=seed)
+
+
+def _problem(n_jobs, traces, *, offset=0, seed=0, skip=()):
+    rng = np.random.default_rng(seed)
+    sizes = rng.uniform(2.0, 8.0, size=n_jobs)
+    reqs = [
+        TransferRequest(size_gb=float(sizes[i]),
+                        deadline_slots=traces.n_slots,
+                        offset_slots=offset,
+                        path=ZONES, request_id=f"job-{i}")
+        for i in range(n_jobs) if i not in skip
+    ]
+    return build_problem(reqs, traces, 2.0)
+
+
+def _rids(problem_n, skip=()):
+    return [f"job-{i}" for i in range(problem_n) if i not in skip]
+
+
+def _parity(plan_a, plan_b, tol=1e-6):
+    a, b = plan_a.meta["objective"], plan_b.meta["objective"]
+    assert abs(a - b) / max(abs(b), 1e-30) <= tol
+
+
+# ---------------------------------------------------------------------------
+# Warm-start correctness
+# ---------------------------------------------------------------------------
+
+def test_warm_after_arrival_matches_cold():
+    traces = _traces()
+    planner = IncrementalPlanner(api.get_policy("lints_pdhg", config=CFG))
+    p0 = _problem(4, traces)
+    planner.plan(p0, _rids(4), resilient=False)
+    p1 = _problem(5, traces)      # one arrival, same 4->8 job bucket
+    warm = planner.plan(p1, _rids(5), resilient=False)
+    assert warm.meta["warm_started"]
+    cold = lints._solve_incremental(p1, CFG)
+    _parity(warm, cold)
+
+
+def test_warm_after_completion_matches_cold():
+    traces = _traces()
+    planner = IncrementalPlanner(api.get_policy("lints_pdhg", config=CFG))
+    planner.plan(_problem(5, traces), _rids(5), resilient=False)
+    p1 = _problem(5, traces, skip=(2,))   # one departure drops its row
+    warm = planner.plan(p1, _rids(5, skip=(2,)), resilient=False)
+    assert warm.meta["warm_started"]
+    _parity(warm, lints._solve_incremental(p1, CFG))
+
+
+def test_warm_after_forecast_revision_matches_cold():
+    traces = _traces()
+    planner = IncrementalPlanner(api.get_policy("lints_pdhg", config=CFG))
+    planner.plan(_problem(4, traces), _rids(4), resilient=False)
+    p1 = _problem(4, _traces(seed=3))     # revised costs, same rows
+    warm = planner.plan(p1, _rids(4), resilient=False)
+    assert warm.meta["warm_started"]
+    _parity(warm, lints._solve_incremental(p1, CFG))
+
+
+def test_warm_across_bucket_boundary_matches_cold():
+    """4 jobs buckets to 4 rows; the 5th crosses to the 8-row bucket —
+    the warm rows must survive the re-pad."""
+    traces = _traces()
+    from repro.core import ragged
+
+    assert ragged.bucket_shape(4, traces.n_slots)[0] == 4
+    assert ragged.bucket_shape(5, traces.n_slots)[0] == 8
+    planner = IncrementalPlanner(api.get_policy("lints_pdhg", config=CFG))
+    planner.plan(_problem(4, traces), _rids(4), resilient=False)
+    p1 = _problem(5, traces)
+    warm = planner.plan(p1, _rids(5), resilient=False)
+    assert warm.meta["warm_started"]
+    assert tuple(warm.meta["bucket_shape"])[0] == 8
+    _parity(warm, lints._solve_incremental(p1, CFG))
+
+
+def test_warm_after_solver_fault_rung_matches_cold():
+    """rungs=1 poisons only the warm resume: the ladder falls back to the
+    cold pdhg rung, and the NEXT warm replan (seeded from the fallback
+    plan) still matches the cold solve."""
+    traces = _traces()
+    planner = IncrementalPlanner(api.get_policy("lints_pdhg", config=CFG))
+    planner.plan(_problem(4, traces), _rids(4), resilient=False)
+    p1 = _problem(5, traces)
+    fault = SolverFault(solve_index=0, mode="nan", rungs=1)
+    plan = planner.plan(p1, _rids(5), inject=fault, resilient=True)
+    assert plan.meta["solver_status"] == "pdhg"   # warm rung was poisoned
+    p2 = _problem(6, traces)
+    warm = planner.plan(p2, _rids(6), resilient=False)
+    assert warm.meta["warm_started"]              # reseeded from fallback
+    _parity(warm, lints._solve_incremental(p2, CFG))
+
+
+def test_resilient_warm_rung_reports_status():
+    traces = _traces()
+    p0 = _problem(4, traces)
+    prev = lints._solve_incremental(p0, CFG)
+    ws = prev.meta["warm_state"]
+    plan = api.resilient_solve(
+        p0, CFG, warm=api.WarmStart(x0_bps=ws["x_bps"], u0=ws["u"],
+                                    v0=ws["v"]))
+    assert plan.meta["solver_status"] == "pdhg-warm"
+    assert plan.meta["warm_started"]
+    _parity(plan, prev)
+
+
+# ---------------------------------------------------------------------------
+# Event queue + coalescing
+# ---------------------------------------------------------------------------
+
+def test_event_queue_dirty_tracking():
+    q = ev.EventQueue()
+    assert not q.replan_pending()
+    q.post(ev.CompletionEvent(0, rid="a"))
+    assert not q.replan_pending()      # informational events don't dirty
+    q.post(ev.ArrivalEvent(0, rids=("b",)))
+    assert q.replan_pending()
+    q.discard_dirty()
+    assert not q.replan_pending()
+    assert len(q) == 1                 # completion survived the discard
+    events = q.drain()
+    assert len(events) == 1 and isinstance(events[0], ev.CompletionEvent)
+    assert len(q) == 0
+
+
+def test_coalesce_folds_burst_into_one_delta():
+    events = [
+        ev.ArrivalEvent(0, rids=("a", "b")),
+        ev.ArrivalEvent(0, rids=("c",)),
+        ev.CompletionEvent(1, rid="z"),
+        ev.ForecastRevisionEvent(1, zones=("US-NM",)),
+        ev.DriftEvent(2),
+    ]
+    delta = ev.coalesce(events)
+    assert delta.arrived == ("a", "b", "c")
+    assert delta.completed == ("z",)
+    assert delta.forecast_revised and delta.drift
+    assert delta.n_events == 5 and delta.n_dirty == 3
+
+
+def _manager(policy="lints", **kw):
+    traces = _traces(hours=72)
+    topo = Topology(
+        datacenters=(Datacenter("a", ZONES[0]), Datacenter("b", ZONES[-1])),
+        routes={("a", "b"): ZONES, ("b", "a"): ZONES[::-1]},
+    )
+    config = (lints.LinTSConfig(backend="scipy")
+              if policy == "lints" else None)
+    return TransferManager(topo, traces, capacity_gbps=1.0,
+                           policy=policy, config=config, **kw)
+
+
+def test_enqueue_many_one_event_one_replan():
+    tm = _manager()
+    rids = tm.enqueue_many([
+        (5.0, "a", "b", 96),
+        {"size_gb": 2.0, "src": "a", "dst": "b", "deadline_slots": 48,
+         "request_id": "named"},
+    ])
+    assert rids[1] == "named"
+    assert len(tm.events) == 1          # ONE ArrivalEvent for the batch
+    assert tm._needs_plan
+    tm.replan()
+    rep = tm.report()["replans"]
+    assert rep["count"] == 1
+    assert rep["events_coalesced_mean"] == 1.0
+    assert all(rid in tm._plan_rho for rid in rids)
+
+
+def test_needs_plan_setter_back_compat():
+    tm = _manager()
+    tm.enqueue(5.0, "a", "b", 96)
+    assert tm._needs_plan
+    tm._needs_plan = False              # old flag semantics must hold
+    assert not tm._needs_plan
+    tm._needs_plan = True
+    assert tm._needs_plan
+    tm.replan()
+    assert not tm._needs_plan
+
+
+def test_revise_forecast_marks_dirty_and_requires_same_grid():
+    tm = _manager()
+    tm.enqueue(5.0, "a", "b", 96)
+    tm.replan()
+    assert not tm._needs_plan
+    tm.revise_forecast(_traces(hours=72, seed=9), zones=ZONES)
+    assert tm._needs_plan
+    with pytest.raises(ValueError):
+        tm.revise_forecast(_traces(hours=24, seed=9))
+
+
+def test_manager_warm_replans_with_pdhg_policy():
+    tm = _manager(policy="lints_pdhg")
+    tm.enqueue_many([(3.0, "a", "b", 200), (4.0, "a", "b", 220)])
+    tm.replan()
+    tm.enqueue(2.0, "a", "b", 180)
+    tm.replan()
+    rep = tm.report()["replans"]
+    assert rep["count"] == 2
+    assert rep["cold"] >= 1 and rep["warm"] >= 1
+    assert np.isfinite(rep["latency_ms_p50"])
+    assert np.isfinite(rep["latency_ms_p99"])
+
+
+def test_telemetry_summary_shape_stable():
+    t = ReplanTelemetry()
+    s = t.summary()
+    assert s["count"] == 0 and np.isnan(s["latency_ms_p50"])
+    t.record(3.0, warm=True, events=4)
+    s = t.summary()
+    assert s == {"count": 1, "warm": 1, "cold": 0, "latency_ms_p50": 3.0,
+                 "latency_ms_p99": 3.0, "events_coalesced_mean": 4.0}
+
+
+# ---------------------------------------------------------------------------
+# Service facade
+# ---------------------------------------------------------------------------
+
+def test_service_snapshot_immutable_and_versioned():
+    svc = TransferService(_manager())
+    rid = svc.submit(5.0, "a", "b", 96)
+    v0 = svc.snapshot().version
+    snap = svc.pump()
+    assert snap.version > v0
+    assert svc.rate(rid, 0) == snap.rate(rid, 0)
+    assert snap.rate("unknown-rid") == 0.0
+    assert snap.rate(rid, 10_000) == 0.0
+    with pytest.raises(ValueError):
+        snap.rates_bps[rid][0] = 1.0          # arrays are non-writeable
+    with pytest.raises(TypeError):
+        snap.rates_bps["x"] = np.zeros(3)     # mapping proxy is read-only
+
+
+def test_service_admission_control():
+    svc = TransferService(_manager(), max_pending=2)
+    svc.submit(1.0, "a", "b", 96)
+    svc.submit(1.0, "a", "b", 96)
+    with pytest.raises(AdmissionError):
+        svc.submit(1.0, "a", "b", 96)
+    with pytest.raises(AdmissionError):
+        svc.submit_many([(1.0, "a", "b", 96), (1.0, "a", "b", 96)])
+    stats = svc.stats()
+    assert stats["admitted"] == 2 and stats["rejected"] == 3
+
+
+def test_service_worker_debounces_burst():
+    tm = _manager()
+    svc = TransferService(tm, debounce_s=0.05)
+    svc.start()
+    try:
+        for i in range(6):
+            svc.submit(1.0 + i, "a", "b", 96)
+        snap = svc.quiesce()
+        assert snap.version > 0
+        rep = tm.report()["replans"]
+        # Debouncing coalesces the burst into far fewer solves than
+        # submissions (typically 1-2).
+        assert 1 <= rep["count"] <= 3
+        assert rep["events_coalesced_mean"] >= 2.0
+    finally:
+        svc.stop()
+
+
+def test_service_tick_publishes_and_completes():
+    svc = TransferService(_manager())
+    rid = svc.submit(5.0, "a", "b", 96)
+    for _ in range(96):
+        if not svc.manager.pending():
+            break
+        svc.tick()
+    t = svc.manager.transfers[rid]
+    assert t.done_slot is not None and not t.violated
+    assert rid not in svc.snapshot().pending
+
+
+def test_service_concurrent_submit_and_read():
+    svc = TransferService(_manager(), debounce_s=0.01)
+    svc.start()
+    errs = []
+
+    def reader():
+        try:
+            for _ in range(200):
+                snap = svc.snapshot()
+                for rid in snap.pending:
+                    snap.rate(rid)
+        except Exception as e:          # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=reader) for _ in range(2)]
+    for th in threads:
+        th.start()
+    try:
+        for i in range(8):
+            svc.submit(1.0, "a", "b", 96, request_id=f"r{i}")
+        svc.quiesce()
+    finally:
+        for th in threads:
+            th.join()
+        svc.stop()
+    assert not errs
+    assert svc.snapshot().version >= 1
+
+
+# ---------------------------------------------------------------------------
+# Event-driven chaos path (replayed by the chaos CI job)
+# ---------------------------------------------------------------------------
+
+def test_fault_events_flow_through_queue():
+    import os
+
+    seed = int(os.environ.get("REPRO_CHAOS_SEED", "1337"))
+    zones = ("US-NM", "US-WY", "US-SD", "US-CO")
+    primary = ("US-NM", "US-WY", "US-SD")
+    alternate = ("US-NM", "US-CO", "US-SD")
+    traces = make_trace_set(zones, hours=72, seed=0)
+    topo = Topology(
+        datacenters=(Datacenter("a", "US-NM"), Datacenter("b", "US-SD")),
+        routes={("a", "b"): primary},
+        alternates={("a", "b"): (alternate,)},
+    )
+    links = [tuple(sorted(p[i:i + 2]))
+             for p in (primary, alternate) for i in range(len(p) - 1)]
+    fs = FaultSchedule.chaos(seed, n_slots=48, links=links, zones=zones)
+    tm = TransferManager(topo, traces, capacity_gbps=1.0, policy="lints",
+                         config=lints.LinTSConfig(backend="scipy"),
+                         faults=fs)
+    tm.enqueue_many([(30.0, "a", "b", 60), (10.0, "a", "b", 40)])
+    for _ in range(60):
+        if not tm.pending():
+            break
+        tm.tick()
+    rep = tm.report()
+    # The engine survived the chaos schedule and kept its accounting.
+    assert rep["completed"] + rep["pending"] + rep["sla_violations"] >= 2
+    assert rep["replans"]["count"] >= 1
+    # Informational events ride the same queue as dirty ones — the queue
+    # never accumulates without bound (each replan drains everything).
+    assert tm.events.posted >= tm.events.drained

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import api
 from repro.core.pdhg import PDHGConfig, pdhg_solve, pdhg_solve_batch, solve_pdhg
 from repro.core.scipy_backend import solve_scipy
 from repro.kernels import ops, ref
@@ -206,7 +207,7 @@ def test_lints_solve_batch_fleet_api(small_problem):
         backend="pdhg",
         pdhg=PDHGConfig(max_iters=20_000, check_every=200, tol=2e-5,
                         use_kernel=False))
-    plans = lints.solve_batch(probs, cfg)
+    plans = api.get_policy("lints_pdhg", config=cfg).plan_batch(probs)
     assert len(plans) == 3
     for p, plan in zip(probs, plans):
         assert check_plan(p, plan.rho_bps).feasible
@@ -223,7 +224,7 @@ def test_lints_solve_batch_rejects_infeasible_workload(small_problem):
                             path=("US-NM",), request_id="huge")]
     bad = lints.build(reqs, traces, capacity_gbps=0.25)
     with pytest.raises(lints.InfeasibleError, match="workload 0 infeasible"):
-        lints.solve_batch([bad])
+        api.get_policy("lints_pdhg").plan_batch([bad])
 
 
 def test_lints_solve_batch_honors_refine(small_problem):
@@ -236,10 +237,10 @@ def test_lints_solve_batch_honors_refine(small_problem):
                          0.5) for s in range(2)]
     pd = PDHGConfig(max_iters=20_000, check_every=200, tol=2e-5,
                     use_kernel=False)
-    base = lints.solve_batch(probs, lints.LinTSConfig(backend="pdhg",
-                                                      pdhg=pd))
-    refined = lints.solve_batch(
-        probs, lints.LinTSConfig(backend="pdhg", pdhg=pd, refine=True))
+    base = api.get_policy("lints_pdhg", config=lints.LinTSConfig(
+        backend="pdhg", pdhg=pd)).plan_batch(probs)
+    refined = api.get_policy("lints_pdhg", config=lints.LinTSConfig(
+        backend="pdhg", pdhg=pd, refine=True)).plan_batch(probs)
     for p, b, r in zip(probs, base, refined):
         assert r.algorithm == "lints+"
         assert (evaluate_plan(p, r).total_gco2

@@ -7,8 +7,6 @@ everywhere, and per-problem meta (iterations/converged/batch_index)
 survives bucketing.
 """
 
-import warnings
-
 import numpy as np
 import pytest
 
@@ -89,9 +87,7 @@ def test_mixed_fleet_matches_per_problem_solve(fleet_and_plans):
     probs, plans = fleet_and_plans
     assert len({(p.n_jobs, p.n_slots) for p in probs}) >= 3
     for p, plan in zip(probs, plans):
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            solo = lints.solve(p, CFG)
+        solo = api.get_policy("lints_pdhg", config=CFG).plan(p)
         ref = solo.objective(p)
         assert plan.objective(p) == pytest.approx(ref, rel=1e-9)
         assert plan.rho_bps.shape == (p.n_jobs, p.n_slots)

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from conftest import random_problem
-from repro.core import heuristics, lints
+from repro.core import api, heuristics, lints
 from repro.core.feasibility import check_plan, workload_feasible
 from repro.core.plan import Plan
 from repro.core.refine import refine_plan, refine_plan_reference
@@ -25,7 +25,7 @@ needs_hypothesis = pytest.mark.skipif(
 
 
 def test_refine_stays_feasible_and_never_hurts(small_problem):
-    base = lints.solve(small_problem)
+    base = api.get_policy("lints").plan(small_problem)
     plus = refine_plan(small_problem, base)
     assert check_plan(small_problem, plus.rho_bps).feasible
     e0 = evaluate_plan(small_problem, base).total_gco2
@@ -39,7 +39,8 @@ def test_refine_beats_thresholds_on_paper_workload(paper_traces):
 
     reqs = paper_workload(n_jobs=60, seed=0)
     prob = build_problem(reqs, paper_traces, 0.5)
-    plus = lints.solve(prob, lints.LinTSConfig(refine=True))
+    plus = api.get_policy("lints", config=lints.LinTSConfig(
+        refine=True)).plan(prob)
     st_plan = heuristics.single_threshold(prob)
     e_plus = evaluate_plan(prob, plus).total_gco2
     e_st = evaluate_plan(prob, st_plan).total_gco2
@@ -47,7 +48,8 @@ def test_refine_beats_thresholds_on_paper_workload(paper_traces):
 
 
 def test_refine_concentrates_partial_cells(small_problem):
-    base = lints.solve(small_problem, lints.LinTSConfig(vertex_round=False))
+    base = api.get_policy("lints", config=lints.LinTSConfig(
+        vertex_round=False)).plan(small_problem)
     plus = refine_plan(small_problem, base)
     cap = small_problem.rate_cap_bps
 
@@ -60,7 +62,8 @@ def test_refine_concentrates_partial_cells(small_problem):
 
 def test_refine_vectorized_matches_loop_oracle(small_problem):
     """The array-op candidate walks reproduce the nested-loop oracle."""
-    base = lints.solve(small_problem, lints.LinTSConfig(vertex_round=False))
+    base = api.get_policy("lints", config=lints.LinTSConfig(
+        vertex_round=False)).plan(small_problem)
     a = refine_plan(small_problem, base)
     b = refine_plan_reference(small_problem, base)
     np.testing.assert_allclose(a.rho_bps, b.rho_bps, atol=1e-3)
@@ -77,7 +80,7 @@ def test_refine_vectorized_matches_loop_oracle_random():
         if not workload_feasible(prob)[0]:
             continue
         try:
-            base = lints.solve(prob)
+            base = api.get_policy("lints").plan(prob)
         except lints.InfeasibleError:
             continue
         a = refine_plan(prob, base)
@@ -87,7 +90,7 @@ def test_refine_vectorized_matches_loop_oracle_random():
 
 def test_refine_skips_zero_byte_jobs(small_problem):
     """A job with no bytes planned must stay empty and cost nothing."""
-    base = lints.solve(small_problem)
+    base = api.get_policy("lints").plan(small_problem)
     rho = np.array(base.rho_bps)
     rho[0] = 0.0
     plus = refine_plan(small_problem, Plan(rho, "lints"))
@@ -118,7 +121,7 @@ if _HAVE_HYPOTHESIS:
         if not workload_feasible(prob)[0]:
             return
         try:
-            base = lints.solve(prob)
+            base = api.get_policy("lints").plan(prob)
         except lints.InfeasibleError:
             return
         plus = refine_plan(prob, base)
