@@ -25,16 +25,21 @@ def paper_setup(n_jobs: int | None = None, seed: int = 0):
     return reqs, traces
 
 
-def paper_roster(backend: str = "scipy") -> list[api.Policy]:
+def paper_roster(backend: str = "scipy",
+                 include_robust: bool = False) -> list[api.Policy]:
     """The paper's §IV-A algorithm configurations as registry policies.
 
     Heuristics run best-effort: at 25% capacity the paper's own workload is
     deadline-infeasible for arrival-order scheduling (cf. the empty
     worst-case cell in its Table II); the reports carry sla_violations.
     LinTS itself is solved strictly — the LP is feasible at every capacity.
+
+    ``include_robust`` appends the beyond-paper scenario-robust policy
+    (``lints-robust``, DESIGN.md §14) — opt-in so the paper-faithful
+    reproduction scripts keep the paper's own roster.
     """
     cfg = lints.LinTSConfig(backend=backend)
-    return [
+    roster = [
         api.get_policy("lints", config=cfg),
         # Beyond-paper: emission-aware refinement (reported as "lints+").
         api.get_policy("lints+", config=dataclasses.replace(cfg, refine=True)),
@@ -46,11 +51,15 @@ def paper_roster(backend: str = "scipy") -> list[api.Policy]:
         api.get_policy("double_threshold", best_effort=True,
                        options={"alpha": PAPER.dt_alpha}),
     ]
+    if include_robust:
+        roster.append(api.get_policy("lints-robust"))
+    return roster
 
 
-def paper_plans(prob, backend: str = "scipy"):
+def paper_plans(prob, backend: str = "scipy", include_robust: bool = False):
     """The paper's algorithm roster as plans for one problem."""
-    return [policy.plan(prob) for policy in paper_roster(backend)]
+    return [policy.plan(prob)
+            for policy in paper_roster(backend, include_robust)]
 
 
 def run_all_algorithms(reqs, traces, capacity_gbps: float, noise: float,
@@ -64,11 +73,12 @@ def run_all_algorithms(reqs, traces, capacity_gbps: float, noise: float,
 
 def run_all_algorithms_ensemble(reqs, traces, capacity_gbps: float,
                                 noise: float, n_draws: int = 32,
-                                noise_seed: int = 7, backend: str = "scipy"):
+                                noise_seed: int = 7, backend: str = "scipy",
+                                include_robust: bool = False):
     """{algorithm: EnsembleReport} over ``n_draws`` Monte-Carlo noise draws
     (mean/std/95% CI instead of one arbitrary draw per cell)."""
     prob = build_problem(reqs, traces, capacity_gbps, PAPER.power)
-    plans = paper_plans(prob, backend)
+    plans = paper_plans(prob, backend, include_robust)
     return evaluate_ensemble(prob, plans, noise, n_draws,
                              requests=reqs, traces=traces, seed=noise_seed)
 

@@ -688,3 +688,7 @@ register_policy(HeuristicPolicy("single_threshold",
 register_policy(HeuristicPolicy("double_threshold",
                                 _heuristics.double_threshold))
 register_policy(SpatialPolicy())                     # §V: joint route+time
+
+from .robust import RobustPolicy as _RobustPolicy  # noqa: E402  (avoids cycle)
+
+register_policy(_RobustPolicy())                     # CVaR over noise draws

@@ -1,0 +1,635 @@
+"""Scenario-robust scheduling under forecast uncertainty (DESIGN.md §14).
+
+Plans built from point carbon forecasts bet the SLA on the forecast being
+right; both *Let's Wait Awhile* (Wiesner et al.) and *Carbon-Aware Computing
+for Datacenters* (Radovanović et al.) show forecast error is exactly where
+temporal shifting wins or loses.  This module feeds the Monte-Carlo noise
+machinery of :mod:`repro.core.montecarlo` FORWARD into the optimizer: one
+shared plan variable is scored against K scenario cost draws and the LP
+minimizes a mean/CVaR blend of the per-scenario emissions,
+
+    minimize  (1 - lam) * mean_k <c_k, rho>  +  lam * CVaR_alpha(<c_k, rho>)
+
+subject to the usual byte / capacity / box constraints.  The HiGHS oracle
+(:func:`repro.core.scipy_backend.solve_robust_scipy`) uses the
+Rockafellar–Uryasev epigraph (threshold ``t`` + tail excesses ``s_k``);
+the TPU-native solver :func:`repro.core.pdhg.pdhg_solve_robust` instead
+dualizes CVaR into its distributional representation
+
+    CVaR_alpha(y) = max { <p, y> : 0 <= p <= 1/(alpha K), sum p = 1 },
+
+turning the problem into a bilinear saddle over a capped simplex — the
+batched solver's fleet axis repurposed as a scenario axis, with no
+auxiliary primal variables (see the design note in ``pdhg.py``).  The two
+formulations are exactly equivalent; the oracle gates PDHG at ≤1e-6
+relative objective.
+
+The policy registers as ``lints-robust``.  Online, it exposes a
+``wrap_problem`` hook so :class:`repro.transfer.TransferManager` rebuilds
+the scenario tensor from the *current* forecast on every replan; the
+rolling-horizon replay harness (:func:`repro.core.simulator.
+rolling_horizon_replay`) closes the loop end-to-end.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Sequence
+
+import numpy as np
+
+from .feasibility import check_plan, repair_plan, workload_feasible
+from .montecarlo import draw_noisy_costs
+from .plan import InfeasibleError, Plan
+from .power import DEFAULT_POWER_MODEL, PowerModel
+from .problem import ScheduleProblem, TransferRequest, build_problem
+from .trace import TraceSet
+
+__all__ = [
+    "RobustProblem",
+    "RobustConfig",
+    "RobustPolicy",
+    "as_robust",
+    "build_robust_problem",
+    "robustify",
+    "robust_objective",
+    "solve_robust",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class RobustProblem(ScheduleProblem):
+    """A :class:`ScheduleProblem` plus the scenario cost tensor.
+
+    ``cost_draws`` has shape (n_draws, n_jobs, n_slots); draw ``d`` is one
+    plausible realization of the forecast (masked like ``cost``).  The
+    CVaR knobs travel with the problem so the scipy oracle and the PDHG
+    solver optimize the identical objective.  ``cvar_weight`` blends mean
+    (0.0) and pure CVaR (1.0) emissions.
+    """
+
+    cost_draws: np.ndarray | None = None   # (K, n_jobs, n_slots)
+    cvar_alpha: float = 0.3
+    cvar_weight: float = 0.5
+    noise_sigma: float = 0.15              # provenance of the draws
+    draw_seed: int = 11
+
+    @property
+    def n_draws(self) -> int:
+        return 0 if self.cost_draws is None else int(self.cost_draws.shape[0])
+
+
+def as_robust(
+    base: ScheduleProblem,
+    cost_draws: np.ndarray,
+    *,
+    cvar_alpha: float = 0.3,
+    cvar_weight: float = 0.5,
+    noise_sigma: float = 0.15,
+    draw_seed: int = 11,
+) -> RobustProblem:
+    """Attach scenario draws to an existing problem (draws are masked)."""
+    draws = np.asarray(cost_draws, dtype=np.float64)
+    if draws.ndim != 3 or draws.shape[1:] != base.cost.shape:
+        raise ValueError(
+            f"cost_draws shape {draws.shape} does not extend problem shape "
+            f"{base.cost.shape} with a leading draw axis"
+        )
+    if not 0.0 < cvar_alpha <= 1.0:
+        raise ValueError(f"cvar_alpha must be in (0, 1], got {cvar_alpha}")
+    if not 0.0 <= cvar_weight <= 1.0:
+        raise ValueError(f"cvar_weight must be in [0, 1], got {cvar_weight}")
+    return RobustProblem(
+        cost=base.cost,
+        mask=base.mask,
+        size_bits=base.size_bits,
+        deadlines=base.deadlines,
+        offsets=base.offsets,
+        capacity_bps=base.capacity_bps,
+        rate_cap_bps=base.rate_cap_bps,
+        slot_seconds=base.slot_seconds,
+        power=base.power,
+        cost_draws=np.where(base.mask[None], draws, 0.0),
+        cvar_alpha=float(cvar_alpha),
+        cvar_weight=float(cvar_weight),
+        noise_sigma=float(noise_sigma),
+        draw_seed=int(draw_seed),
+    )
+
+
+def build_robust_problem(
+    requests: Sequence[TransferRequest],
+    traces: TraceSet,
+    capacity_gbps: float,
+    power: PowerModel = DEFAULT_POWER_MODEL,
+    *,
+    sigma: float = 0.15,
+    n_draws: int = 12,
+    seed: int = 11,
+    cvar_alpha: float = 0.3,
+    cvar_weight: float = 0.5,
+) -> RobustProblem:
+    """Requests + forecast -> robust problem with per-zone noise scenarios.
+
+    Scenario draw ``d`` uses the documented seed-stream contract of
+    :func:`repro.core.montecarlo.zone_noise_draws` (draw ``d`` ==
+    ``TraceSet.with_noise(sigma, seed + d)``), path-combined per request —
+    the same noise model the evaluation layer uses, so keeping planning
+    and evaluation seeds distinct gives honest out-of-sample scoring.
+    """
+    base = build_problem(requests, traces, capacity_gbps, power)
+    draws = draw_noisy_costs(requests, traces, sigma, n_draws, seed)
+    return as_robust(base, draws, cvar_alpha=cvar_alpha,
+                     cvar_weight=cvar_weight, noise_sigma=sigma,
+                     draw_seed=seed)
+
+
+def robustify(
+    problem: ScheduleProblem,
+    *,
+    sigma: float = 0.15,
+    n_draws: int = 12,
+    seed: int = 11,
+    cvar_alpha: float = 0.3,
+    cvar_weight: float = 0.5,
+) -> RobustProblem:
+    """Synthesize scenario draws for a prebuilt plain problem.
+
+    When only the path-combined cost matrix survives (no requests/traces
+    to re-derive per-zone noise from — e.g. a caller handing
+    ``get_policy("lints-robust")`` a plain :class:`ScheduleProblem`),
+    apply the multiplicative noise model directly to the combined cost:
+    draw ``d`` perturbs every cell by ``1 + N(0, sigma)`` from
+    ``default_rng(seed + d)``, clipped at zero.  Per-zone correlation is
+    lost, so prefer :func:`build_robust_problem` when requests + traces
+    are available.
+    """
+    if isinstance(problem, RobustProblem):
+        return problem
+    draws = np.stack([
+        problem.cost * (1.0 + np.random.default_rng(seed + d).normal(
+            0.0, sigma, size=problem.cost.shape))
+        for d in range(n_draws)
+    ])
+    return as_robust(problem, np.clip(draws, 0.0, None),
+                     cvar_alpha=cvar_alpha, cvar_weight=cvar_weight,
+                     noise_sigma=sigma, draw_seed=seed)
+
+
+def robust_objective(
+    cost_draws: np.ndarray,
+    rho_bps: np.ndarray,
+    cvar_alpha: float = 0.3,
+    cvar_weight: float = 0.5,
+) -> float:
+    """Exact mean/CVaR objective of a plan against the scenario draws.
+
+    The discrete CVaR minimizes the Rockafellar–Uryasev epigraph over the
+    threshold in closed form: the optimum lies at one of the scenario
+    costs, so evaluating ``t + sum_k max(y_k - t, 0) / (alpha K)`` at
+    every ``t = y_j`` and taking the min is exact.  This is the
+    objective-space parity metric between the PDHG solve and the HiGHS
+    oracle (both plans are scored through this function).
+    """
+    y = np.einsum("knm,nm->k", np.asarray(cost_draws, dtype=np.float64),
+                  np.asarray(rho_bps, dtype=np.float64))
+    n_scen = y.size
+    excess = np.maximum(y[None, :] - y[:, None], 0.0).sum(axis=1)
+    cvar = float(np.min(y + excess / (cvar_alpha * n_scen)))
+    return float((1.0 - cvar_weight) * y.mean() + cvar_weight * cvar)
+
+
+# ---------------------------------------------------------------------------
+# Normalization + solve
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RobustConfig:
+    """Scenario generation + solver knobs for ``lints-robust``.
+
+    ``sigma``/``n_draws``/``seed`` govern draw synthesis when the policy
+    receives a plain problem (``robustify``) or wraps an online replan
+    (``wrap_problem``); problems built with explicit draws keep them.
+    Tolerances mirror :class:`repro.core.spatial.SpatialSolveConfig`: the
+    robust LP is a parity-gated subsystem, so it defaults to float64 and
+    a tight KKT tolerance.
+    """
+
+    # "scipy" (paper-faithful HiGHS epigraph LP) | "pdhg" (TPU-native
+    # scenario-batched saddle solver) — same split, and same default, as
+    # LinTSConfig.backend.  Online replans on small fleets are fastest via
+    # HiGHS; the PDHG path is the scale story and is parity-gated against
+    # the oracle at ≤1e-6 relative objective (benchmarks/robust.py).
+    backend: str = "scipy"
+    sigma: float = 0.15
+    n_draws: int = 12
+    cvar_alpha: float = 0.3
+    cvar_weight: float = 0.5
+    seed: int = 11                 # planning seed — keep != evaluation seed
+    # Online (wrap_problem): forecast error grows with lead time, so the
+    # scenario dispersion should too — slot j's noise is scaled by
+    # min(1, (j - now) / ramp_slots).  Near-term slots the revisions have
+    # already revealed get no phantom hedging (hedging certain slots just
+    # spreads mass and burns idle-power overhead); far slots carry the
+    # full sigma.  Set ramp_slots=0 to disable (uniform dispersion).
+    ramp_slots: int = 24
+    # tol is the KKT certificate (primal residual AND normalized duality
+    # gap).  1e-6 is plenty for scheduling; for oracle-grade objective
+    # parity (≤1e-6 relative vs HiGHS) use tol=3e-7 with a ~1M iteration
+    # budget — degenerate CVaR corners (alpha*K -> 1, cvar_weight -> 1)
+    # converge slowly because the scenario dual set collapses to a vertex.
+    tol: float = 1e-6
+    max_iters: int = 400_000
+    check_every: int = 250
+    omega0: float = 1.0
+    omega_bounds: tuple[float, float] = (1e-2, 1e2)
+    dtype: str = "float64"         # "float64" | "float32"
+    # Vertex rounding snaps the plan to a vertex of the *flow* polytope by
+    # greedy-filling against the mean scenario cost, but the robust optimum
+    # is generally NOT such a vertex — scenario hedging deliberately spreads
+    # mass, and rounding can cost ~1e-2 relative robust objective.  Off by
+    # default; opt in only when integral thread counts matter more than the
+    # CVaR tail.
+    vertex_round: bool = False
+    validate: bool = True
+
+
+def _normalize_robust(
+    problem: ScheduleProblem,
+    draws: np.ndarray,
+    cvar_alpha: float,
+    cvar_weight: float,
+):
+    """Normalized tensors of the robust LP (numpy, dtype-agnostic).
+
+    Mirrors :func:`repro.core.pdhg.normalize_problem` for the base LP
+    (``x = rho / rate_cap``), then scales every scenario row to unit
+    2-norm budget: ``chat_k = c_k / gamma`` with
+    ``gamma = max_k ||c_k||_2``, so ``||K_scen||_F <= sqrt(3K)`` and the
+    scenario block cannot crush the byte/capacity step sizes.  The
+    epigraph variables absorb gamma exactly (``qt = lam * gamma``,
+    ``qs = lam * gamma / (alpha K)``), leaving the optimum unchanged.
+    """
+    mask = problem.mask
+    ub = mask.astype(np.float64)
+    scale = max(float(np.abs(draws.mean(axis=0)[mask]).mean()), 1e-30)
+    cs = np.where(mask[None], draws, 0.0) / scale          # (K, n, m)
+    gamma = max(float(np.sqrt((cs * cs).sum(axis=(1, 2))).max()), 1e-30)
+    cbar = (1.0 - cvar_weight) * cs.mean(axis=0)
+    cks = cs / gamma
+    qt = cvar_weight * gamma
+    qs = cvar_weight * gamma / (cvar_alpha * cs.shape[0])
+    b_row = problem.size_bits / (problem.slot_seconds * problem.rate_cap_bps)
+    b_col = problem.capacity_bps / problem.rate_cap_bps
+    return cbar, cks, ub, b_row, b_col, qt, qs, scale
+
+
+def solve_robust(
+    problem: RobustProblem,
+    config: RobustConfig = RobustConfig(),
+    *,
+    x0_bps: np.ndarray | None = None,
+    u0: np.ndarray | None = None,
+    v0: np.ndarray | None = None,
+) -> Plan:
+    """Solve the scenario-robust LP with bucket-padded PDHG.
+
+    Pads to :func:`repro.core.ragged.bucket_shape` before solving (like
+    ``lints._solve_incremental``) so rolling-horizon replans with nearby
+    job counts share one jitted shape; padding adds only inert masked
+    cells and leaves ``scale``/``gamma``/``||K||`` unchanged.  Warm
+    inputs are the temporal planner's own hooks — throughput primal +
+    byte/capacity duals; the epigraph state re-derives inside the solver.
+    ``meta["warm_state"]`` carries the raw iterate for the next replan.
+    """
+    if problem.cost_draws is None or problem.n_draws == 0:
+        raise ValueError("RobustProblem has no cost_draws; use as_robust / "
+                         "build_robust_problem / robustify")
+    ok, why = workload_feasible(problem)
+    if not ok:
+        raise InfeasibleError(f"workload infeasible: {why}")
+    from . import ragged
+
+    n, m = problem.n_jobs, problem.n_slots
+    bucket = ragged.bucket_shape(n, m)
+    padded = ragged.pad_problem(problem, *bucket)
+    draws = np.asarray(problem.cost_draws, dtype=np.float64)
+    if bucket != (n, m):
+        pdraws = np.zeros((draws.shape[0],) + bucket, dtype=np.float64)
+        pdraws[:, :n, :m] = draws
+    else:
+        pdraws = draws
+    cbar, cks, ub, b_row, b_col, qt, qs, scale = _normalize_robust(
+        padded, pdraws, problem.cvar_alpha, problem.cvar_weight)
+
+    rate = problem.rate_cap_bps
+    x0p = u0p = v0p = None
+    if x0_bps is not None:
+        x0p = np.zeros(bucket, dtype=np.float64)
+        x0p[:n, :m] = np.nan_to_num(
+            np.asarray(x0_bps, dtype=np.float64))[:n, :m] / rate
+    if u0 is not None:
+        u0p = np.zeros(bucket[0], dtype=np.float64)
+        u0p[:n] = np.nan_to_num(np.asarray(u0, dtype=np.float64))[:n]
+    if v0 is not None:
+        v0p = np.zeros(bucket[1], dtype=np.float64)
+        v0p[:m] = np.nan_to_num(np.asarray(v0, dtype=np.float64))[:m]
+
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from .pdhg import pdhg_solve_robust
+
+    use_x64 = config.dtype == "float64"
+    dtype = jnp.float64 if use_x64 else jnp.float32
+    ctx = enable_x64() if use_x64 else contextlib.nullcontext()
+    with ctx:
+        x, diag = pdhg_solve_robust(
+            jnp.asarray(cbar, dtype), jnp.asarray(cks, dtype),
+            jnp.asarray(ub, dtype), jnp.asarray(b_row, dtype),
+            jnp.asarray(b_col, dtype), jnp.asarray(qt, dtype),
+            jnp.asarray(qs, dtype),
+            None if x0p is None else jnp.asarray(x0p, dtype),
+            None if u0p is None else jnp.asarray(u0p, dtype),
+            None if v0p is None else jnp.asarray(v0p, dtype),
+            max_iters=config.max_iters, check_every=config.check_every,
+            tol=config.tol, omega0=config.omega0,
+            omega_lo=config.omega_bounds[0],
+            omega_hi=config.omega_bounds[1])
+        x = np.asarray(x, dtype=np.float64)
+        diag = {k: np.asarray(v) for k, v in diag.items()}
+
+    rho = x * rate
+    pad_rate = max(
+        float(np.abs(rho[n:, :]).max(initial=0.0)),
+        float(np.abs(rho[:, m:]).max(initial=0.0)),
+    )
+    if pad_rate > 0.0:
+        raise RuntimeError("robust padding invariant violated: "
+                           f"{pad_rate:.3g} bps on padded cells")
+    raw = repair_plan(problem, rho[:n, :m].copy())
+    meta = {
+        "backend": "pdhg-robust",
+        "objective": float((problem.cost * raw).sum()),
+        "objective_robust": robust_objective(
+            draws, raw, problem.cvar_alpha, problem.cvar_weight),
+        "cvar_alpha": float(problem.cvar_alpha),
+        "cvar_weight": float(problem.cvar_weight),
+        "n_draws": int(draws.shape[0]),
+        "iterations": int(diag["iterations"]),
+        "converged": bool(diag["converged"]),
+        "primal_residual": float(diag["primal_residual"]),
+        "gap": float(diag["gap"]),
+        "warm_started": x0_bps is not None or u0 is not None,
+        "bucket_shape": bucket,
+        "warm_state": {
+            "x_bps": raw.copy(),
+            "u": np.asarray(diag["dual_row"], np.float64)[:n].copy(),
+            "v": np.asarray(diag["dual_col"], np.float64)[:m].copy(),
+        },
+    }
+    return _finish(problem, Plan(raw, "lints-robust", meta), config)
+
+
+def _finish(problem: RobustProblem, plan: Plan,
+            config: RobustConfig) -> Plan:
+    """Shared post-solve tail: optional vertex rounding + validation.
+
+    Rounding greedy-fills against the mean scenario cost (the robust
+    objective's smooth leg) and is OFF by default — see the
+    ``RobustConfig.vertex_round`` note: the robust optimum hedges across
+    scenarios and is generally not a flow-polytope vertex, so snapping to
+    one measurably worsens the CVaR tail."""
+    from .pdhg import vertex_round
+
+    draws = np.asarray(problem.cost_draws, dtype=np.float64)
+    if config.vertex_round:
+        mean_prob = dataclasses.replace(
+            problem, cost=np.where(problem.mask, draws.mean(axis=0), 0.0))
+        try:
+            plan = vertex_round(mean_prob, plan)
+            plan.meta["objective"] = float((problem.cost * plan.rho_bps).sum())
+            plan.meta["objective_robust"] = robust_objective(
+                draws, plan.rho_bps, problem.cvar_alpha, problem.cvar_weight)
+        except InfeasibleError:
+            pass  # tight capacity: keep the raw (already feasible) plan
+    if config.validate:
+        report = check_plan(problem, plan.rho_bps, rel_tol=1e-5)
+        if not report.feasible:
+            raise InfeasibleError(
+                "robust solve produced an infeasible plan "
+                f"(worst violation {report.worst():.3g})"
+            )
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Policy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RobustPolicy:
+    """Scenario-robust LP scheduling as a registry :class:`Policy`.
+
+    Plain problems are wrapped via :func:`robustify` (synthesized draws),
+    so the policy drops into every sweep; online, the ``wrap_problem``
+    hook rebuilds per-zone scenario draws from the live forecast on every
+    replan.  All planning goes through a mini degradation ladder that
+    mirrors :func:`repro.core.api.resilient_solve` rung-for-rung (warm
+    resume -> cold PDHG -> retry -> HiGHS robust oracle -> EDF), so an
+    unconverged robust solve can never ship unmarked.
+    """
+
+    config: RobustConfig = RobustConfig()
+    name: str = "lints-robust"
+
+    def _wrap(self, problem: ScheduleProblem) -> RobustProblem:
+        if isinstance(problem, RobustProblem):
+            return problem
+        cfg = self.config
+        return robustify(problem, sigma=cfg.sigma, n_draws=cfg.n_draws,
+                         seed=cfg.seed, cvar_alpha=cfg.cvar_alpha,
+                         cvar_weight=cfg.cvar_weight)
+
+    def wrap_problem(
+        self,
+        problem: ScheduleProblem,
+        requests: Sequence[TransferRequest],
+        forecast: TraceSet,
+    ) -> RobustProblem:
+        """Online hook: rebuild scenario draws from the live forecast.
+
+        :meth:`repro.transfer.TransferManager.replan` probes this with
+        ``getattr`` after ``build_problem`` — per-zone noise draws are
+        path-combined for the *remaining* transfers against the *revised*
+        forecast, so every rolling-horizon replan re-hedges.
+
+        The draws' dispersion is scaled by the lead-time ramp
+        (``config.ramp_slots``): slot ``j``'s noise is multiplied by
+        ``min(1, (j - now) / ramp_slots)`` with ``now`` the replan slot
+        (the requests' ``offset_slots``).  Revealed/near-term slots are
+        treated as (nearly) certain — hedging them would only spread mass
+        and pay idle-power overhead — while far slots carry the full
+        forecast risk.  This mirrors the error model of
+        :func:`repro.core.simulator.forecast_with_lead_noise`.
+        """
+        cfg = self.config
+        draws = draw_noisy_costs(requests, forecast, cfg.sigma, cfg.n_draws,
+                                 cfg.seed)
+        if cfg.ramp_slots > 0 and requests:
+            now = min(int(r.offset_slots) for r in requests)
+            lead = np.clip(
+                (np.arange(problem.n_slots, dtype=np.float64) - now)
+                / float(cfg.ramp_slots), 0.0, 1.0)
+            point = np.stack([
+                forecast.path_intensity(r.path, r.weights) for r in requests
+            ])
+            draws = point[None] + (draws - point[None]) * lead[None, None, :]
+        return as_robust(
+            problem,
+            draws,
+            cvar_alpha=cfg.cvar_alpha, cvar_weight=cfg.cvar_weight,
+            noise_sigma=cfg.sigma, draw_seed=cfg.seed)
+
+    def plan(self, problem: ScheduleProblem) -> Plan:
+        return self.plan_incremental(problem)
+
+    def plan_batch(self, problems: Sequence[ScheduleProblem]) -> list[Plan]:
+        from .api import _stamp
+
+        problems = list(problems)
+        return [
+            _stamp(self.plan(p), self.name, i, len(problems))
+            for i, p in enumerate(problems)
+        ]
+
+    def plan_incremental(self, problem: ScheduleProblem,
+                         warm: Any = None, *,
+                         inject: Any = None,
+                         resilient: bool = True) -> Plan:
+        """Robust replan with the degradation ladder (DESIGN.md §12/§14).
+
+        ``warm`` is an :class:`repro.core.api.WarmStart` from the online
+        planner; the warm rung resumes the robust PDHG from the previous
+        plan + byte/capacity duals (epigraph state re-derives).  With
+        ``resilient=False`` a warm failure falls back to one cold solve.
+        """
+        from . import api
+
+        rp = self._wrap(problem)
+        cfg = self.config
+        # Genuine workload infeasibility is not a solver fault (api
+        # resilient_solve semantics): raise before entering the ladder.
+        ok, why = workload_feasible(rp)
+        if not ok:
+            raise InfeasibleError(f"workload infeasible: {why}")
+        if warm is not None and getattr(warm, "empty", False):
+            warm = None
+        if not resilient:
+            if cfg.backend != "pdhg":
+                from .scipy_backend import solve_robust_scipy
+
+                plan = _finish(rp, solve_robust_scipy(rp), cfg)
+            elif warm is None:
+                plan = solve_robust(rp, cfg)
+            else:
+                plan = solve_robust(rp, cfg, x0_bps=warm.x0_bps,
+                                    u0=warm.u0, v0=warm.v0)
+                if api.plan_failure(plan) is not None:
+                    plan = solve_robust(rp, cfg)
+            plan.meta.setdefault("warm_started", False)
+            return api._stamp(plan, self.name)
+
+        fault = None
+        if inject is not None:
+            from .faults import SolverFault
+
+            fault = (inject if isinstance(inject, SolverFault)
+                     else SolverFault(solve_index=0, mode=str(inject)))
+
+        # Backend dispatch mirrors api.resilient_solve: the scipy backend
+        # (default — paper-faithful, ms-scale on online fleets) enters the
+        # ladder at the oracle rung; "pdhg" runs the full TPU-native ladder.
+        if cfg.backend == "pdhg":
+            rungs = ["pdhg", "pdhg-retry", "scipy", "heuristic"]
+            if warm is not None:
+                rungs.insert(0, "pdhg-warm")
+        else:
+            rungs = ["scipy", "heuristic"]
+        zero_cfg = dataclasses.replace(cfg, max_iters=0, validate=False,
+                                       vertex_round=False)
+        retry_cfg = dataclasses.replace(
+            cfg, max_iters=max(2 * cfg.max_iters, 20_000),
+            check_every=max(cfg.check_every // 2, 10))
+
+        attempts: list[dict[str, str]] = []
+        prev_plan: Plan | None = None
+        for i, rung in enumerate(rungs):
+            poisoned = (fault is not None and i < fault.rungs
+                        and rung != "heuristic")
+            plan: Plan | None = None
+            failure: str | None = None
+            try:
+                if rung in ("pdhg-warm", "pdhg"):
+                    is_warm = rung == "pdhg-warm"
+                    if poisoned and fault.mode == "nan":
+                        plan = Plan(
+                            np.full((rp.n_jobs, rp.n_slots), np.nan),
+                            "lints-robust",
+                            {"backend": "pdhg-robust", "converged": False,
+                             "warm_started": is_warm, "injected": "nan"},
+                        )
+                    elif poisoned:  # zero-budget solve: stalls unconverged
+                        plan = solve_robust(
+                            rp, zero_cfg,
+                            x0_bps=warm.x0_bps if is_warm else None,
+                            u0=warm.u0 if is_warm else None)
+                        plan.meta["injected"] = "no_converge"
+                    elif is_warm:
+                        plan = solve_robust(rp, cfg, x0_bps=warm.x0_bps,
+                                            u0=warm.u0, v0=warm.v0)
+                    else:
+                        plan = solve_robust(rp, cfg)
+                elif rung == "pdhg-retry":
+                    if poisoned:
+                        raise InfeasibleError(
+                            f"injected {fault.mode} fault persists through "
+                            "retry")
+                    x0 = (np.nan_to_num(prev_plan.rho_bps)
+                          if prev_plan is not None else None)
+                    plan = solve_robust(rp, retry_cfg, x0_bps=x0)
+                elif rung == "scipy":
+                    if poisoned:
+                        raise InfeasibleError(
+                            f"injected {fault.mode} fault persists through "
+                            "the scipy oracle")
+                    from .scipy_backend import solve_robust_scipy
+
+                    plan = _finish(rp, solve_robust_scipy(rp), cfg)
+                else:  # heuristic — the rung of last resort, never poisoned
+                    from . import heuristics as _heuristics
+
+                    try:
+                        plan = _heuristics.edf(rp)
+                    except InfeasibleError:
+                        plan = _heuristics.edf(rp, best_effort=True)
+                        plan.meta["best_effort"] = True
+            except (InfeasibleError, FloatingPointError, ValueError,
+                    RuntimeError) as e:
+                failure = f"{type(e).__name__}: {e}"
+                plan = None
+            if failure is None and plan is not None:
+                failure = api.plan_failure(plan)
+            if failure is None:
+                assert plan is not None
+                plan.meta["solver_status"] = rung
+                if attempts:
+                    plan.meta["solver_ladder"] = attempts
+                plan.meta.setdefault("warm_started", False)
+                return api._stamp(plan, self.name)
+            attempts.append({"rung": rung, "failure": failure})
+            if plan is not None:
+                prev_plan = plan
+        raise InfeasibleError(  # pragma: no cover — the heuristic rung returns
+            f"robust degradation ladder exhausted: {attempts}")

@@ -61,3 +61,90 @@ def solve_scipy(problem: ScheduleProblem, cost_scale: float | None = None) -> Pl
             "solver_iterations": int(getattr(res, "nit", -1)),
         },
     )
+
+
+def solve_robust_scipy(problem) -> Plan:
+    """HiGHS oracle for the scenario-robust CVaR LP (DESIGN.md §14).
+
+    ``problem`` is a ``robust.RobustProblem``: the base LinTS LP plus
+    ``cost_draws`` (K, n, m) scenario costs and the CVaR knobs.  Variables
+    are ``[x_masked, t, s_1..s_K]`` — the masked plan cells, the CVaR
+    epigraph threshold (free), and the per-scenario tail excesses.  Used
+    as the ≤1e-6 parity oracle for ``pdhg_solve_robust``.
+    """
+    mask = problem.mask
+    n_jobs, n_slots = mask.shape
+    rows, cols = np.nonzero(mask)
+    n_var = rows.size
+    draws = np.asarray(problem.cost_draws, dtype=np.float64)
+    n_scen = draws.shape[0]
+    alpha = float(problem.cvar_alpha)
+    lam = float(problem.cvar_weight)
+
+    scale = max(float(np.abs(draws.mean(axis=0)[mask]).mean()), 1e-30)
+    cd = draws[:, rows, cols] / scale  # (K, n_var) scenario cost rows
+    c = np.concatenate([
+        (1.0 - lam) * cd.mean(axis=0),
+        [lam],
+        np.full(n_scen, lam / (alpha * n_scen)),
+    ])
+
+    byte_mat = sp.csr_matrix(
+        (np.full(n_var, -problem.slot_seconds), (rows, np.arange(n_var))),
+        shape=(n_jobs, n_var),
+    )
+    cap_mat = sp.csr_matrix(
+        (np.ones(n_var), (cols, np.arange(n_var))), shape=(n_slots, n_var)
+    )
+    base = sp.vstack([byte_mat, cap_mat], format="csr")
+    # Scenario rows: <c_k, x> - t - s_k <= 0 (CVaR epigraph).
+    scen = sp.hstack(
+        [
+            sp.csr_matrix(cd),
+            sp.csr_matrix(-np.ones((n_scen, 1))),
+            sp.csr_matrix(-np.eye(n_scen)),
+        ],
+        format="csr",
+    )
+    a_ub = sp.vstack(
+        [
+            sp.hstack(
+                [base, sp.csr_matrix((n_jobs + n_slots, 1 + n_scen))],
+                format="csr",
+            ),
+            scen,
+        ],
+        format="csr",
+    )
+    b_ub = np.concatenate(
+        [
+            -problem.size_bits,
+            np.full(n_slots, problem.capacity_bps),
+            np.zeros(n_scen),
+        ]
+    )
+    bounds = (
+        [(0.0, problem.rate_cap_bps)] * n_var
+        + [(None, None)]
+        + [(0.0, None)] * n_scen
+    )
+    res = linprog(c, A_ub=a_ub, b_ub=b_ub, bounds=bounds, method="highs")
+    if not res.success:
+        raise InfeasibleError(f"robust linprog failed: {res.status} {res.message}")
+    rho = np.zeros((n_jobs, n_slots))
+    rho[rows, cols] = res.x[:n_var]
+    return Plan(
+        rho,
+        "lints-robust",
+        {
+            "backend": "scipy-highs-robust",
+            "objective": float((problem.cost * rho).sum()),
+            "objective_robust": float(res.fun * scale),
+            "cvar_alpha": alpha,
+            "cvar_weight": lam,
+            "n_draws": int(n_scen),
+            "n_variables": int(n_var + 1 + n_scen),
+            "n_constraints": int(n_jobs + n_slots + n_scen),
+            "solver_iterations": int(getattr(res, "nit", -1)),
+        },
+    )

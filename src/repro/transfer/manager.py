@@ -425,21 +425,40 @@ class TransferManager:
         destinations, or a bursty arrival wave, coalesces into a single
         event and therefore a single solve at the next replan instead of
         one per call.
+
+        Admission is all-or-nothing: every request is validated (and its
+        :class:`ManagedTransfer` built) before ANY is registered, so a bad
+        deadline or unknown route mid-burst raises without leaving partial
+        admissions behind.
         """
-        rids: list[str] = []
+        staged: list[tuple[str, ManagedTransfer]] = []
         for req in requests:
             kwargs = dict(req) if isinstance(req, dict) else None
             if kwargs is not None:
-                rids.append(self._admit(**kwargs))
+                staged.append(self._build_transfer(**kwargs))
             else:
-                rids.append(self._admit(*req))
-        if rids:
-            self.events.post(ev.ArrivalEvent(self.slot, rids=tuple(rids)))
-        return rids
+                staged.append(self._build_transfer(*req))
+        for rid, t in staged:
+            self.transfers[rid] = t
+        if staged:
+            self.events.post(ev.ArrivalEvent(
+                self.slot, rids=tuple(rid for rid, _ in staged)))
+        return [rid for rid, _ in staged]
 
     def _admit(self, size_gb: float, src: str, dst: str,
                deadline_slots: int, request_id: str | None = None) -> str:
         """Register one transfer in the state store (no event posted)."""
+        rid, t = self._build_transfer(size_gb, src, dst, deadline_slots,
+                                      request_id)
+        self.transfers[rid] = t
+        return rid
+
+    def _build_transfer(
+        self, size_gb: float, src: str, dst: str,
+        deadline_slots: int, request_id: str | None = None,
+    ) -> tuple[str, ManagedTransfer]:
+        """Validate one request and build its transfer WITHOUT registering
+        it — the staging half of all-or-nothing batch admission."""
         rid = request_id or f"xfer-{next(self._ids):05d}"
         requested = self.slot + deadline_slots
         # An SLA past the forecast window can only be planned up to the
@@ -450,7 +469,7 @@ class TransferManager:
         if deadline <= self.slot:
             raise ValueError("deadline beyond trace horizon or non-positive")
         candidates = self.topology.candidate_paths(src, dst)
-        self.transfers[rid] = ManagedTransfer(
+        return rid, ManagedTransfer(
             request_id=rid, size_gb=size_gb,
             path=candidates[0], deadline_slot=deadline,
             submitted_slot=self.slot,
@@ -458,7 +477,6 @@ class TransferManager:
             deadline_truncated_slots=requested - deadline,
             candidate_paths=candidates,
         )
-        return rid
 
     def pending(self) -> list[ManagedTransfer]:
         return self.state.pending()
@@ -550,6 +568,14 @@ class TransferManager:
         ]
         problem = build_problem(reqs, forecast, self.capacity_gbps,
                                 self.power)
+        # Scenario-robust policies (DESIGN.md §14) expose a ``wrap_problem``
+        # hook: the scenario draw tensor must be rebuilt from the *current*
+        # (possibly revised / fault-degraded) forecast on every replan, so
+        # the robust LP re-hedges against uncertainty around the latest
+        # point estimate rather than the one from submission time.
+        wrapper = getattr(self.policy, "wrap_problem", None)
+        if wrapper is not None:
+            problem = wrapper(problem, reqs, forecast)
         fault = (self.faults.solver_fault(self._solve_calls)
                  if self.faults is not None else None)
         self._solve_calls += 1
@@ -608,7 +634,14 @@ class TransferManager:
     def tick(self, congestion: float = 1.0) -> None:
         """Advance one slot; execute the plan under a congestion factor."""
         if self.events.replan_pending():
-            self.replan()
+            if self.recovery:
+                # Backoff path: a transiently infeasible replan (e.g. a
+                # panicked transfer pinned at exactly full rate) keeps the
+                # stale plan executing and retries later; SLA accounting
+                # flags whatever is genuinely lost.
+                self._try_replan()
+            else:
+                self.replan()
         dt = self.forecast.slot_seconds
         j = self.slot
         drifted = False

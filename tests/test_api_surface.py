@@ -13,7 +13,7 @@ from repro.core.plan import Plan
 PATH = ("US-NM", "US-WY", "US-SD")
 
 EXPECTED_POLICIES = {
-    "lints", "lints_pdhg", "lints+", "lints-spatial",
+    "lints", "lints_pdhg", "lints+", "lints-spatial", "lints-robust",
     "fcfs", "edf", "worst_case", "single_threshold", "double_threshold",
 }
 

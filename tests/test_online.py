@@ -297,6 +297,40 @@ def test_service_admission_control():
     assert stats["admitted"] == 2 and stats["rejected"] == 3
 
 
+def test_submit_many_burst_straddling_max_pending_is_all_or_nothing():
+    """A burst that would cross max_pending leaves ZERO partial admissions:
+    neither the service stats nor the manager may record any of the burst."""
+    tm = _manager()
+    svc = TransferService(tm, max_pending=3)
+    svc.submit(1.0, "a", "b", 96)
+    before = dict(tm.transfers)
+    burst = [(1.0, "a", "b", 96)] * 3           # 1 admitted + 3 > max_pending
+    with pytest.raises(AdmissionError):
+        svc.submit_many(burst)
+    assert dict(tm.transfers) == before          # no partial enqueue
+    assert svc.stats()["admitted"] == 1
+    assert svc.stats()["rejected"] == len(burst)
+    # the freed capacity is still usable: a fitting burst goes through whole
+    rids = svc.submit_many([(1.0, "a", "b", 96), (1.0, "a", "b", 96)])
+    assert len(rids) == 2 and all(r in tm.transfers for r in rids)
+
+
+def test_enqueue_many_invalid_mid_burst_admits_nothing():
+    """Manager-side transactionality: a bad request anywhere in the batch
+    (validation happens during staging) must leave the manager untouched —
+    no transfers registered, no ArrivalEvent posted."""
+    tm = _manager()
+    with pytest.raises(ValueError):
+        tm.enqueue_many([
+            (1.0, "a", "b", 96),
+            (1.0, "a", "b", 0),                  # invalid deadline mid-burst
+            (1.0, "a", "b", 48),
+        ])
+    assert not tm.transfers
+    assert len(tm.events) == 0
+    assert not tm._needs_plan
+
+
 def test_service_worker_debounces_burst():
     tm = _manager()
     svc = TransferService(tm, debounce_s=0.05)
