@@ -1,0 +1,191 @@
+"""Learned-policy distillation: microsecond-scale inference vs the LP.
+
+DESIGN.md §15.  The distilled policy's claim is that a per-(job, slot)
+attention head trained on LP-solved fleets replaces a cold solve on the
+online decision path at a tiny fraction of the latency, without giving
+back the LP's carbon savings.  This benchmark distills a policy with
+``learned.distill`` (fleets solved by the paper-faithful HiGHS oracle,
+imitation KL + differentiable emissions objective), then *asserts* the
+two gates the repo ships under:
+
+* **latency** — ``LearnedPolicy.plan_batch`` over a fleet of 32 problems
+  (8 in ``--fast``) at least ``SPEEDUP_MIN = 50x`` under a cold PDHG
+  ``plan_batch`` of the same fleet (featurize + jitted forward +
+  batched finishing vs a from-scratch iterative solve);
+* **emissions** — on *held-out* workload seeds, judged by
+  ``evaluate_ensemble`` under forecast noise against lints/EDF/FCFS: the
+  learned policy's excess emissions over the LP stay within
+  ``GAP_MAX = 10%`` of the LP-vs-EDF improvement,
+  ``(learned - lints) <= GAP_MAX * (edf - lints)`` in fleet-mean gCO2.
+
+SLA-miss counts (Monte-Carlo ``sla_violations``) and every
+validation-failure LP fallback (``meta["fallback"]``) are reported —
+the fallback count must be zero for the latency number to be honest.
+
+Emits ``BENCH_learned.json`` at the repo root (same idiom as
+``BENCH_online.json``) so the distillation trajectory is diffable
+PR-over-PR.
+
+    PYTHONPATH=src python -m benchmarks.learned          # full
+    PYTHONPATH=src python -m benchmarks.learned --fast   # CI smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+from repro import learned
+from repro.core import api
+from repro.core.montecarlo import evaluate_ensemble
+
+from .common import csv_line
+
+_BENCH_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_learned.json"
+
+#: Inference-latency gate: learned plan_batch vs cold PDHG plan_batch.
+SPEEDUP_MIN = 50.0
+
+#: Held-out emissions gate: (learned - lints) / (edf - lints) fleet-mean.
+GAP_MAX = 0.10
+
+#: Held-out seeds start here; training uses ``TRAIN_SEED`` (see
+#: ``learned.distill`` — same workload distribution, disjoint seeds).
+TRAIN_SEED = 0
+HELDOUT_SEED = 1000
+
+ROSTER = ("lints", "edf", "fcfs")
+
+
+def _measure_latency(policy, fleet, quiet):
+    policy.plan_batch(fleet)  # warm the jitted forward + finishing shapes
+    t0 = time.perf_counter()
+    plans = policy.plan_batch(fleet)
+    learned_s = time.perf_counter() - t0
+    fallbacks = sum(1 for p in plans if "fallback" in p.meta)
+
+    t0 = time.perf_counter()
+    api.get_policy("lints_pdhg").plan_batch(fleet)
+    pdhg_s = time.perf_counter() - t0
+    speedup = pdhg_s / learned_s
+    if not quiet:
+        print(csv_line(
+            f"learned_plan_batch_n{len(fleet)}", learned_s * 1e6,
+            f"pdhg_cold_s={pdhg_s:.2f};speedup={speedup:.0f}x;"
+            f"fallbacks={fallbacks}"))
+    return {
+        "fleet": len(fleet),
+        "learned_ms": learned_s * 1e3,
+        "pdhg_cold_s": pdhg_s,
+        "speedup": speedup,
+        "fallbacks": fallbacks,
+        "gate_speedup_min": SPEEDUP_MIN,
+    }
+
+
+def _measure_emissions(policy, triples, sigma, n_draws, quiet):
+    """Held-out Monte-Carlo judgment: learned vs lints/EDF/FCFS."""
+    totals = {name: 0.0 for name in ROSTER + (policy.name,)}
+    sla = {name: 0 for name in totals}
+    fallbacks = 0
+    for i, (reqs, traces, prob) in enumerate(triples):
+        plans = [api.get_policy(n).plan(prob) for n in ROSTER]
+        lp = policy.plan(prob)
+        fallbacks += int("fallback" in lp.meta)
+        plans.append(lp)
+        reports = evaluate_ensemble(prob, plans, sigma=sigma,
+                                    n_draws=n_draws, requests=reqs,
+                                    traces=traces, seed=HELDOUT_SEED + i)
+        for name, rep in reports.items():
+            totals[name] += rep.mean_gco2
+            sla[name] += int(rep.sla_violations)
+    gap = ((totals[policy.name] - totals["lints"])
+           / max(totals["edf"] - totals["lints"], 1e-12))
+    if not quiet:
+        for name in totals:
+            print(csv_line(
+                f"heldout_emissions_{name}", 0.0,
+                f"mean_gco2={totals[name] / len(triples):.1f};"
+                f"sla_misses={sla[name]}"))
+        print(csv_line("heldout_gap", 0.0,
+                       f"gap={gap:.4f};fallbacks={fallbacks}"))
+    return {
+        "n_problems": len(triples),
+        "sigma": sigma,
+        "n_draws": n_draws,
+        "mean_gco2": {k: v / len(triples) for k, v in totals.items()},
+        "sla_misses": sla,
+        "heldout_gap": gap,
+        "fallbacks": fallbacks,
+        "gate_gap_max": GAP_MAX,
+    }
+
+
+def run(fast: bool = False, quiet: bool = False) -> dict:
+    t0 = time.perf_counter()
+    policy, history = learned.distill(fast=fast, seed=TRAIN_SEED)
+    distill_s = time.perf_counter() - t0
+    if not quiet:
+        print(csv_line(
+            "distill", distill_s * 1e6,
+            f"steps={len(history)};kl={history[0]['kl']:.3f}->"
+            f"{history[-1]['kl']:.3f}"))
+
+    data = learned.DataConfig(n_problems=8 if fast else 32,
+                              jobs_range=(3, 8) if fast else (3, 10))
+    fleet = [p for _, _, p in learned.sample_fleet(data, HELDOUT_SEED)]
+    latency = _measure_latency(policy, fleet, quiet)
+
+    eval_data = learned.DataConfig(n_problems=4 if fast else 10,
+                                   jobs_range=(3, 8) if fast else (3, 10))
+    triples = learned.sample_fleet(eval_data, HELDOUT_SEED + 1)
+    emissions = _measure_emissions(policy, triples, sigma=0.05,
+                                   n_draws=8 if fast else 32, quiet=quiet)
+
+    assert latency["speedup"] >= SPEEDUP_MIN, (
+        f"latency gate: learned plan_batch only {latency['speedup']:.1f}x "
+        f"under cold PDHG at fleet {latency['fleet']} (need >= {SPEEDUP_MIN}x)")
+    assert emissions["heldout_gap"] <= GAP_MAX, (
+        f"emissions gate: held-out gap {emissions['heldout_gap']:.3f} of the "
+        f"LP-vs-EDF improvement (need <= {GAP_MAX})")
+
+    bench = {
+        "bench": "learned",
+        "schema": 1,
+        "mode": "fast" if fast else "full",
+        "train": {
+            "steps": len(history),
+            "distill_s": distill_s,
+            "kl_first": history[0]["kl"],
+            "kl_last": history[-1]["kl"],
+            "loss_last": history[-1]["loss"],
+        },
+        "latency": latency,
+        "emissions": emissions,
+        "environment": (
+            "2-core CPU container; jax on CPU, kernels in interpret mode. "
+            "The forward pass is a single jitted attention head — the "
+            "speedup is against a cold PDHG solve of the same fleet, the "
+            "decision-path alternative the online engine would otherwise "
+            "pay (DESIGN.md §15)."
+        ),
+    }
+    _BENCH_PATH.write_text(json.dumps(bench, indent=2) + "\n")
+    if not quiet:
+        print(f"# wrote {_BENCH_PATH}", flush=True)
+    return bench
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: tiny model, <=20 train steps")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    run(fast=args.fast, quiet=args.quiet)
+
+
+if __name__ == "__main__":
+    main()

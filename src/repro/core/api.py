@@ -570,10 +570,21 @@ def get_policy(name: str, **overrides: Any) -> Policy:
             f"{', '.join(available_policies())}"
         ) from None
     if overrides:
+        # Validate before touching dataclasses.replace: the error should
+        # name the policy and the offending keys, not surface as a cryptic
+        # TypeError from a partially constructed __init__ call.
         if not dataclasses.is_dataclass(policy):
             raise TypeError(
-                f"policy {name!r} is not a dataclass; get_policy overrides "
-                "require dataclass policies — construct the variant directly"
+                f"policy {name!r} ({type(policy).__name__}) is not a "
+                f"dataclass; overrides {sorted(overrides)} require "
+                "dataclass policies — construct the variant directly"
+            )
+        fields = {f.name for f in dataclasses.fields(policy)}
+        unknown = sorted(set(overrides) - fields)
+        if unknown:
+            raise TypeError(
+                f"unknown override(s) {', '.join(map(repr, unknown))} for "
+                f"policy {name!r}; valid fields: {', '.join(sorted(fields))}"
             )
         policy = dataclasses.replace(policy, **overrides)
     return policy
@@ -692,3 +703,7 @@ register_policy(SpatialPolicy())                     # §V: joint route+time
 from .robust import RobustPolicy as _RobustPolicy  # noqa: E402  (avoids cycle)
 
 register_policy(_RobustPolicy())                     # CVaR over noise draws
+
+from ..learned.policy import LearnedPolicy as _LearnedPolicy  # noqa: E402
+
+register_policy(_LearnedPolicy())                    # distilled LP (§15)

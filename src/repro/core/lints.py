@@ -191,7 +191,21 @@ def _solve_incremental(problem: ScheduleProblem,
     return plan
 
 
+# Shims already warned this process (one warning per entry point, however
+# many call sites hit it — tests reset this to re-arm).
+_DEPRECATION_WARNED: set[str] = set()
+
+
 def _deprecated(old: str, new: str) -> None:
+    """Warn once per process per shim, attributed to the shim's *caller*.
+
+    ``stacklevel=3`` climbs _deprecated -> shim -> caller, so the warning
+    names the user's call site rather than a line inside this module
+    (regression-tested in ``tests/test_api_surface.py``).
+    """
+    if old in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(old)
     warnings.warn(
         f"repro.core.lints.{old} is deprecated; use {new} "
         "(repro.core.api) instead",

@@ -1,0 +1,32 @@
+"""Learned scheduling: the LinTS LP distilled into a neural policy.
+
+DESIGN.md §15.  The first subsystem to fuse the repo's scheduling half
+with its dormant ML half: features (:mod:`repro.learned.features`) feed a
+per-job attention-over-slots head (:mod:`repro.learned.model`) trained by
+imitation of the LP oracle plus the differentiable emissions objective
+(:mod:`repro.learned.train`); :class:`repro.learned.LearnedPolicy`
+registers the result as ``"lints-learned"`` with finishing hardening and
+an LP fallback stamped in plan ``meta``.
+"""
+
+from .features import FeatureBatch, featurize, featurize_fleet
+from .model import LearnedModelConfig, init_params, forward
+from .policy import LearnedPolicy
+from .train import DataConfig, Dataset, build_dataset, distill, load_params, sample_fleet, train
+
+__all__ = [
+    "DataConfig",
+    "Dataset",
+    "FeatureBatch",
+    "LearnedModelConfig",
+    "LearnedPolicy",
+    "build_dataset",
+    "distill",
+    "featurize",
+    "featurize_fleet",
+    "forward",
+    "init_params",
+    "load_params",
+    "sample_fleet",
+    "train",
+]

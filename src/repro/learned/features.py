@@ -1,0 +1,140 @@
+"""Featurize :class:`ScheduleProblem` tensors for the learned policy.
+
+The distilled policy (DESIGN.md §15) consumes per-(job, slot) feature
+planes instead of the raw LP tensors so the model sees the same
+*normalized* landscape regardless of fleet, horizon length, or absolute
+carbon scale:
+
+  0. ``cost``      — carbon intensity / mean |masked intensity| (the exact
+                     normalization of :func:`repro.core.pdhg.normalize_problem`)
+  1. ``rank``      — percentile rank of the slot's cost within the job's
+                     allowed window (0 = cheapest, 1 = dirtiest)
+  2. ``mask``      — allowed-slot indicator (offset <= j < deadline)
+  3. ``slack``     — slots until the deadline, window-relative
+  4. ``elapsed``   — slots since the job's release, window-relative
+  5. ``urgency``   — bytes / (slot_seconds * rate_cap * |window|): the mean
+                     fraction of the per-job rate cap the job must sustain
+  6. ``pressure``  — aggregate fleet demand overlapping the slot / link
+                     capacity (contention signal the per-job softmax
+                     cannot otherwise see)
+  7. ``cap``       — rate_cap / capacity (how many jobs fit side by side)
+
+Every plane is multiplied by the mask, and every normalizer is *window*-
+relative rather than horizon-relative, so featurization commutes with
+:func:`repro.core.ragged.pad_problem`: padding a problem onto a larger
+bucket canvas leaves the real cells bit-identical and the pad cells
+exactly zero.  That invariance is what lets :func:`featurize_fleet` batch
+ragged fleets through one forward pass with no padding leakage
+(tested in ``tests/test_learned.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from ..core import ragged
+from ..core.problem import ScheduleProblem
+
+N_FEATURES = 8
+
+
+def featurize(problem: ScheduleProblem) -> np.ndarray:
+    """One problem -> (n_jobs, n_slots, N_FEATURES) float32 feature planes."""
+    n, m = problem.n_jobs, problem.n_slots
+    mask = problem.mask
+    maskf = mask.astype(np.float64)
+    cost = np.asarray(problem.cost, dtype=np.float64)
+
+    # Plane 0: pdhg.normalize_problem's cost scale (mean |masked cost|).
+    scale = float(np.abs(cost[mask]).mean()) if mask.any() else 1.0
+    scale = scale or 1.0
+    cost_norm = np.where(mask, cost / scale, 0.0)
+
+    # Plane 1: within-window percentile rank of the slot cost.  Double
+    # argsort over (cost, +inf outside the mask): pad/disallowed slots sort
+    # to the end and are zeroed by the mask anyway.
+    keyed = np.where(mask, cost, np.inf)
+    order = np.argsort(keyed, axis=1, kind="stable")
+    rank = np.empty_like(order)
+    np.put_along_axis(rank, order, np.arange(m)[None, :].repeat(n, 0), axis=1)
+    n_allowed = np.maximum(maskf.sum(axis=1), 1.0)
+    rank_pct = np.where(mask, rank / np.maximum(n_allowed - 1.0, 1.0)[:, None],
+                        0.0)
+
+    # Planes 3/4: window-relative time geometry.  Normalizing by the job's
+    # own window (not the horizon) keeps the planes invariant under slot
+    # padding.
+    j = np.arange(m, dtype=np.float64)[None, :]
+    window = np.maximum(
+        (problem.deadlines - problem.offsets).astype(np.float64), 1.0)
+    slack = np.where(mask, (problem.deadlines[:, None] - j) / window[:, None],
+                     0.0)
+    elapsed = np.where(mask, (j - problem.offsets[:, None]) / window[:, None],
+                       0.0)
+
+    # Plane 5: sustained-rate urgency; plane 6: fleet contention per slot.
+    per_slot_bps = problem.size_bits / (problem.slot_seconds * n_allowed)
+    urgency = per_slot_bps / problem.rate_cap_bps
+    demand_bps = (maskf * per_slot_bps[:, None]).sum(axis=0)
+    pressure = demand_bps / problem.capacity_bps
+    cap_ratio = problem.rate_cap_bps / problem.capacity_bps
+
+    feats = np.zeros((n, m, N_FEATURES), dtype=np.float32)
+    feats[..., 0] = cost_norm
+    feats[..., 1] = rank_pct
+    feats[..., 2] = maskf
+    feats[..., 3] = slack
+    feats[..., 4] = elapsed
+    feats[..., 5] = maskf * urgency[:, None]
+    feats[..., 6] = maskf * pressure[None, :]
+    feats[..., 7] = maskf * cap_ratio
+    return feats
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureBatch:
+    """A ragged fleet padded onto one (bucket_jobs, bucket_slots) canvas.
+
+    ``features``/``mask`` feed the model; ``size_bits``/``slot_seconds``
+    scale its softmax fractions back to throughputs; ``shapes`` remembers
+    each problem's true (n_jobs, n_slots) for unpadding.  Pad jobs carry
+    zero features, an all-False mask, and zero size, so they can neither
+    receive rate nor influence real jobs.
+    """
+
+    features: np.ndarray      # (B, J, S, N_FEATURES) float32
+    mask: np.ndarray          # (B, J, S) bool
+    size_bits: np.ndarray     # (B, J) float64
+    slot_seconds: np.ndarray  # (B,) float64
+    shapes: tuple[tuple[int, int], ...]
+
+    @property
+    def bucket(self) -> tuple[int, int]:
+        return self.features.shape[1], self.features.shape[2]
+
+
+def featurize_fleet(
+    problems: Sequence[ScheduleProblem],
+) -> tuple[FeatureBatch, list[ScheduleProblem]]:
+    """Pad a ragged fleet to one bucket and featurize it in one tensor.
+
+    Returns the batch plus the padded problems (the finishing pipeline
+    reuses them for batched repair/round/validate).  The bucket is the
+    fleet-max shape run through :func:`repro.core.ragged.bucket_shape`, so
+    consecutive same-scale fleets share one jitted forward shape.
+    """
+    problems = list(problems)
+    if not problems:
+        raise ValueError("empty fleet")
+    bj, bs = ragged.bucket_shape(max(p.n_jobs for p in problems),
+                                 max(p.n_slots for p in problems))
+    padded = [ragged.pad_problem(p, bj, bs) for p in problems]
+    feats = np.stack([featurize(p) for p in padded])
+    mask = np.stack([p.mask for p in padded])
+    sizes = np.stack([p.size_bits for p in padded])
+    dt = np.array([p.slot_seconds for p in problems], dtype=np.float64)
+    shapes = tuple((p.n_jobs, p.n_slots) for p in problems)
+    return FeatureBatch(feats, mask, sizes, dt, shapes), padded

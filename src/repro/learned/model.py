@@ -1,0 +1,159 @@
+"""Per-job attention-over-slots head: feature planes -> soft plan fractions.
+
+The model distills the LinTS LP (DESIGN.md §15).  Architecture, built
+entirely from the seed's model blocks (:mod:`repro.models.layers`,
+:mod:`repro.models.attention`):
+
+    per-(job, slot) features                     (B, J, S, F)
+      -> dense embed + gated-MLP residual block  (B, J, S, d)
+      -> per-job pooled query attends over its   (B*J, 1, d)
+         slot sequence (attention_einsum, the
+         allowed-slot mask as ``valid_k``)
+      -> context broadcast back onto slots,
+         second MLP residual block
+      -> scalar head per slot, minus a learned
+         cost bias  beta * normalized_intensity  (B, J, S) logits
+      -> masked softmax over allowed slots       (B, J, S) fractions
+
+The explicit ``-beta * cost`` logit term is the inductive prior: at
+initialization the policy is already "softmin over carbon intensity"
+(beta ~= ``cost_bias_init``), i.e. a smooth version of the
+cheapest-slots greedy heuristic, and training only has to learn the
+*corrections* (deadline pressure, fleet contention) instead of
+rediscovering carbon-awareness from scratch.
+
+Fractions are a distribution over each job's allowed slots, so
+``rho = fractions * size_bits / slot_seconds`` delivers every job's bytes
+exactly (feasible-by-construction w.r.t. the byte and mask constraints);
+rate caps and the shared link capacity are restored by the finishing
+pipeline in :mod:`repro.learned.policy`.  Jobs whose mask is entirely
+False (ragged pad rows) get an all-zero row, never a uniform leak.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.attention import attention_einsum
+from ..models.layers import dense, dense_init, mlp_apply, mlp_init, norm_apply, norm_init
+
+# Runtime attribute access instead of a from-import: features.py triggers
+# the repro.core package init, which registers the policy and re-enters
+# this module while features is still partially initialized.
+from . import features as _features
+
+_NEG = -1.0e30  # masked-logit fill; exp() underflows cleanly in f32
+
+
+@dataclasses.dataclass(frozen=True)
+class LearnedModelConfig:
+    """Tiny on purpose: the whole point is a microsecond forward pass."""
+
+    d_model: int = 32
+    n_heads: int = 4
+    head_dim: int = 8
+    hidden: int = 64
+    cost_bias_init: float = 6.0
+    seed: int = 0
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+
+def init_params(key, cfg: LearnedModelConfig = LearnedModelConfig()) -> dict:
+    ks = jax.random.split(key, 8)
+    d, a = cfg.d_model, cfg.qkv_dim
+    f32 = jnp.float32
+    # softplus(beta_raw) == cost_bias_init at init.
+    beta_raw = float(np.log(np.expm1(max(cfg.cost_bias_init, 1e-3))))
+    return {
+        "w_in": dense_init(ks[0], _features.N_FEATURES, d, f32),
+        "norm1": norm_init(d, "rms", f32),
+        "mlp1": mlp_init(ks[1], d, cfg.hidden, f32),
+        "wq": dense_init(ks[2], d, a, f32),
+        "wk": dense_init(ks[3], d, a, f32),
+        "wv": dense_init(ks[4], d, a, f32),
+        "wo": dense_init(ks[5], a, d, f32),
+        "norm2": norm_init(d, "rms", f32),
+        "mlp2": mlp_init(ks[6], d, cfg.hidden, f32),
+        "w_head": dense_init(ks[7], d, 1, f32),
+        "beta": jnp.asarray(beta_raw, f32),
+    }
+
+
+def masked_softmax(logits, mask):
+    """Softmax over the last axis restricted to ``mask``; all-False -> 0."""
+    z = jnp.where(mask, logits, _NEG)
+    z = z - jax.lax.stop_gradient(z.max(axis=-1, keepdims=True))
+    e = jnp.exp(z) * mask
+    s = e.sum(axis=-1, keepdims=True)
+    return e / jnp.maximum(s, 1e-30)
+
+
+def forward(params, features, mask, cfg: LearnedModelConfig):
+    """(B, J, S, F) features + (B, J, S) mask -> (B, J, S) fractions."""
+    f32 = jnp.float32
+    b, j, s, _ = features.shape
+    maskf = mask.astype(f32)
+
+    x = dense(features.astype(f32), params["w_in"], f32)
+    x = x + mlp_apply(params["mlp1"], norm_apply(params["norm1"], x, "rms",
+                                                 1e-6, f32), f32)
+
+    # Attention over each job's slot sequence: fold (B, J) into the batch
+    # axis so jobs never attend across each other, pool a per-job query
+    # from the allowed slots, and let ``valid_k`` mask the rest.  pos_q is
+    # pinned past every key so attention_einsum's causal bias is inert.
+    xb = x.reshape(b * j, s, cfg.d_model)
+    mb = maskf.reshape(b * j, s)
+    denom = jnp.maximum(mb.sum(axis=-1, keepdims=True), 1.0)
+    pooled = (xb * mb[..., None]).sum(axis=1, keepdims=True) / denom[..., None]
+    q = dense(pooled, params["wq"], f32).reshape(
+        b * j, 1, cfg.n_heads, cfg.head_dim)
+    k = dense(xb, params["wk"], f32).reshape(
+        b * j, s, cfg.n_heads, cfg.head_dim)
+    v = dense(xb, params["wv"], f32).reshape(
+        b * j, s, cfg.n_heads, cfg.head_dim)
+    pos_q = jnp.full((b * j, 1), s, dtype=jnp.int32)
+    pos_k = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b * j, s))
+    ctx = attention_einsum(q, k, v, pos_q, pos_k,
+                           valid_k=mask.reshape(b * j, s),
+                           compute_dtype=f32)
+    ctx = dense(ctx.reshape(b * j, 1, cfg.qkv_dim), params["wo"], f32)
+
+    h = xb + ctx  # broadcast the job context onto every slot
+    h = h + mlp_apply(params["mlp2"], norm_apply(params["norm2"], h, "rms",
+                                                 1e-6, f32), f32)
+
+    logits = dense(h, params["w_head"], f32)[..., 0].reshape(b, j, s)
+    beta = jax.nn.softplus(params["beta"])
+    logits = logits - beta * features[..., 0].astype(f32)
+    return masked_softmax(logits, mask)
+
+
+@functools.partial(jax.jit, static_argnums=3)
+def _forward_jit(params, features, mask, cfg):
+    return forward(params, features, mask, cfg)
+
+
+def soft_plan(params, batch, cfg: LearnedModelConfig) -> np.ndarray:
+    """FeatureBatch -> (B, J, S) soft throughput plan in bits/s (float64).
+
+    ``fractions * size_bits / slot_seconds``: each real job's bytes land
+    exactly; pad jobs (zero size, all-False mask) stay at zero rate.
+    """
+    frac = fractions(params, batch, cfg)
+    return (frac.astype(np.float64) * batch.size_bits[:, :, None]
+            / batch.slot_seconds[:, None, None])
+
+
+def fractions(params, batch, cfg: LearnedModelConfig) -> np.ndarray:
+    """Jitted forward over a FeatureBatch -> (B, J, S) float32 fractions."""
+    return np.asarray(_forward_jit(params, jnp.asarray(batch.features),
+                                   jnp.asarray(batch.mask), cfg))

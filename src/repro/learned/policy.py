@@ -1,0 +1,220 @@
+"""``LearnedPolicy``: the distilled LP as a registry policy (DESIGN.md §15).
+
+Planning is featurize -> jitted forward -> finishing hardening:
+
+  1. the masked softmax over each job's allowed slots satisfies the
+     mask/deadline structure by construction;
+  2. :func:`concentrate` turns the fractions into a rate-cap-saturated
+     plan on each job's model-preferred slots (the model's ranking is
+     load-bearing — see its docstring), then
+     :func:`repro.core.feasibility.repair_plan` restores the shared link
+     capacity (rescale + cheapest-slot top-up) and
+     :func:`repro.core.pdhg.vertex_round` re-places any partial
+     remainders (Eq. 3's nonlinear power curve punishes thin slots —
+     DESIGN.md §3);
+  3. :func:`repro.core.feasibility.check_plan` validates the result.  Any
+     hardening/validation failure falls back to the LP oracle
+     (``fallback`` registry policy) and the shipped plan records it:
+     ``meta["fallback"]`` (which policy solved), ``meta["fallback_reason"]``
+     — a learned plan can never ship infeasible OR silently non-learned.
+
+Genuinely infeasible workloads still raise :class:`InfeasibleError`
+before any forward pass (policy-protocol contract — the LP fallback could
+not save them either).
+
+``plan_batch`` runs ragged fleets through ONE bucket canvas: one jitted
+forward for the whole fleet, then the PR 6 batched finishing tail
+(``repair_batch``/``vertex_round_batch``/``check_plan_batch``) on the
+padded stack.  ``plan_incremental`` exists for the online engine but
+ignores warm state — a microsecond forward pass has nothing to warm.
+
+The registered default (``params=None``) lazily initializes deterministic
+*untrained* weights: thanks to the ``-beta * cost`` logit prior it
+behaves like smoothed cheapest-slots greedy, so every sweep over
+``available_policies()`` works out of the box.  Production callers pass
+trained params (``learned.distill`` / ``learned.train.load_params``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+
+from ..core import finishing
+from ..core.feasibility import check_plan, check_plan_batch, repair_plan, workload_feasible
+from ..core.pdhg import vertex_round
+from ..core.plan import InfeasibleError, Plan
+from ..core.problem import ScheduleProblem
+
+from . import features as F
+from . import model as M
+
+_INIT_CACHE: dict[M.LearnedModelConfig, dict] = {}
+
+
+def concentrate(frac: np.ndarray, size_bits: np.ndarray, slot_seconds,
+                rate_cap_bps: np.ndarray, mask: np.ndarray) -> np.ndarray:
+    """Model fractions -> rate-cap-saturated plan on each job's top slots.
+
+    The raw softmax spreads bytes across every plausible slot, and Eq. 3's
+    nonlinear power curve (idle floor per active slot) punishes exactly
+    that.  The LP optimum is a flow-polytope vertex — almost every used
+    cell sits at the rate cap — so the hardening step walks each job's
+    slots in *model-preference order* (fraction descending) assigning
+    ``min(rate_cap * dt, remaining bytes)``: the model's ranking decides
+    WHERE the bytes go, the vertex structure comes for free.  Vectorized
+    over (fleet, job): argsort + cumulative-capacity clip + inverse
+    scatter, no Python loop over jobs.
+
+    Per-job feasible by construction whenever the workload is
+    (``window * rate_cap * dt >= size``); the shared link capacity is
+    restored afterwards by ``repair``.
+    """
+    frac = np.asarray(frac, dtype=np.float64)
+    b, j, s = frac.shape
+    dt = np.asarray(slot_seconds, dtype=np.float64).reshape(b, 1, 1)
+    cap_bits = np.broadcast_to(
+        np.asarray(rate_cap_bps, dtype=np.float64).reshape(b, 1, 1) * dt,
+        (b, j, s))
+    order = np.argsort(np.where(mask, -frac, np.inf), axis=2, kind="stable")
+    cap_sorted = np.where(np.take_along_axis(mask, order, axis=2),
+                          np.take_along_axis(cap_bits, order, axis=2), 0.0)
+    ahead = np.cumsum(cap_sorted, axis=2) - cap_sorted
+    take = np.clip(size_bits[:, :, None] - ahead, 0.0, cap_sorted)
+    rho = np.zeros_like(frac)
+    np.put_along_axis(rho, order, take, axis=2)
+    return rho / dt
+
+
+def _default_params(cfg: M.LearnedModelConfig) -> dict:
+    """Deterministic untrained weights, one tree per model config."""
+    if cfg not in _INIT_CACHE:
+        _INIT_CACHE[cfg] = M.init_params(jax.random.PRNGKey(cfg.seed), cfg)
+    return _INIT_CACHE[cfg]
+
+
+@dataclasses.dataclass(frozen=True)
+class LearnedPolicy:
+    """Distilled-LP scheduling policy, registered as ``"lints-learned"``."""
+
+    params: Any = None
+    model: M.LearnedModelConfig = M.LearnedModelConfig()
+    vertex_round: bool = True
+    validate: bool = True
+    fallback: str = "lints"
+    name: str = "lints-learned"
+
+    def _params(self) -> dict:
+        return self.params if self.params is not None else \
+            _default_params(self.model)
+
+    # ------------------------------------------------------------- planning
+
+    def plan(self, problem: ScheduleProblem) -> Plan:
+        from ..core.api import _stamp
+
+        return _stamp(self.plan_batch([problem])[0], self.name)
+
+    def plan_batch(self, problems: Sequence[ScheduleProblem]) -> list[Plan]:
+        from ..core.api import _stamp
+
+        problems = list(problems)
+        for p in problems:
+            ok, why = workload_feasible(p)
+            if not ok:
+                raise InfeasibleError(f"workload infeasible: {why}")
+        batch, padded = F.featurize_fleet(problems)
+        frac = M.fractions(self._params(), batch, self.model)
+        soft = concentrate(frac, batch.size_bits, batch.slot_seconds,
+                           np.array([p.rate_cap_bps for p in problems]),
+                           batch.mask)
+
+        plans: list[Plan] = []
+        hardened, failures = self._harden_batch(problems, padded, soft)
+        for i, (prob, rho) in enumerate(zip(problems, hardened)):
+            if rho is None:
+                plan = self._fallback_plan(prob, failures[i])
+            else:
+                plan = Plan(rho, self.name, meta={
+                    "objective": float((prob.cost * rho).sum()),
+                    "learned": {"d_model": self.model.d_model,
+                                "trained": self.params is not None},
+                })
+            plans.append(_stamp(plan, self.name, i, len(problems)))
+        return plans
+
+    def plan_incremental(self, problem: ScheduleProblem,
+                         warm: Any = None, *,
+                         inject: Any = None,
+                         resilient: bool = True) -> Plan:
+        """Online-engine hook: a forward pass is its own warm start.
+
+        ``warm``/``inject``/``resilient`` are accepted for planner-protocol
+        compatibility; the forward pass cannot resume or fail like an
+        iterative solver, and injected solver faults target the rungs of
+        the LP ladder this policy only enters through its fallback.
+        """
+        plan = self.plan(problem)
+        plan.meta.setdefault("warm_started", False)
+        return plan
+
+    # ------------------------------------------------------------ finishing
+
+    def _harden_batch(self, problems, padded, soft):
+        """Batched repair/round/validate; per-problem None on failure.
+
+        The batched tail raises :class:`InfeasibleError` for the whole
+        stack on a strict-fill failure, so on any trouble we redo the tail
+        per problem and only the genuinely broken members fall back.
+        """
+        try:
+            stack = finishing.stack_problems(padded)
+            rho = finishing.repair_batch(stack, soft)
+            if self.vertex_round:
+                rho, _ = finishing.vertex_round_batch(stack, rho)
+            if self.validate:
+                reports = check_plan_batch(padded, rho, rel_tol=1e-6)
+                if not all(r.feasible for r in reports):
+                    raise InfeasibleError("batched finishing left "
+                                          "infeasible members")
+        except InfeasibleError:
+            out, failures = [], []
+            for prob, soft_one in zip(problems, soft):
+                try:
+                    out.append(self._harden_one(
+                        prob, soft_one[:prob.n_jobs, :prob.n_slots]))
+                    failures.append(None)
+                except InfeasibleError as e:
+                    out.append(None)
+                    failures.append(str(e))
+            return out, failures
+        return ([rho[i, :p.n_jobs, :p.n_slots]
+                 for i, p in enumerate(problems)], [None] * len(problems))
+
+    def _harden_one(self, problem: ScheduleProblem,
+                    soft: np.ndarray) -> np.ndarray:
+        rho = repair_plan(problem, soft)
+        if self.vertex_round:
+            try:
+                rho = vertex_round(problem, Plan(rho, self.name)).rho_bps
+            except InfeasibleError:
+                pass  # tight capacity: keep the repaired (feasible) plan
+        if self.validate:
+            report = check_plan(problem, rho, rel_tol=1e-6)
+            if not report.feasible:
+                raise InfeasibleError(
+                    "learned plan failed validation "
+                    f"(worst violation {report.worst():.3g})")
+        return rho
+
+    def _fallback_plan(self, problem: ScheduleProblem,
+                       reason: str | None) -> Plan:
+        from ..core.api import get_policy
+
+        plan = get_policy(self.fallback).plan(problem)
+        plan.meta["fallback"] = self.fallback
+        plan.meta["fallback_reason"] = reason or "finishing failed"
+        return plan

@@ -1,0 +1,227 @@
+"""Distill the LinTS LP into the attention head: data, loss, train loop.
+
+Training data is *free*: :func:`sample_fleet` draws randomized synthetic
+workloads (zones, trace seeds, sizes, deadlines, staggered releases) and
+``Scheduler("lints").plan_batch`` — the paper-faithful HiGHS oracle —
+labels every problem with its optimal plan.  Targets are the LP plan
+renormalized to per-job slot *fractions* (``rho * dt / size``), the same
+parameterization the model emits, so imitation is a masked KL between two
+distributions over allowed slots.
+
+The loss adds the differentiable emissions objective on the model's own
+fractions (``sum fractions * normalized_cost``): where the LP optimum is
+degenerate (ties between equally-cheap slots), imitation alone is
+indifferent and the objective term breaks the tie toward cleaner slots.
+
+The jitted step follows ``train/step.py``'s shape (value_and_grad ->
+``optim.adamw.adamw_update`` -> metrics dict) and checkpoints through
+``checkpoint/manager.py``.  Everything is deterministic in ``seed``:
+same seed, bit-identical dataset tensors (tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.manager import CheckpointManager
+from ..configs.base import OptimizerConfig
+from ..core import trace
+from ..core.problem import ScheduleProblem, TransferRequest, build_problem
+from ..core.feasibility import workload_feasible
+from ..optim import adamw
+
+from . import features as F
+from . import model as M
+
+_ZONES = ("US-NM", "US-CO", "US-UT", "US-WY", "US-SD", "US-SC", "US-MT",
+          "US-OR", "US-TX", "US-GA")
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    """Workload distribution the policy is distilled on (and judged on —
+    the bench holds out *seeds*, not a different distribution)."""
+
+    n_problems: int = 48
+    jobs_range: tuple[int, int] = (3, 10)       # inclusive
+    hours: int = 24
+    slots_per_hour: int = 4
+    path_len: tuple[int, int] = (2, 3)
+    size_range_gb: tuple[float, float] = (4.0, 45.0)
+    capacity_range_gbps: tuple[float, float] = (0.5, 1.5)
+    min_deadline_h: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class Dataset:
+    """Featurized solved fleet: one bucket canvas + LP fraction targets."""
+
+    batch: F.FeatureBatch
+    targets: np.ndarray    # (B, J, S) float32 LP plan fractions, 0 on pads
+    job_mask: np.ndarray   # (B, J) bool — True for real jobs
+
+    @property
+    def n_problems(self) -> int:
+        return self.batch.features.shape[0]
+
+
+def sample_fleet(
+    cfg: DataConfig, seed: int,
+) -> list[tuple[list[TransferRequest], trace.TraceSet, ScheduleProblem]]:
+    """Randomized (requests, traces, problem) triples, feasible by retry.
+
+    All randomness flows from ``np.random.default_rng(seed)`` (trace seeds
+    are drawn from it too), so the fleet is a pure function of ``seed``.
+    """
+    rng = np.random.default_rng(seed)
+    out = []
+    horizon = cfg.hours * cfg.slots_per_hour
+    while len(out) < cfg.n_problems:
+        n_zones = int(rng.integers(cfg.path_len[0], cfg.path_len[1] + 1))
+        path = tuple(rng.choice(_ZONES, size=n_zones, replace=False))
+        traces = trace.make_trace_set(
+            path, hours=cfg.hours, slot_seconds=3600.0 / cfg.slots_per_hour,
+            seed=int(rng.integers(0, 2**31 - 1)))
+        n_jobs = int(rng.integers(cfg.jobs_range[0], cfg.jobs_range[1] + 1))
+        capacity = float(rng.uniform(*cfg.capacity_range_gbps))
+        reqs = []
+        for i in range(n_jobs):
+            offset = int(rng.integers(0, horizon // 2))
+            deadline = int(rng.integers(
+                offset + cfg.min_deadline_h * cfg.slots_per_hour,
+                horizon + 1))
+            reqs.append(TransferRequest(
+                size_gb=float(rng.uniform(*cfg.size_range_gb)),
+                deadline_slots=deadline, offset_slots=offset, path=path,
+                request_id=f"s{seed}-p{len(out)}-r{i}"))
+        prob = build_problem(reqs, traces, capacity_gbps=capacity)
+        if workload_feasible(prob)[0]:
+            out.append((reqs, traces, prob))
+    return out
+
+
+def build_dataset(cfg: DataConfig = DataConfig(), seed: int = 0) -> Dataset:
+    """Sample a fleet, solve it with the LP oracle, featurize the lot."""
+    from ..core import api
+
+    triples = sample_fleet(cfg, seed)
+    problems = [p for _, _, p in triples]
+    plans = api.Scheduler("lints").plan_batch(problems)
+    batch, _ = F.featurize_fleet(problems)
+    bj, bs = batch.bucket
+    targets = np.zeros((len(problems), bj, bs), dtype=np.float32)
+    for b, (prob, plan) in enumerate(zip(problems, plans)):
+        frac = (plan.rho_bps * prob.slot_seconds
+                / np.maximum(prob.size_bits[:, None], 1e-30))
+        targets[b, :prob.n_jobs, :prob.n_slots] = frac
+    targets *= batch.mask  # solver epsilon outside the window never leaks
+    job_mask = batch.mask.any(axis=2)
+    return Dataset(batch, targets, job_mask)
+
+
+# ---------------------------------------------------------------------------
+# Loss + jitted step
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, feats, mask, targets, job_mask,
+            cfg: M.LearnedModelConfig, objective_weight: float):
+    frac = M.forward(params, feats, mask, cfg)
+    maskf = mask.astype(jnp.float32)
+    eps = 1e-9
+    # KL(target || model) over each real job's allowed slots.
+    kl_cell = targets * (jnp.log(targets + eps) - jnp.log(frac + eps))
+    n_jobs = jnp.maximum(job_mask.sum(), 1.0)
+    kl = (kl_cell * maskf).sum() / n_jobs
+    # Differentiable emissions proxy on the model's own fractions.
+    emis = (frac * feats[..., 0] * maskf).sum() / n_jobs
+    return kl + objective_weight * emis, {"kl": kl, "emissions": emis}
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4, 5))
+def _train_step(state, batch, step, cfg, ocfg, objective_weight):
+    feats, mask, targets, job_mask = batch
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        state["params"], feats, mask, targets, job_mask, cfg,
+        objective_weight)
+    new_params, new_opt, stats = adamw.adamw_update(
+        grads, state["opt"], state["params"], ocfg, step)
+    return ({"params": new_params, "opt": new_opt},
+            dict(metrics, loss=loss, **stats))
+
+
+def train(
+    dataset: Dataset,
+    model_cfg: M.LearnedModelConfig = M.LearnedModelConfig(),
+    *,
+    steps: int = 200,
+    optimizer: OptimizerConfig | None = None,
+    objective_weight: float = 0.05,
+    checkpoint_dir: str | None = None,
+    seed: int | None = None,
+) -> tuple[dict, list[dict]]:
+    """Full-batch imitation training; returns (params, per-step metrics)."""
+    ocfg = optimizer or OptimizerConfig(
+        lr=3e-3, warmup_steps=max(steps // 10, 1), total_steps=steps,
+        weight_decay=0.0, grad_clip_norm=1.0)
+    key = jax.random.PRNGKey(model_cfg.seed if seed is None else seed)
+    params = M.init_params(key, model_cfg)
+    state = {"params": params, "opt": adamw.adamw_init(params, ocfg)}
+    batch = (jnp.asarray(dataset.batch.features),
+             jnp.asarray(dataset.batch.mask),
+             jnp.asarray(dataset.targets),
+             jnp.asarray(dataset.job_mask))
+    history = []
+    for step in range(steps):
+        state, metrics = _train_step(state, batch, step, model_cfg, ocfg,
+                                     float(objective_weight))
+        history.append({k: float(v) for k, v in metrics.items()})
+    if checkpoint_dir is not None:
+        CheckpointManager(checkpoint_dir, keep=2).save(
+            steps, {"params": state["params"]})
+    return state["params"], history
+
+
+def load_params(checkpoint_dir: str) -> dict:
+    """Restore trained params from a :class:`CheckpointManager` root."""
+    tree, _, _ = CheckpointManager(checkpoint_dir).restore()
+    return tree["params"]
+
+
+def distill(
+    *,
+    fast: bool = False,
+    seed: int = 0,
+    steps: int | None = None,
+    data: DataConfig | None = None,
+    model_cfg: M.LearnedModelConfig | None = None,
+    checkpoint_dir: str | None = None,
+):
+    """One-call distillation: sample + solve + train -> ``LearnedPolicy``.
+
+    ``fast=True`` is the CI/docs preset (<=20 steps, small fleet — seconds
+    on a 2-core CPU); the full preset is what ``benchmarks/learned.py``
+    uses.  Training fleets use seeds ``seed .. seed+2``; callers judging
+    generalization should evaluate on other seeds (the bench holds out
+    ``seed+1000`` onward).
+    """
+    from .policy import LearnedPolicy
+
+    if fast:
+        data = data or DataConfig(n_problems=16, jobs_range=(3, 8))
+        steps = 20 if steps is None else min(steps, 20)
+        model_cfg = model_cfg or M.LearnedModelConfig(
+            d_model=16, n_heads=2, head_dim=8, hidden=32)
+    else:
+        data = data or DataConfig()
+        steps = steps or 300
+        model_cfg = model_cfg or M.LearnedModelConfig()
+    dataset = build_dataset(data, seed)
+    params, history = train(dataset, model_cfg, steps=steps,
+                            checkpoint_dir=checkpoint_dir, seed=seed)
+    return LearnedPolicy(params=params, model=model_cfg), history

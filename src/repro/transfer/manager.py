@@ -206,7 +206,9 @@ class TransferManager:
         drift_tol: float = 0.10,
         *,
         # Keyword-only so the pre-facade positional signature (which ended
-        # at drift_tol) keeps working unchanged.
+        # at drift_tol) keeps working unchanged.  Any registry name or
+        # Policy instance works, including the distilled "lints-learned"
+        # head (DESIGN.md §15) for a microsecond decision path.
         policy: str | api.Policy = "lints",
         # Fault model + graceful degradation (DESIGN.md §12).  ``faults``
         # injects deterministic link/forecast/solver faults; ``recovery``

@@ -14,6 +14,7 @@ PATH = ("US-NM", "US-WY", "US-SD")
 
 EXPECTED_POLICIES = {
     "lints", "lints_pdhg", "lints+", "lints-spatial", "lints-robust",
+    "lints-learned",
     "fcfs", "edf", "worst_case", "single_threshold", "double_threshold",
 }
 
@@ -88,8 +89,23 @@ def test_get_policy_overrides_require_dataclass(monkeypatch):
 
     monkeypatch.setitem(api._REGISTRY, "custom", Custom())
     assert api.get_policy("custom").name == "custom"   # plain lookup works
-    with pytest.raises(TypeError, match="dataclass"):
-        api.get_policy("custom", best_effort=True)
+    with pytest.raises(TypeError) as exc:
+        api.get_policy("custom", best_effort=True, window=3)
+    # the error names the offending policy AND the override keys up front
+    msg = str(exc.value)
+    assert "custom" in msg and "best_effort" in msg and "window" in msg
+
+
+def test_get_policy_unknown_override_names_keys_and_fields():
+    with pytest.raises(TypeError) as exc:
+        api.get_policy("edf", best_effort=True, no_such_field=1, typo=2)
+    msg = str(exc.value)
+    # names the policy, every unknown key, and the valid fields —
+    # and raises BEFORE mutating anything
+    assert "edf" in msg
+    assert "no_such_field" in msg and "typo" in msg
+    assert "best_effort" in msg  # listed among the valid fields
+    assert not api.get_policy("edf").best_effort
 
 
 # ----------------------------------------------------------------- planning
@@ -152,6 +168,13 @@ def test_heuristic_plan_batch_stamps_batch_meta(small_problem):
 
 # -------------------------------------------------------- deprecation shims
 
+@pytest.fixture
+def fresh_deprecations(monkeypatch):
+    """Reset the process-level warn-once registry so each test sees the
+    first-call warning regardless of execution order."""
+    monkeypatch.setattr(lints, "_DEPRECATION_WARNED", set())
+
+
 def test_old_imports_still_work():
     from repro.core.heuristics import HEURISTICS
     from repro.core.lints import schedule, solve, solve_batch  # noqa: F401
@@ -161,10 +184,11 @@ def test_old_imports_still_work():
     assert callable(solve) and callable(schedule) and callable(solve_batch)
 
 
-def test_lints_solve_shim_warns_once_and_matches_facade(small_problem):
+def test_lints_solve_shim_warns_once_and_matches_facade(
+        small_problem, fresh_deprecations):
     with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("default")
-        for _ in range(2):  # same call site: the warning dedups to one
+        warnings.simplefilter("always")  # registry dedups, not the filter
+        for _ in range(2):
             shim_plan = lints.solve(small_problem)
     dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
     assert len(dep) == 1
@@ -173,7 +197,24 @@ def test_lints_solve_shim_warns_once_and_matches_facade(small_problem):
     np.testing.assert_allclose(shim_plan.rho_bps, facade_plan.rho_bps)
 
 
-def test_lints_schedule_shim_warns_and_delegates():
+def test_shim_warning_attributes_to_caller(small_problem, fresh_deprecations):
+    """Regression: the DeprecationWarning must point at the caller's file,
+    not at lints.py's internal ``_deprecated``/shim frames."""
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        lints.solve(small_problem)
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert dep[0].filename == __file__
+    # warn-once: a second call from ANY site stays silent
+    with warnings.catch_warnings(record=True) as again:
+        warnings.simplefilter("always")
+        lints.solve(small_problem)
+    assert not [w for w in again
+                if issubclass(w.category, DeprecationWarning)]
+
+
+def test_lints_schedule_shim_warns_and_delegates(fresh_deprecations):
     traces = trace.make_trace_set(PATH, hours=72, seed=0)
     reqs = problem.paper_workload(n_jobs=4, seed=2)
     with warnings.catch_warnings(record=True) as caught:
@@ -183,7 +224,8 @@ def test_lints_schedule_shim_warns_and_delegates():
     assert shim_plan.meta["policy"] == "lints"
 
 
-def test_lints_solve_batch_shim_warns_and_delegates(small_problem):
+def test_lints_solve_batch_shim_warns_and_delegates(
+        small_problem, fresh_deprecations):
     cfg = lints.LinTSConfig(
         backend="pdhg",
         pdhg=dataclasses.replace(lints.LinTSConfig().pdhg, max_iters=20_000,

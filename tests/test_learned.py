@@ -1,0 +1,274 @@
+"""Learned scheduling policy: features, data generator, training, policy.
+
+DESIGN.md §15.  Covers the ISSUE-9 satellite contract for the training
+data generator (seed-reproducibility, mask respect, ragged round-trip
+without padding leakage) plus the policy surface: registration, feasible
+plans with stamped meta, batched-vs-solo parity, LP fallback recording,
+checkpoint round-trip, and a <=20-step CPU training smoke.
+"""
+
+import dataclasses
+import importlib
+
+import numpy as np
+import pytest
+
+from repro import learned
+from repro.core import api, problem, ragged, trace
+from repro.core.feasibility import check_plan
+from repro.core.plan import InfeasibleError, Plan
+from repro.learned import features as F
+from repro.learned import model as M
+from repro.learned import policy as P
+
+# ``learned.train`` the *function* shadows the submodule on the package,
+# so fetch the module itself.
+T = importlib.import_module("repro.learned.train")
+
+PATH = ("US-NM", "US-WY", "US-SD")
+
+TINY_DATA = T.DataConfig(n_problems=4, jobs_range=(2, 5))
+TINY_MODEL = M.LearnedModelConfig(d_model=8, n_heads=2, head_dim=4, hidden=16)
+
+
+@pytest.fixture(scope="module")
+def small_problem():
+    traces = trace.make_trace_set(PATH, hours=72, seed=0)
+    reqs = problem.paper_workload(n_jobs=5, seed=3)
+    return problem.build_problem(reqs, traces, capacity_gbps=0.5)
+
+
+@pytest.fixture(scope="module")
+def tiny_dataset():
+    return T.build_dataset(TINY_DATA, seed=11)
+
+
+# ------------------------------------------------------------------ features
+
+def test_featurize_shapes_and_mask_zeroing(small_problem):
+    feats = F.featurize(small_problem)
+    assert feats.shape == (small_problem.n_jobs, small_problem.n_slots,
+                           F.N_FEATURES)
+    assert feats.dtype == np.float32
+    # every plane is zero outside the allowed-slot mask
+    outside = ~small_problem.mask
+    assert np.all(feats[outside] == 0.0)
+    # the mask plane is the mask
+    np.testing.assert_array_equal(feats[..., 2] > 0, small_problem.mask)
+
+
+def test_featurize_commutes_with_padding(small_problem):
+    """Bucket padding must not perturb real cells (no padding leakage)."""
+    feats = F.featurize(small_problem)
+    bj, bs = ragged.bucket_shape(small_problem.n_jobs + 3,
+                                 small_problem.n_slots + 17)
+    padded = F.featurize(ragged.pad_problem(small_problem, bj, bs))
+    np.testing.assert_array_equal(
+        padded[:small_problem.n_jobs, :small_problem.n_slots], feats)
+    assert np.all(padded[small_problem.n_jobs:] == 0.0)
+    assert np.all(padded[:, small_problem.n_slots:] == 0.0)
+
+
+def test_featurize_fleet_raggged_buckets():
+    triples = T.sample_fleet(TINY_DATA, seed=5)
+    problems = [p for _, _, p in triples]
+    batch, padded = F.featurize_fleet(problems)
+    bj, bs = batch.bucket
+    assert (bj, bs) == ragged.bucket_shape(max(p.n_jobs for p in problems),
+                                           max(p.n_slots for p in problems))
+    for b, p in enumerate(problems):
+        np.testing.assert_array_equal(batch.features[b, :p.n_jobs, :p.n_slots],
+                                      F.featurize(p))
+        assert not batch.mask[b, p.n_jobs:].any()
+        assert batch.size_bits[b, p.n_jobs:].sum() == 0.0
+
+
+# -------------------------------------------------------------- data generator
+
+def test_dataset_seed_reproducible():
+    a = T.build_dataset(TINY_DATA, seed=11)
+    b = T.build_dataset(TINY_DATA, seed=11)
+    np.testing.assert_array_equal(a.batch.features, b.batch.features)
+    np.testing.assert_array_equal(a.batch.mask, b.batch.mask)
+    np.testing.assert_array_equal(a.targets, b.targets)
+    assert a.batch.shapes == b.batch.shapes
+
+
+def test_dataset_different_seed_differs():
+    a = T.build_dataset(TINY_DATA, seed=11)
+    c = T.build_dataset(TINY_DATA, seed=12)
+    assert not (a.batch.shapes == c.batch.shapes
+                and np.array_equal(a.batch.features, c.batch.features))
+
+
+def test_dataset_targets_respect_masks(tiny_dataset):
+    ds = tiny_dataset
+    assert np.all(ds.targets[~ds.batch.mask] == 0.0)
+    # LP fraction targets sum to ~1 over each real job's allowed slots
+    sums = ds.targets.sum(axis=2)[ds.job_mask]
+    np.testing.assert_allclose(sums, 1.0, atol=1e-5)
+    # pad jobs are dead rows
+    assert np.all(ds.targets.sum(axis=2)[~ds.job_mask] == 0.0)
+
+
+def test_sample_fleet_is_feasible_and_deterministic():
+    a = T.sample_fleet(TINY_DATA, seed=3)
+    b = T.sample_fleet(TINY_DATA, seed=3)
+    from repro.core.feasibility import workload_feasible
+
+    for (_, _, pa), (_, _, pb) in zip(a, b):
+        assert workload_feasible(pa)[0]
+        np.testing.assert_array_equal(pa.cost, pb.cost)
+        np.testing.assert_array_equal(pa.size_bits, pb.size_bits)
+
+
+# ------------------------------------------------------------------- model
+
+def test_forward_masked_softmax_properties(tiny_dataset):
+    ds = tiny_dataset
+    params = M.init_params(__import__("jax").random.PRNGKey(0), TINY_MODEL)
+    frac = M.fractions(params, ds.batch, TINY_MODEL)
+    assert frac.shape == ds.batch.mask.shape
+    assert np.all(frac >= 0.0)
+    assert np.all(frac[~ds.batch.mask] == 0.0)
+    np.testing.assert_allclose(frac.sum(axis=2)[ds.job_mask], 1.0, atol=1e-5)
+    # all-masked (pad) jobs emit exactly zero, never a uniform leak
+    assert np.all(frac.sum(axis=2)[~ds.job_mask] == 0.0)
+
+
+def test_concentrate_delivers_bytes_at_rate_cap(small_problem):
+    p = small_problem
+    rng = np.random.default_rng(0)
+    frac = np.where(p.mask, rng.random((1, p.n_jobs, p.n_slots)), 0.0)
+    rho = P.concentrate(frac, p.size_bits[None], np.array([p.slot_seconds]),
+                        np.array([p.rate_cap_bps]), p.mask[None])[0]
+    np.testing.assert_allclose(rho.sum(axis=1) * p.slot_seconds, p.size_bits,
+                               rtol=1e-12)
+    assert rho.max() <= p.rate_cap_bps * (1 + 1e-12)
+    assert np.all(rho[~p.mask] == 0.0)
+    # bytes land on the highest-fraction slots first
+    used = rho > 0
+    for i in range(p.n_jobs):
+        if used[i].any():
+            assert frac[0, i][used[i]].min() >= frac[0, i][~used[i]].max()
+
+
+# ------------------------------------------------------------------- policy
+
+def test_registered_and_plannable_through_scheduler(small_problem):
+    assert "lints-learned" in api.available_policies()
+    plan = api.Scheduler("lints-learned").plan(small_problem)
+    assert plan.meta["policy"] == "lints-learned"
+    assert plan.meta["learned"]["trained"] is False  # registry default
+    assert check_plan(small_problem, plan.rho_bps, rel_tol=1e-5).feasible
+
+
+def test_ragged_plan_batch_matches_solo_plans():
+    """Fleet planning through one bucket == per-problem plans, no leakage."""
+    problems = [p for _, _, p in T.sample_fleet(TINY_DATA, seed=7)]
+    assert len({(p.n_jobs, p.n_slots) for p in problems}) > 1, "want ragged"
+    pol = api.get_policy("lints-learned")
+    batch_plans = pol.plan_batch(problems)
+    for i, (p, bp) in enumerate(zip(problems, batch_plans)):
+        solo = pol.plan(p)
+        np.testing.assert_allclose(bp.rho_bps, solo.rho_bps, atol=1e-9)
+        assert bp.rho_bps.shape == (p.n_jobs, p.n_slots)
+        assert bp.meta["batch_index"] == i
+        assert check_plan(p, bp.rho_bps, rel_tol=1e-5).feasible
+
+
+def test_policy_infeasible_workload_raises(small_problem):
+    impossible = dataclasses.replace(
+        small_problem, size_bits=small_problem.size_bits * 1e6)
+    with pytest.raises(InfeasibleError):
+        api.get_policy("lints-learned").plan(impossible)
+
+
+def test_validation_failure_falls_back_to_lp(small_problem, monkeypatch):
+    """A hardening failure ships the LP plan and records it in meta."""
+
+    def broken_harden(self, problem, soft):
+        raise InfeasibleError("forced hardening failure")
+
+    monkeypatch.setattr(P.LearnedPolicy, "_harden_batch",
+                        lambda self, problems, padded, soft:
+                        ([None] * len(problems),
+                         ["forced hardening failure"] * len(problems)))
+    plan = api.get_policy("lints-learned").plan(small_problem)
+    assert plan.meta["policy"] == "lints-learned"
+    assert plan.meta["fallback"] == "lints"
+    assert plan.meta["fallback_reason"] == "forced hardening failure"
+    assert check_plan(small_problem, plan.rho_bps, rel_tol=1e-5).feasible
+
+
+def test_policy_overrides_via_registry():
+    pol = api.get_policy("lints-learned", vertex_round=False,
+                         fallback="edf")
+    assert pol.vertex_round is False and pol.fallback == "edf"
+
+
+# ---------------------------------------------------------------- training
+
+def test_training_smoke_improves_loss(tiny_dataset):
+    """<=20 steps on CPU: loss must drop and the result must plan."""
+    params, history = T.train(tiny_dataset, TINY_MODEL, steps=15, seed=0)
+    assert len(history) == 15
+    assert history[-1]["loss"] < history[0]["loss"]
+    pol = P.LearnedPolicy(params=params, model=TINY_MODEL)
+    prob = [p for _, _, p in T.sample_fleet(TINY_DATA, seed=21)][0]
+    plan = pol.plan(prob)
+    assert plan.meta["learned"]["trained"] is True
+    assert check_plan(prob, plan.rho_bps, rel_tol=1e-5).feasible
+
+
+def test_train_checkpoint_roundtrip(tiny_dataset, tmp_path):
+    params, _ = T.train(tiny_dataset, TINY_MODEL, steps=3, seed=0,
+                        checkpoint_dir=str(tmp_path))
+    restored = T.load_params(str(tmp_path))
+    prob = [p for _, _, p in T.sample_fleet(TINY_DATA, seed=22)][0]
+    a = P.LearnedPolicy(params=params, model=TINY_MODEL).plan(prob)
+    b = P.LearnedPolicy(params=restored, model=TINY_MODEL).plan(prob)
+    np.testing.assert_allclose(a.rho_bps, b.rho_bps)
+
+
+def test_training_is_seed_deterministic(tiny_dataset):
+    pa, _ = T.train(tiny_dataset, TINY_MODEL, steps=3, seed=4)
+    pb, _ = T.train(tiny_dataset, TINY_MODEL, steps=3, seed=4)
+    import jax
+
+    for la, lb in zip(jax.tree_util.tree_leaves(pa),
+                      jax.tree_util.tree_leaves(pb)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ------------------------------------------------------------- integrations
+
+def test_transfer_manager_plans_with_learned_policy():
+    from repro.transfer import Datacenter, Topology, TransferManager
+
+    zones = ("US-NM", "US-SC")
+    traces = trace.make_trace_set(zones, hours=24, seed=2)
+    topo = Topology(datacenters=(Datacenter("a", "US-NM"),
+                                 Datacenter("b", "US-SC")),
+                    routes={("a", "b"): zones})
+    tm = TransferManager(topo, traces, capacity_gbps=1.0,
+                         policy="lints-learned")
+    tm.enqueue(4.0, "a", "b", deadline_slots=48, request_id="t0")
+    tm.run_until_idle()
+    report = tm.report()
+    assert report["completed"] == 1
+    assert report["sla_violations"] == 0
+
+
+def test_evaluate_ensemble_judges_learned_policy(small_problem):
+    from repro.core.montecarlo import evaluate_ensemble
+
+    traces = trace.make_trace_set(PATH, hours=72, seed=0)
+    reqs = problem.paper_workload(n_jobs=5, seed=3)
+    plans = [api.get_policy(n).plan(small_problem)
+             for n in ("lints", "edf", "lints-learned")]
+    reports = evaluate_ensemble(small_problem, plans, sigma=0.05, n_draws=4,
+                                requests=reqs, traces=traces, seed=0)
+    assert "lints-learned" in reports
+    assert reports["lints-learned"].sla_violations == 0
+    assert reports["lints-learned"].mean_gco2 <= reports["edf"].mean_gco2
