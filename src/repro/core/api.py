@@ -650,8 +650,19 @@ class Scheduler:
         capacity_gbps: float,
         power: PowerModel = DEFAULT_POWER_MODEL,
     ) -> Plan:
-        """End-to-end: requests + forecasts -> plan under this policy."""
-        return self.plan(self.build(requests, traces, capacity_gbps, power))
+        """End-to-end: requests + forecasts -> plan under this policy.
+
+        Policies with a ``wrap_problem`` hook (``lints-robust`` scenario
+        draws, ``lints-fair`` tenant ledgers) get it applied here exactly
+        as :meth:`repro.transfer.TransferManager.replan` does online, so
+        request-level structure (e.g. ``TransferRequest.tenant``) survives
+        the problem build.
+        """
+        problem = self.build(requests, traces, capacity_gbps, power)
+        wrapper = getattr(self.policy, "wrap_problem", None)
+        if wrapper is not None:
+            problem = wrapper(problem, requests, traces)
+        return self.plan(problem)
 
     def schedule_spatiotemporal(self, requests, traces, link_capacity_gbps,
                                 power: PowerModel = DEFAULT_POWER_MODEL,
@@ -707,3 +718,7 @@ register_policy(_RobustPolicy())                     # CVaR over noise draws
 from ..learned.policy import LearnedPolicy as _LearnedPolicy  # noqa: E402
 
 register_policy(_LearnedPolicy())                    # distilled LP (§15)
+
+from .fairness import FairPolicy as _FairPolicy  # noqa: E402  (avoids cycle)
+
+register_policy(_FairPolicy())                       # tenant ledgers (§16)

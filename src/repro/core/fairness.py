@@ -1,0 +1,661 @@
+"""Multi-tenant fairness: per-tenant carbon-budget credit ledgers (§16).
+
+One shared WAN, many tenants: a tenant with loose deadlines can have its
+low-carbon slots stranded by another tenant's deadline pressure, and
+nothing in the base LP stops one tenant from spending the whole carbon
+budget.  ROADMAP item 5's credit-ledger mechanism makes the budget an
+explicit constraint: each tenant tau holds a ledger B_tau of gCO2-weighted
+LP credit, and the LP may not charge a tenant's cells past its ledger,
+
+    minimize    sum_ij  c[i,j] * rho[i,j]
+    subject to  the usual byte / capacity / box rows, plus
+                sum_{cells (i,j) of tenant tau} c[i,j] * rho[i,j] <= B_tau.
+
+The ledger rows couple each tenant's jobs through their own cost cells, so
+with every ledger at infinity the polytope — and therefore the optimum —
+is exactly plain LinTS (the ≤1e-9 differential-parity contract of
+``tests/test_scenarios.py``).  The ledger is denominated in the LP's
+linearized emission proxy (the same gCO2-weighted units as
+``meta["objective"]``): that is the quantity the optimizer can actually
+certify; simulator-exact per-tenant emissions are reported alongside by
+the evaluation layer (:func:`repro.core.montecarlo.evaluate_ensemble`).
+
+Backend split mirrors ``lints-robust`` (DESIGN.md §14): the sparse HiGHS
+oracle (:func:`repro.core.scipy_backend.solve_fair_scipy`) is the
+paper-faithful default; :func:`repro.core.pdhg.pdhg_solve_fair` solves the
+identical LP TPU-natively with one extra dual vector over the ledger rows,
+parity-gated ≤1e-6 by ``benchmarks/scenarios.py``.  The policy registers
+as ``lints-fair`` and plans through ``Scheduler`` / ``TransferManager`` /
+``evaluate_ensemble`` like every other registry policy.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+from .feasibility import check_plan, repair_plan, workload_feasible
+from .plan import InfeasibleError, Plan
+from .power import DEFAULT_POWER_MODEL, PowerModel
+from .problem import ScheduleProblem, TransferRequest, build_problem
+from .trace import TraceSet
+
+__all__ = [
+    "FairProblem",
+    "FairConfig",
+    "FairPolicy",
+    "as_fair",
+    "build_fair_problem",
+    "tenant_objectives",
+    "binding_budgets",
+    "solve_fair",
+    "DEFAULT_TENANT",
+]
+
+# Ledger name for requests that never set ``TransferRequest.tenant``.
+DEFAULT_TENANT = "default"
+
+
+@dataclasses.dataclass(frozen=True)
+class FairProblem(ScheduleProblem):
+    """A :class:`ScheduleProblem` plus the tenant/ledger structure.
+
+    ``tenant_ids`` names the tenants; ``tenant_of[i]`` indexes job ``i``'s
+    tenant; ``budgets_g[t]`` is tenant ``t``'s carbon-credit ledger in the
+    LP's gCO2-weighted objective units (``np.inf`` = uncapped).
+    """
+
+    tenant_ids: tuple[str, ...] = (DEFAULT_TENANT,)
+    tenant_of: np.ndarray | None = None    # (n_jobs,) int index
+    budgets_g: np.ndarray | None = None    # (n_tenants,), inf = uncapped
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self.tenant_ids)
+
+    def budget_of(self, tenant: str) -> float:
+        return float(self.budgets_g[self.tenant_ids.index(tenant)])
+
+
+def as_fair(
+    base: ScheduleProblem,
+    tenant_ids: Sequence[str],
+    tenant_of: np.ndarray,
+    budgets_g: np.ndarray | Mapping[str, float] | None = None,
+) -> FairProblem:
+    """Attach tenant/ledger structure to an existing problem.
+
+    ``budgets_g`` may be a per-tenant array (ordered like ``tenant_ids``)
+    or a ``{tenant: budget}`` mapping; missing tenants default to ``inf``
+    (uncapped — the row is omitted from the LP entirely).
+    """
+    tenant_ids = tuple(str(t) for t in tenant_ids)
+    if len(set(tenant_ids)) != len(tenant_ids):
+        raise ValueError(f"duplicate tenant ids: {tenant_ids}")
+    tenant_of = np.asarray(tenant_of, dtype=np.int64)
+    if tenant_of.shape != (base.n_jobs,):
+        raise ValueError(
+            f"tenant_of shape {tenant_of.shape} does not match "
+            f"n_jobs={base.n_jobs}")
+    if tenant_of.size and not (
+            (tenant_of >= 0) & (tenant_of < len(tenant_ids))).all():
+        raise ValueError(
+            f"tenant_of indices out of range for {len(tenant_ids)} tenants")
+    if budgets_g is None:
+        budgets = np.full(len(tenant_ids), np.inf)
+    elif isinstance(budgets_g, Mapping):
+        unknown = sorted(set(budgets_g) - set(tenant_ids))
+        if unknown:
+            raise ValueError(
+                f"budgets name unknown tenants {unknown} "
+                f"(have {sorted(tenant_ids)})")
+        budgets = np.array([float(budgets_g.get(t, np.inf))
+                            for t in tenant_ids])
+    else:
+        budgets = np.asarray(budgets_g, dtype=np.float64)
+        if budgets.shape != (len(tenant_ids),):
+            raise ValueError(
+                f"budgets_g shape {budgets.shape} does not match "
+                f"{len(tenant_ids)} tenants")
+    if np.isnan(budgets).any() or (budgets < 0.0).any():
+        raise ValueError(f"budgets must be nonnegative, got {budgets}")
+    return FairProblem(
+        cost=base.cost,
+        mask=base.mask,
+        size_bits=base.size_bits,
+        deadlines=base.deadlines,
+        offsets=base.offsets,
+        capacity_bps=base.capacity_bps,
+        rate_cap_bps=base.rate_cap_bps,
+        slot_seconds=base.slot_seconds,
+        power=base.power,
+        tenant_ids=tenant_ids,
+        tenant_of=tenant_of,
+        budgets_g=budgets,
+    )
+
+
+def tenants_of_requests(
+    requests: Sequence[TransferRequest],
+) -> tuple[tuple[str, ...], np.ndarray]:
+    """(tenant_ids, tenant_of) from the requests' ``tenant`` fields.
+
+    Tenants appear in first-seen order; requests with an empty tenant
+    share the :data:`DEFAULT_TENANT` ledger.
+    """
+    ids: list[str] = []
+    index: dict[str, int] = {}
+    of = np.zeros(len(requests), dtype=np.int64)
+    for i, r in enumerate(requests):
+        name = r.tenant or DEFAULT_TENANT
+        if name not in index:
+            index[name] = len(ids)
+            ids.append(name)
+        of[i] = index[name]
+    return tuple(ids), of
+
+
+def build_fair_problem(
+    requests: Sequence[TransferRequest],
+    traces: TraceSet,
+    capacity_gbps: float,
+    power: PowerModel = DEFAULT_POWER_MODEL,
+    *,
+    budgets: Mapping[str, float] | None = None,
+) -> FairProblem:
+    """Requests + forecast -> fair problem; tenants from ``request.tenant``."""
+    base = build_problem(requests, traces, capacity_gbps, power)
+    tenant_ids, tenant_of = tenants_of_requests(requests)
+    return as_fair(base, tenant_ids, tenant_of, budgets)
+
+
+def tenant_objectives(problem: FairProblem, rho_bps: np.ndarray) -> np.ndarray:
+    """Per-tenant LP-objective share: (n_tenants,) gCO2-weighted units.
+
+    The exact quantity the ledger rows constrain — the parity/violation
+    metric of the property suite and ``benchmarks/scenarios.py``.
+    """
+    cell = np.asarray(problem.cost, dtype=np.float64) * np.asarray(
+        rho_bps, dtype=np.float64)
+    per_job = cell.sum(axis=1)
+    out = np.zeros(problem.n_tenants)
+    np.add.at(out, np.asarray(problem.tenant_of, dtype=np.int64), per_job)
+    return out
+
+
+def binding_budgets(
+    problem: FairProblem,
+    frac: Mapping[str, float],
+) -> dict[str, float]:
+    """Feasible-by-construction binding budgets for the named tenants.
+
+    A naive "``frac`` x the tenant's unconstrained share" cap is usually
+    *infeasible*: the plain LP already hands every tenant the cheapest
+    slots its own deadlines admit, so each share sits at (or near) its
+    individual minimum and any cap below it has no feasible plan.  The
+    meaningful range for tenant ``tau``'s ledger is instead
+
+        [min-share,  unconstrained-share]
+
+    where min-share is the LP minimizing *only tau's* cost cells subject
+    to everyone's deadline/capacity rows (what tau could achieve if the
+    scheduler prioritized its carbon over total carbon).  ``frac[tau]``
+    interpolates: budget = min + frac * (unconstrained - min), so
+    ``frac < 1`` is binding whenever there is any fairness slack at all,
+    and always feasible.  Two HiGHS solves per named tenant — a
+    calibration helper for benches/tests, not a hot path.
+    """
+    from .scipy_backend import solve_scipy
+
+    base = solve_scipy(problem)
+    shares = tenant_objectives(problem, base.rho_bps)
+    tenant_of = np.asarray(problem.tenant_of, dtype=np.int64)
+    out: dict[str, float] = {}
+    for name, f in frac.items():
+        if name not in problem.tenant_ids:
+            raise ValueError(f"unknown tenant {name!r} "
+                             f"(have {sorted(problem.tenant_ids)})")
+        t = problem.tenant_ids.index(name)
+        member_cost = np.where((tenant_of == t)[:, None], problem.cost, 0.0)
+        solo = solve_scipy(ScheduleProblem(
+            cost=member_cost, mask=problem.mask,
+            size_bits=problem.size_bits, deadlines=problem.deadlines,
+            offsets=problem.offsets, capacity_bps=problem.capacity_bps,
+            rate_cap_bps=problem.rate_cap_bps,
+            slot_seconds=problem.slot_seconds, power=problem.power))
+        lo = float((member_cost * solo.rho_bps).sum())
+        hi = float(shares[t])
+        # 1e-7 relative relief: at frac=0 the ledger row passes exactly
+        # through the min-share vertex and HiGHS reports the degenerate LP
+        # as status Unknown (measured); the relief is ~5 orders below any
+        # real fairness slack and keeps "feasible" numerically true.
+        out[name] = (lo + float(f) * max(hi - lo, 0.0)) * (1.0 + 1e-7)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Normalization + solve
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FairConfig:
+    """Ledger defaults + solver knobs for ``lints-fair``.
+
+    ``budgets`` seeds the online ``wrap_problem`` hook (and ``_wrap`` of
+    plain problems): tenants named here get a finite ledger on every
+    replan; everyone else stays uncapped.  Stored as a tuple of pairs so
+    the policy dataclass stays frozen/hashable; see :meth:`budget_map`.
+    """
+
+    # "scipy" (paper-faithful sparse HiGHS, default) | "pdhg" (TPU-native
+    # ledger-dual saddle solver) — the same split, and the same default,
+    # as LinTSConfig/RobustConfig.backend.  The PDHG path is parity-gated
+    # against the oracle at ≤1e-6 relative objective.
+    backend: str = "scipy"
+    budgets: tuple[tuple[str, float], ...] = ()
+    # Tighter than the temporal default: the oracle-parity gate is a
+    # relative *objective* delta <= 1e-6, and a 1e-6 KKT residual leaves
+    # ~4e-6 objective error on binding-ledger instances (measured).
+    tol: float = 1e-7
+    max_iters: int = 400_000
+    check_every: int = 250
+    omega0: float = 1.0
+    omega_bounds: tuple[float, float] = (1e-2, 1e2)
+    dtype: str = "float64"         # "float64" | "float32"
+    # Vertex rounding greedy-fills against raw cost and is ledger-blind:
+    # snapping can push a tenant past a binding budget.  Off, like the
+    # robust policy, and for the same "the optimum is not a vertex of the
+    # relaxed polytope" reason.
+    vertex_round: bool = False
+    validate: bool = True
+
+    def budget_map(self) -> dict[str, float]:
+        return dict(self.budgets)
+
+
+def _normalize_fair(problem: ScheduleProblem, tenant_of: np.ndarray,
+                    budgets: np.ndarray, capped: Sequence[int]):
+    """Normalized tensors of the fair LP (numpy, dtype-agnostic).
+
+    Base normalization is :func:`repro.core.pdhg.normalize_problem`
+    (``x = rho / rate_cap``, mean-1 costs); each capped tenant's ledger
+    row is the tenant's own cells of the normalized cost verbatim, so the
+    row budget is ``B / (scale * rate_cap)``.  The rows are deliberately
+    NOT rescaled to unit norm: a mean-1 cost row over a tenant's cells
+    already sits at the same magnitude as the byte/capacity rows
+    (Frobenius ~ sqrt(nnz_t)), and unit-normalizing inflates the optimal
+    ledger dual by the same factor — measured, that turns an 80k-iteration
+    solve into a 400k-iteration stall.  The solver's operator-norm bound
+    accounts for the rows' true Frobenius mass instead.
+    """
+    mask = problem.mask
+    ub = mask.astype(np.float64)
+    scale = max(float(np.abs(problem.cost[mask]).mean()), 1e-30)
+    c = (problem.cost * ub) / scale
+    member = np.stack([(tenant_of == t).astype(np.float64) for t in capped])
+    cts = member[:, :, None] * c[None]                     # (T, n, m)
+    b_ten = budgets[list(capped)] / (scale * problem.rate_cap_bps)
+    b_row = problem.size_bits / (problem.slot_seconds * problem.rate_cap_bps)
+    b_col = problem.capacity_bps / problem.rate_cap_bps
+    return c, cts, ub, b_row, b_col, b_ten, scale
+
+
+def solve_fair(
+    problem: FairProblem,
+    config: FairConfig = FairConfig(),
+    *,
+    x0_bps: np.ndarray | None = None,
+    u0: np.ndarray | None = None,
+    v0: np.ndarray | None = None,
+) -> Plan:
+    """Solve the tenant-fair LP with bucket-padded PDHG.
+
+    Pads to :func:`repro.core.ragged.bucket_shape` before solving (like
+    ``solve_robust``) so rolling-horizon replans with nearby job counts
+    share one jitted shape; padded jobs carry zero cost and all-False
+    masks, so they contribute nothing to any ledger row.  With no finite
+    ledger the problem IS plain LinTS and the solve delegates to the
+    temporal PDHG path untouched.  Warm inputs are the temporal planner's
+    hooks; the ledger dual restarts from zero.
+    """
+    budgets = np.asarray(problem.budgets_g, dtype=np.float64)
+    capped = [t for t in range(budgets.size) if np.isfinite(budgets[t])]
+    ok, why = workload_feasible(problem)
+    if not ok:
+        raise InfeasibleError(f"workload infeasible: {why}")
+    if not capped:
+        from .pdhg import PDHGConfig, solve_pdhg
+
+        plan = solve_pdhg(
+            problem,
+            PDHGConfig(max_iters=config.max_iters,
+                       check_every=config.check_every, tol=config.tol,
+                       omega0=config.omega0,
+                       omega_bounds=config.omega_bounds),
+            x0_bps=x0_bps, u0=u0, v0=v0, return_duals=True)
+        plan.meta["backend"] = "pdhg-fair"
+        plan.meta["n_ledger_rows"] = 0
+        plan.meta["warm_state"] = {
+            "x_bps": plan.rho_bps.copy(),
+            "u": plan.meta.pop("dual_row"),
+            "v": plan.meta.pop("dual_col"),
+        }
+        return _finish(problem, Plan(plan.rho_bps, "lints-fair", plan.meta),
+                       config)
+
+    from . import ragged
+
+    n, m = problem.n_jobs, problem.n_slots
+    bucket = ragged.bucket_shape(n, m)
+    padded = ragged.pad_problem(ScheduleProblem(
+        cost=problem.cost, mask=problem.mask, size_bits=problem.size_bits,
+        deadlines=problem.deadlines, offsets=problem.offsets,
+        capacity_bps=problem.capacity_bps,
+        rate_cap_bps=problem.rate_cap_bps,
+        slot_seconds=problem.slot_seconds, power=problem.power), *bucket)
+    tenant_pad = np.full(bucket[0], -1, dtype=np.int64)
+    tenant_pad[:n] = np.asarray(problem.tenant_of, dtype=np.int64)
+    c, cts, ub, b_row, b_col, b_ten, scale = _normalize_fair(
+        padded, tenant_pad, budgets, capped)
+
+    rate = problem.rate_cap_bps
+    x0p = u0p = v0p = None
+    if x0_bps is not None:
+        x0p = np.zeros(bucket, dtype=np.float64)
+        x0p[:n, :m] = np.nan_to_num(
+            np.asarray(x0_bps, dtype=np.float64))[:n, :m] / rate
+    if u0 is not None:
+        u0p = np.zeros(bucket[0], dtype=np.float64)
+        u0p[:n] = np.nan_to_num(np.asarray(u0, dtype=np.float64))[:n]
+    if v0 is not None:
+        v0p = np.zeros(bucket[1], dtype=np.float64)
+        v0p[:m] = np.nan_to_num(np.asarray(v0, dtype=np.float64))[:m]
+
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from .pdhg import pdhg_solve_fair
+
+    use_x64 = config.dtype == "float64"
+    dtype = jnp.float64 if use_x64 else jnp.float32
+    ctx = enable_x64() if use_x64 else contextlib.nullcontext()
+    with ctx:
+        x, diag = pdhg_solve_fair(
+            jnp.asarray(c, dtype), jnp.asarray(cts, dtype),
+            jnp.asarray(ub, dtype), jnp.asarray(b_row, dtype),
+            jnp.asarray(b_col, dtype), jnp.asarray(b_ten, dtype),
+            None if x0p is None else jnp.asarray(x0p, dtype),
+            None if u0p is None else jnp.asarray(u0p, dtype),
+            None if v0p is None else jnp.asarray(v0p, dtype),
+            max_iters=config.max_iters, check_every=config.check_every,
+            tol=config.tol, omega0=config.omega0,
+            omega_lo=config.omega_bounds[0],
+            omega_hi=config.omega_bounds[1])
+        x = np.asarray(x, dtype=np.float64)
+        diag = {k: np.asarray(v) for k, v in diag.items()}
+
+    rho = x * rate
+    pad_rate = max(
+        float(np.abs(rho[n:, :]).max(initial=0.0)),
+        float(np.abs(rho[:, m:]).max(initial=0.0)),
+    )
+    if pad_rate > 0.0:
+        raise RuntimeError("fair padding invariant violated: "
+                           f"{pad_rate:.3g} bps on padded cells")
+    raw = repair_plan(problem, rho[:n, :m].copy())
+    shares = tenant_objectives(problem, raw)
+    meta = {
+        "backend": "pdhg-fair",
+        "objective": float((problem.cost * raw).sum()),
+        "tenant_ids": list(problem.tenant_ids),
+        "tenant_objectives": [float(s) for s in shares],
+        "budgets_g": [float(b) for b in budgets],
+        "n_ledger_rows": len(capped),
+        "iterations": int(diag["iterations"]),
+        "converged": bool(diag["converged"]),
+        "primal_residual": float(diag["primal_residual"]),
+        "gap": float(diag["gap"]),
+        "warm_started": x0_bps is not None or u0 is not None,
+        "bucket_shape": bucket,
+        "warm_state": {
+            "x_bps": raw.copy(),
+            "u": np.asarray(diag["dual_row"], np.float64)[:n].copy(),
+            "v": np.asarray(diag["dual_col"], np.float64)[:m].copy(),
+        },
+    }
+    return _finish(problem, Plan(raw, "lints-fair", meta), config)
+
+
+# Relative ledger tolerance of the post-solve validator: byte top-ups in
+# ``repair_plan`` and solver epsilon may graze a binding budget, but a
+# material overshoot means the solve failed and must not ship silently.
+LEDGER_RTOL = 1e-5
+
+
+def _finish(problem: FairProblem, plan: Plan, config: FairConfig) -> Plan:
+    """Shared post-solve tail: ledger accounting + validation.
+
+    Stamps per-tenant objective shares (the ledger metric) and, when
+    ``validate`` is on, rejects plans that violate bytes/capacity or
+    overshoot any finite ledger beyond :data:`LEDGER_RTOL` — an
+    unconverged iterate that raided a tenant's budget must escalate the
+    ladder, not ship.
+    """
+    shares = tenant_objectives(problem, plan.rho_bps)
+    budgets = np.asarray(problem.budgets_g, dtype=np.float64)
+    plan.meta.setdefault("tenant_ids", list(problem.tenant_ids))
+    plan.meta["tenant_objectives"] = [float(s) for s in shares]
+    plan.meta["budgets_g"] = [float(b) for b in budgets]
+    if config.validate:
+        report = check_plan(problem, plan.rho_bps, rel_tol=1e-5)
+        if not report.feasible:
+            raise InfeasibleError(
+                "fair solve produced an infeasible plan "
+                f"(worst violation {report.worst():.3g})")
+        finite = np.isfinite(budgets)
+        over = shares[finite] > budgets[finite] * (1.0 + LEDGER_RTOL)
+        if over.any():
+            names = [problem.tenant_ids[t]
+                     for t in np.flatnonzero(finite)[over]]
+            raise InfeasibleError(
+                f"fair solve overshot the carbon ledger of {names} "
+                f"(shares {shares[finite][over]} vs budgets "
+                f"{budgets[finite][over]})")
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Policy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FairPolicy:
+    """Tenant-fair credit-ledger LP as a registry :class:`Policy`.
+
+    Plain problems are wrapped as a single uncapped :data:`DEFAULT_TENANT`
+    ledger (== plain LinTS), so the policy drops into every sweep; online,
+    the ``wrap_problem`` hook rebuilds the tenant structure from the live
+    requests' ``tenant`` fields (plus ``config.budgets``) on every replan.
+    Planning runs the same mini degradation ladder as ``lints-robust`` —
+    with one semantic difference: a genuinely budget-infeasible LP (the
+    HiGHS oracle reports infeasible with no fault injected) RAISES instead
+    of degrading to a ledger-blind heuristic, because silently shipping a
+    plan that raids another tenant's ledger is exactly what the subsystem
+    exists to prevent.
+    """
+
+    config: FairConfig = FairConfig()
+    name: str = "lints-fair"
+
+    def _wrap(self, problem: ScheduleProblem) -> FairProblem:
+        if isinstance(problem, FairProblem):
+            return problem
+        budgets = self.config.budget_map()
+        return as_fair(
+            problem, (DEFAULT_TENANT,),
+            np.zeros(problem.n_jobs, dtype=np.int64),
+            {DEFAULT_TENANT: budgets[DEFAULT_TENANT]}
+            if DEFAULT_TENANT in budgets else None)
+
+    def wrap_problem(
+        self,
+        problem: ScheduleProblem,
+        requests: Sequence[TransferRequest],
+        forecast: TraceSet,
+    ) -> FairProblem:
+        """Online hook: rebuild the tenant/ledger structure every replan.
+
+        :meth:`repro.transfer.TransferManager.replan` probes this with
+        ``getattr`` after ``build_problem`` — tenants come from the live
+        requests' ``tenant`` fields, ledgers from ``config.budgets``
+        (unnamed tenants stay uncapped).  The ledger covers the remaining
+        horizon's plan, so budgets are interpreted as *remaining* credit.
+        """
+        del forecast  # the ledger constrains cost already in the problem
+        tenant_ids, tenant_of = tenants_of_requests(requests)
+        budgets = self.config.budget_map()
+        return as_fair(problem, tenant_ids, tenant_of,
+                       {t: b for t, b in budgets.items() if t in tenant_ids})
+
+    def plan(self, problem: ScheduleProblem) -> Plan:
+        return self.plan_incremental(problem)
+
+    def plan_batch(self, problems: Sequence[ScheduleProblem]) -> list[Plan]:
+        from .api import _stamp
+
+        problems = list(problems)
+        return [
+            _stamp(self.plan(p), self.name, i, len(problems))
+            for i, p in enumerate(problems)
+        ]
+
+    def plan_incremental(self, problem: ScheduleProblem,
+                         warm: Any = None, *,
+                         inject: Any = None,
+                         resilient: bool = True) -> Plan:
+        """Fair replan with the degradation ladder (DESIGN.md §12/§16)."""
+        from . import api
+
+        fp = self._wrap(problem)
+        cfg = self.config
+        ok, why = workload_feasible(fp)
+        if not ok:
+            raise InfeasibleError(f"workload infeasible: {why}")
+        if warm is not None and getattr(warm, "empty", False):
+            warm = None
+        if not resilient:
+            if cfg.backend != "pdhg":
+                from .scipy_backend import solve_fair_scipy
+
+                plan = _finish(fp, solve_fair_scipy(fp), cfg)
+            elif warm is None:
+                plan = solve_fair(fp, cfg)
+            else:
+                plan = solve_fair(fp, cfg, x0_bps=warm.x0_bps,
+                                  u0=warm.u0, v0=warm.v0)
+                if api.plan_failure(plan) is not None:
+                    plan = solve_fair(fp, cfg)
+            plan.meta.setdefault("warm_started", False)
+            return api._stamp(plan, self.name)
+
+        fault = None
+        if inject is not None:
+            from .faults import SolverFault
+
+            fault = (inject if isinstance(inject, SolverFault)
+                     else SolverFault(solve_index=0, mode=str(inject)))
+
+        if cfg.backend == "pdhg":
+            rungs = ["pdhg", "pdhg-retry", "scipy", "heuristic"]
+            if warm is not None:
+                rungs.insert(0, "pdhg-warm")
+        else:
+            rungs = ["scipy", "heuristic"]
+        zero_cfg = dataclasses.replace(cfg, max_iters=0, validate=False)
+        retry_cfg = dataclasses.replace(
+            cfg, max_iters=max(2 * cfg.max_iters, 20_000),
+            check_every=max(cfg.check_every // 2, 10))
+
+        attempts: list[dict[str, str]] = []
+        prev_plan: Plan | None = None
+        for i, rung in enumerate(rungs):
+            poisoned = (fault is not None and i < fault.rungs
+                        and rung != "heuristic")
+            plan: Plan | None = None
+            failure: str | None = None
+            try:
+                if rung in ("pdhg-warm", "pdhg"):
+                    is_warm = rung == "pdhg-warm"
+                    if poisoned and fault.mode == "nan":
+                        plan = Plan(
+                            np.full((fp.n_jobs, fp.n_slots), np.nan),
+                            "lints-fair",
+                            {"backend": "pdhg-fair", "converged": False,
+                             "warm_started": is_warm, "injected": "nan"},
+                        )
+                    elif poisoned:  # zero-budget solve: stalls unconverged
+                        plan = solve_fair(
+                            fp, zero_cfg,
+                            x0_bps=warm.x0_bps if is_warm else None,
+                            u0=warm.u0 if is_warm else None)
+                        plan.meta["injected"] = "no_converge"
+                    elif is_warm:
+                        plan = solve_fair(fp, cfg, x0_bps=warm.x0_bps,
+                                          u0=warm.u0, v0=warm.v0)
+                    else:
+                        plan = solve_fair(fp, cfg)
+                elif rung == "pdhg-retry":
+                    if poisoned:
+                        raise InfeasibleError(
+                            f"injected {fault.mode} fault persists through "
+                            "retry")
+                    x0 = (np.nan_to_num(prev_plan.rho_bps)
+                          if prev_plan is not None else None)
+                    plan = solve_fair(fp, retry_cfg, x0_bps=x0)
+                elif rung == "scipy":
+                    if poisoned:
+                        raise InfeasibleError(
+                            f"injected {fault.mode} fault persists through "
+                            "the scipy oracle")
+                    from .scipy_backend import solve_fair_scipy
+
+                    plan = _finish(fp, solve_fair_scipy(fp), cfg)
+                else:  # heuristic — solver-fault last resort; ledger-blind
+                    from . import heuristics as _heuristics
+
+                    try:
+                        plan = _heuristics.edf(fp)
+                    except InfeasibleError:
+                        plan = _heuristics.edf(fp, best_effort=True)
+                        plan.meta["best_effort"] = True
+                    plan.meta["ledger_enforced"] = False
+                    shares = tenant_objectives(fp, plan.rho_bps)
+                    plan.meta["tenant_ids"] = list(fp.tenant_ids)
+                    plan.meta["tenant_objectives"] = [float(s)
+                                                     for s in shares]
+            except InfeasibleError as e:
+                if rung == "scipy" and fault is None:
+                    raise
+                failure = f"{type(e).__name__}: {e}"
+                plan = None
+            except (FloatingPointError, ValueError, RuntimeError) as e:
+                failure = f"{type(e).__name__}: {e}"
+                plan = None
+            if failure is None and plan is not None:
+                failure = api.plan_failure(plan)
+            if failure is None:
+                assert plan is not None
+                plan.meta["solver_status"] = rung
+                if attempts:
+                    plan.meta["solver_ladder"] = attempts
+                plan.meta.setdefault("warm_started", False)
+                plan.meta.setdefault("ledger_enforced", True)
+                return api._stamp(plan, self.name)
+            attempts.append({"rung": rung, "failure": failure})
+            if plan is not None:
+                prev_plan = plan
+        raise InfeasibleError(  # pragma: no cover — the heuristic rung returns
+            f"fair degradation ladder exhausted: {attempts}")

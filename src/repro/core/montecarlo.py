@@ -22,7 +22,7 @@ from typing import Sequence
 
 import numpy as np
 
-from .plan import Plan, report_keys
+from .plan import Plan, report_keys, unique_key
 from .power import GBPS, JOULES_PER_KWH
 from .problem import ScheduleProblem, TransferRequest
 from .trace import INTENSITY_FLOOR_GCO2_PER_KWH, TraceSet
@@ -211,6 +211,16 @@ def evaluate_ensemble(
     fallback, ``#k`` suffixes on collisions); each report's
     ``total_gco2[d]`` matches ``evaluate_plan(problem, plan,
     cost_draws[d])`` (the parity suite holds this to <=1e-6 relative).
+
+    Multi-tenant problems (a :class:`repro.core.fairness.FairProblem`
+    carrying more than one tenant) additionally get one sub-report per
+    plan per tenant, keyed ``f"{plan_key}[{tenant}]"`` and restricted to
+    that tenant's jobs (so per-tenant totals sum to the plan total).
+    Sub-report keys run through the same global uniquifier as the plan
+    keys, so a pathological roster — a policy literally named
+    ``"lints-fair[bulk]"`` next to a fair plan with a ``bulk`` tenant —
+    cannot silently overwrite a sub-report (the PR 4 ``#k`` dedup,
+    extended).
     """
     if cost_draws is None:
         if requests is None or traces is None:
@@ -231,22 +241,49 @@ def evaluate_ensemble(
     delivered = rho_stack.sum(axis=2) * problem.slot_seconds  # (P, n)
     violations = (delivered + 1.0 < problem.size_bits[None, :]).sum(axis=1)
 
-    out: dict[str, EnsembleReport] = {}
-    for p_idx, (key, plan) in enumerate(zip(report_keys(plans), plans)):
-        t = totals[p_idx]
+    # Tenant structure (duck-typed so plain ScheduleProblems pay nothing):
+    # sub-reports only for genuinely multi-tenant problems.
+    tenant_ids = getattr(problem, "tenant_ids", None)
+    tenant_of = getattr(problem, "tenant_of", None)
+    tenants: list[tuple[str, np.ndarray]] = []
+    if tenant_ids is not None and tenant_of is not None and len(tenant_ids) > 1:
+        tenant_of = np.asarray(tenant_of, dtype=np.int64)
+        tenants = [(name, np.flatnonzero(tenant_of == t))
+                   for t, name in enumerate(tenant_ids)]
+
+    def _report(algorithm, t, job_slice, slot_slice, kwh_p, active_p, viol):
         std = float(np.std(t, ddof=1)) if n_draws > 1 else 0.0
-        out[key] = EnsembleReport(
-            algorithm=plan.algorithm,
+        return EnsembleReport(
+            algorithm=algorithm,
             sigma=float(sigma),
             n_draws=int(n_draws),
             total_gco2=t,
             mean_gco2=float(t.mean()),
             std_gco2=std,
             ci95_gco2=1.96 * std / np.sqrt(n_draws),
-            per_job_gco2=gco2_job[p_idx].mean(axis=0),
-            per_slot_gco2=gco2_slot[p_idx].mean(axis=0),
-            energy_kwh=float(kwh[p_idx].sum()),
-            active_job_slots=int(theta_active[p_idx].sum()),
-            sla_violations=int(violations[p_idx]),
+            per_job_gco2=job_slice.mean(axis=0),
+            per_slot_gco2=slot_slice.mean(axis=0),
+            energy_kwh=float(kwh_p.sum()),
+            active_job_slots=int(active_p.sum()),
+            sla_violations=int(viol),
         )
+
+    out: dict[str, EnsembleReport] = {}
+    used: set[str] = set()
+    keys = report_keys(plans)
+    used.update(keys)
+    for p_idx, (key, plan) in enumerate(zip(keys, plans)):
+        out[key] = _report(
+            plan.algorithm, totals[p_idx], gco2_job[p_idx], gco2_slot[p_idx],
+            kwh[p_idx], theta_active[p_idx], violations[p_idx])
+        for name, jobs in tenants:
+            sub = unique_key(f"{key}[{name}]", used)
+            t_slot = np.einsum("nm,dnm->dm", kwh[p_idx, jobs],
+                               cost_draws[:, jobs])
+            t_viol = (delivered[p_idx, jobs] + 1.0
+                      < problem.size_bits[jobs]).sum()
+            out[sub] = _report(
+                plan.algorithm, gco2_job[p_idx][:, jobs].sum(axis=1),
+                gco2_job[p_idx][:, jobs], t_slot,
+                kwh[p_idx, jobs], theta_active[p_idx, jobs], t_viol)
     return out

@@ -843,6 +843,201 @@ def pdhg_solve_robust(cbar, cks, ub, b_row, b_col, qt, qs,
     }
 
 
+# ---------------------------------------------------------------------------
+# Tenant-fair PDHG: per-tenant carbon-budget ledger rows (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+#
+# The fairness LP (core/fairness.py) keeps the transportation structure and
+# adds one coupling row per budget-capped tenant:
+#
+#   sum_{cells of tenant t}  c[i,j] * x[i,j]  <=  b_ten[t]
+#
+# i.e. a *cost-weighted capacity row over a job subset*.  Structurally this
+# is the scenario block of the robust solver with an ordinary nonnegative
+# dual w_t per row instead of the capped simplex: the ledger rows enter the
+# saddle exactly like extra capacity rows,
+#
+#   min_x max_{u,v,w >= 0}  <c, x> + <u, b_row - row_sum(x)>
+#                           + <v, col_sum(x) - b_col>
+#                           + <w, T x - b_ten>
+#
+# with T_t = the tenant-t cells of the normalized (mean-1) cost, kept in
+# natural units (see fairness._normalize_fair for why unit-normalizing
+# the rows stalls the ledger dual).  Two extra (T, n, m) einsum
+# reductions per iteration; pure VPU work, no Pallas variant needed.
+
+
+def _fair_cell_update(x, c, cts, ub, u, v, w, tau):
+    """Projected primal step of the fair PDHG iteration.
+
+    Mirrors :func:`_robust_cell_update` with the ledger pressure
+    ``sum_t w_t T_t`` added to the reduced cost; returns the new plan plus
+    the extrapolated row/column/ledger reductions the dual steps consume.
+    """
+    g = (c - u[..., :, None] + v[..., None, :]
+         + jnp.einsum("t,tnm->nm", w, cts))
+    x_new = jnp.clip(x - tau * g, 0.0, ub)
+    x_bar = 2.0 * x_new - x
+    return (x_new, x_bar.sum(axis=-1), x_bar.sum(axis=-2),
+            jnp.einsum("tnm,nm->t", cts, x_bar))
+
+
+def pdhg_fair_window_ref(x, u, v, w, rs, cs, ts, c, cts, ub,
+                         b_row, b_col, b_ten, tau, sigma, n_iters: int):
+    """Pure-jnp fair restart window (same carry discipline as
+    :func:`pdhg_window_ref`: extrapolated reductions in, window *sums* of
+    every iterate group out)."""
+
+    def inner(_, carry):
+        x, u, v, w, rs, cs, ts, ax, au, av, aw = carry
+        u = jnp.maximum(0.0, u + sigma * (b_row - rs))
+        v = jnp.maximum(0.0, v + sigma * (cs - b_col))
+        w = jnp.maximum(0.0, w + sigma * (ts - b_ten))
+        x, rs, cs, ts = _fair_cell_update(x, c, cts, ub, u, v, w, tau)
+        return (x, u, v, w, rs, cs, ts, ax + x, au + u, av + v, aw + w)
+
+    carry = (x, u, v, w, rs, cs, ts,
+             jnp.zeros_like(x), jnp.zeros_like(u), jnp.zeros_like(v),
+             jnp.zeros_like(w))
+    return jax.lax.fori_loop(0, n_iters, inner, carry)
+
+
+def _fair_kkt(c, cts, ub, b_row, b_col, b_ten, x, u, v, w):
+    """(primal residual, duality gap, primal_obj) — normalized.
+
+    Mirrors :func:`_kkt` with the ledger rows folded into both sides: the
+    primal residual takes the worst relative ledger overshoot alongside
+    byte shortfall / capacity overshoot, and the dual objective pays
+    ``-<w, b_ten>`` like any other <=-row."""
+    rs = x.sum(axis=-1)
+    cs = x.sum(axis=-2)
+    ts = jnp.einsum("tnm,nm->t", cts, x)
+    row_viol = jnp.max(jnp.maximum(b_row - rs, 0.0)) / (1.0 + jnp.max(b_row))
+    col_viol = jnp.max(jnp.maximum(cs - b_col, 0.0)) / (1.0 + b_col)
+    ten_viol = jnp.max(jnp.maximum(ts - b_ten, 0.0)) / (1.0 + jnp.max(b_ten))
+    pr = jnp.maximum(jnp.maximum(row_viol, col_viol), ten_viol)
+    g = (c - u[..., :, None] + v[..., None, :]
+         + jnp.einsum("t,tnm->nm", w, cts)) * (ub > 0)
+    dual_obj = (jnp.vdot(u, b_row) - b_col * v.sum() - jnp.vdot(w, b_ten)
+                + jnp.sum(jnp.minimum(g, 0.0) * ub))
+    primal_obj = jnp.vdot(c, x)
+    gap = jnp.abs(primal_obj - dual_obj) / (
+        1.0 + jnp.abs(primal_obj) + jnp.abs(dual_obj))
+    return pr, gap, primal_obj
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "check_every"))
+def pdhg_solve_fair(c, cts, ub, b_row, b_col, b_ten,
+                    x0=None, u0=None, v0=None, *,
+                    max_iters: int = 200_000, check_every: int = 250,
+                    tol: float = 1e-6, omega0: float = 1.0,
+                    omega_lo: float = 1e-2, omega_hi: float = 1e2):
+    """Tenant-fair solver on normalized tensors.
+
+    Shapes: ``c``/``ub`` (n, m); ``cts`` (T, n, m) scaled ledger rows (one
+    per budget-capped tenant, zero off-tenant); ``b_row`` (n,); ``b_ten``
+    (T,); ``b_col`` scalar.  Warm starts take the temporal solver's hooks
+    (``x0`` normalized primal, ``u0``/``v0`` byte/capacity duals); the
+    ledger dual restarts from zero like any fresh <=-row.  Returns
+    ``(x, diag)``; ``diag`` carries the final duals (``dual_row``/
+    ``dual_col``/``dual_ten``) for the next warm start.
+    """
+    dtype = c.dtype
+    n_jobs, n_slots = c.shape
+    n_ten = cts.shape[0]
+    act = (ub > 0).astype(dtype)
+    row_nnz = jnp.max(jnp.sum(act, axis=1))
+    col_nnz = jnp.max(jnp.sum(act, axis=0))
+    # Closed-form cap: temporal block sqrt(2 max(row, col)) plus the
+    # ledger block's true Frobenius mass (the rows stay in mean-1 cost
+    # units — see ``fairness._normalize_fair``); power iteration on
+    # K^T K estimates the actual sigma_max below this.
+    k_bound = jnp.sqrt(2.0 * jnp.maximum(row_nnz, col_nnz)
+                       + jnp.sum(cts * cts)) + 1e-6
+
+    def _power_step(z, _):
+        rs = z.sum(axis=-1)
+        cs = z.sum(axis=-2)
+        ts = jnp.einsum("tnm,nm->t", cts, z)
+        z2 = (rs[:, None] + cs[None, :]
+              + jnp.einsum("t,tnm->nm", ts, cts)) * act
+        nrm = jnp.sqrt(jnp.sum(z2 * z2))
+        return z2 / jnp.maximum(nrm, 1e-30), nrm
+
+    z0 = act / jnp.maximum(jnp.sqrt(jnp.sum(act)), 1e-30)
+    _, nrms = jax.lax.scan(_power_step, z0, None, length=32)
+    k_power = 1.10 * jnp.sqrt(nrms[-1]) + 1e-6
+    k_norm = jnp.minimum(k_power, k_bound)
+
+    def outer_cond(state):
+        it, done = state[7], state[8]
+        return jnp.logical_and(~done, it < max_iters)
+
+    def outer_body(state):
+        x, u, v, w, rs, cs, ts, it, _, omega, _, _ = state
+        sigma = 1.0 / (omega * k_norm)
+        tau = omega / k_norm
+        (x, u, v, w, rs, cs, ts,
+         ax, au, av, aw) = pdhg_fair_window_ref(
+            x, u, v, w, rs, cs, ts, c, cts, ub, b_row, b_col, b_ten,
+            tau, sigma, check_every)
+        inv = 1.0 / check_every
+        xa, ua, va, wa = ax * inv, au * inv, av * inv, aw * inv
+        pr_c, gap_c, _ = _fair_kkt(c, cts, ub, b_row, b_col, b_ten,
+                                   x, u, v, w)
+        pr_a, gap_a, _ = _fair_kkt(c, cts, ub, b_row, b_col, b_ten,
+                                   xa, ua, va, wa)
+        take_avg = jnp.maximum(pr_a, gap_a) < jnp.maximum(pr_c, gap_c)
+        x = jnp.where(take_avg, xa, x)
+        u = jnp.where(take_avg, ua, u)
+        v = jnp.where(take_avg, va, v)
+        w = jnp.where(take_avg, wa, w)
+        pr = jnp.where(take_avg, pr_a, pr_c)
+        gap = jnp.where(take_avg, gap_a, gap_c)
+        rs = jnp.where(take_avg, x.sum(axis=-1), rs)
+        cs = jnp.where(take_avg, x.sum(axis=-2), cs)
+        ts = jnp.where(take_avg, jnp.einsum("tnm,nm->t", cts, x), ts)
+        # Inverted rebalance, as in :func:`pdhg_solve_robust`: once the
+        # plan is primal-feasible (pr ~ 0) any remaining gap lives in the
+        # duals — the ledger dual w crawls toward its binding value — so
+        # a large gap must GROW sigma = 1/(omega ||K||), i.e. shrink
+        # omega.  (The temporal heuristic, applied here, rails omega at
+        # its ceiling and stalls at ~1e-2 gap; inverted, the same
+        # instances converge below 1e-6.)
+        ratio = jnp.sqrt((pr + 1e-12) / (gap + 1e-12))
+        omega = jnp.clip(omega * jnp.clip(ratio, 0.5, 2.0),
+                         omega_lo, omega_hi)
+        done = jnp.logical_and(pr < tol, gap < tol)
+        return (x, u, v, w, rs, cs, ts, it + check_every, done, omega,
+                pr, gap)
+
+    if x0 is None:
+        x0 = jnp.zeros((n_jobs, n_slots), dtype)
+    else:
+        x0 = jnp.clip(jnp.asarray(x0, dtype), 0.0, ub)
+    u0 = (jnp.zeros((n_jobs,), dtype) if u0 is None
+          else jnp.maximum(jnp.asarray(u0, dtype), 0.0))
+    v0 = (jnp.zeros((n_slots,), dtype) if v0 is None
+          else jnp.maximum(jnp.asarray(v0, dtype), 0.0))
+    w0 = jnp.zeros((n_ten,), dtype)
+    state = (
+        x0, u0, v0, w0,
+        x0.sum(axis=-1), x0.sum(axis=-2),
+        jnp.einsum("tnm,nm->t", cts, x0),
+        jnp.asarray(0, jnp.int32), jnp.asarray(False),
+        jnp.asarray(omega0, dtype),
+        jnp.asarray(jnp.inf, dtype), jnp.asarray(jnp.inf, dtype),
+    )
+    state = jax.lax.while_loop(outer_cond, outer_body, state)
+    x, u, v, w = state[:4]
+    it, done, omega, pr, gap = state[7], state[8], state[9], state[10], state[11]
+    return x, {
+        "iterations": it, "converged": done, "primal_residual": pr,
+        "gap": gap, "omega": omega,
+        "dual_row": u, "dual_col": v, "dual_ten": w,
+    }
+
+
 # Batched scheduling: one call plans transfers for many independent paths /
 # datacenter pairs at once (the "scaling decisions" story at fleet scale).
 @functools.partial(

@@ -52,16 +52,44 @@ def report_keys(plans) -> list[str]:
     name — e.g. two LinTS configs evaluated side by side — get ``"#2"``,
     ``"#3"`` … suffixes instead of silently overwriting each other in
     ``{key: report}`` dicts.
+
+    Suffixes are *globally* unique, not just per base name: a roster like
+    ``["lints", "lints", "lints#2"]`` (the third plan's policy literally
+    named ``lints#2``) must not collide with the dedup suffix of the
+    second — the suffix counter keeps bumping until the key is unused.
+    Multi-tenant sub-reports (``"lints-fair[tenant]"`` keys from
+    :func:`repro.core.montecarlo.evaluate_ensemble`) lean on the same
+    guarantee via :func:`unique_key`.
     """
+    used: set[str] = set()
     keys: list[str] = []
     seen: dict[str, int] = {}
     for p in plans:
         base = p.policy if isinstance(p, Plan) else ""
         base = base or "plan"
         n = seen.get(base, 0) + 1
+        key = base if n == 1 else f"{base}#{n}"
+        while key in used:
+            n += 1
+            key = f"{base}#{n}"
         seen[base] = n
-        keys.append(base if n == 1 else f"{base}#{n}")
+        used.add(key)
+        keys.append(key)
     return keys
+
+
+def unique_key(base: str, used: set[str]) -> str:
+    """``base``, ``#2``-suffixed until unused; records the pick in ``used``.
+
+    The shared uniquifier behind :func:`report_keys` collision handling
+    and ``evaluate_ensemble``'s per-tenant sub-report keys.
+    """
+    key, n = base, 1
+    while key in used:
+        n += 1
+        key = f"{base}#{n}"
+    used.add(key)
+    return key
 
 
 class InfeasibleError(RuntimeError):

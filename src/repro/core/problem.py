@@ -35,6 +35,10 @@ class TransferRequest:
     offset_slots: int = 0             # arrival slot
     request_id: str = ""
     weights: tuple[float, ...] | None = None  # per-node weights (default equal)
+    # Owning tenant for multi-tenant fairness (DESIGN.md §16).  "" means
+    # unattributed: such requests share one implicit default ledger and
+    # every pre-tenant call site keeps its exact behavior.
+    tenant: str = ""
 
     @property
     def size_bits(self) -> float:

@@ -63,6 +63,77 @@ def solve_scipy(problem: ScheduleProblem, cost_scale: float | None = None) -> Pl
     )
 
 
+def solve_fair_scipy(problem) -> Plan:
+    """HiGHS oracle for the tenant-fair credit-ledger LP (DESIGN.md §16).
+
+    ``problem`` is a ``fairness.FairProblem``: the base LinTS LP plus one
+    ledger coupling row per tenant with a finite carbon budget,
+
+        sum_{cells (i, j) of tenant tau}  c[i, j] * rho[i, j]  <=  B_tau,
+
+    in the LP's gCO2-weighted objective units.  Infinite budgets add no
+    row, so with every ledger cap at inf the constraint matrix is exactly
+    :func:`solve_scipy`'s and the objectives match to solver precision —
+    the differential-parity contract of ``tests/test_scenarios.py``.  Used
+    as the ≤1e-6 parity oracle for ``pdhg_solve_fair``.
+    """
+    mask = problem.mask
+    n_jobs, n_slots = mask.shape
+    rows, cols = np.nonzero(mask)
+    n_var = rows.size
+    budgets = np.asarray(problem.budgets_g, dtype=np.float64)
+    tenant_of = np.asarray(problem.tenant_of, dtype=np.int64)
+    capped = [t for t in range(budgets.size) if np.isfinite(budgets[t])]
+
+    scale = max(float(np.abs(problem.cost[mask]).mean()), 1e-30)
+    c = problem.cost[mask] / scale
+
+    byte_mat = sp.csr_matrix(
+        (np.full(n_var, -problem.slot_seconds), (rows, np.arange(n_var))),
+        shape=(n_jobs, n_var),
+    )
+    cap_mat = sp.csr_matrix(
+        (np.ones(n_var), (cols, np.arange(n_var))), shape=(n_slots, n_var)
+    )
+    blocks = [byte_mat, cap_mat]
+    b_ub = [-problem.size_bits, np.full(n_slots, problem.capacity_bps)]
+    if capped:
+        # Ledger rows: the tenant's own cost cells, so the row value IS the
+        # tenant's share of the LP objective (same ``scale`` as ``c``).
+        member = np.stack([(tenant_of[rows] == t).astype(np.float64)
+                           for t in capped])
+        blocks.append(sp.csr_matrix(member * c[None, :]))
+        b_ub.append(budgets[capped] / scale)
+    a_ub = sp.vstack(blocks, format="csr")
+    res = linprog(
+        c,
+        A_ub=a_ub,
+        b_ub=np.concatenate(b_ub),
+        bounds=(0.0, problem.rate_cap_bps),
+        method="highs",
+    )
+    if not res.success:
+        names = [problem.tenant_ids[t] for t in capped]
+        raise InfeasibleError(
+            f"fair linprog failed: {res.status} {res.message} "
+            f"(capped tenants: {names} — ledger budgets may be too tight "
+            "for the deadlines)")
+    rho = np.zeros((n_jobs, n_slots))
+    rho[rows, cols] = res.x
+    return Plan(
+        rho,
+        "lints-fair",
+        {
+            "backend": "scipy-highs-fair",
+            "objective": float((problem.cost * rho).sum()),
+            "n_variables": int(n_var),
+            "n_constraints": int(n_jobs + n_slots + len(capped)),
+            "n_ledger_rows": int(len(capped)),
+            "solver_iterations": int(getattr(res, "nit", -1)),
+        },
+    )
+
+
 def solve_robust_scipy(problem) -> Plan:
     """HiGHS oracle for the scenario-robust CVaR LP (DESIGN.md §14).
 

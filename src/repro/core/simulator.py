@@ -158,6 +158,7 @@ def rolling_horizon_replay(
     max_slots: int | None = None,
     faults=None,
     congestion_fn=None,
+    forecast_fn=None,
 ) -> dict:
     """End-to-end rolling-horizon replay: reveal actuals, revise, replan.
 
@@ -176,6 +177,14 @@ def rolling_horizon_replay(
     ``requests`` use absolute slots (``offset_slots`` = arrival,
     ``deadline_slots`` = absolute deadline), matching
     :func:`~repro.core.problem.build_problem` conventions.
+
+    ``forecast_fn(now_slot) -> TraceSet`` replaces the synthetic
+    lead-noise model entirely: the planner's view at slot ``s`` is
+    ``forecast_fn(s)`` (initial plan = ``forecast_fn(0)``) while emissions
+    stay on ``actual``.  This is how scenario packs with a *recorded*
+    day-ahead forecast replay (``GridScenario.revealed`` splices actuals
+    up to *now* with the recorded forecast beyond it — DESIGN.md §16);
+    ``sigma``/``seed``/``ramp_slots`` are then ignored for forecasting.
     """
     from ..transfer.manager import Datacenter, Topology, TransferManager
     from .power import DEFAULT_POWER_MODEL
@@ -190,10 +199,14 @@ def rolling_horizon_replay(
         datacenters=tuple(Datacenter(name=z, zone=z) for z in zones),
         routes=routes,
     )
+    if forecast_fn is None:
+        def forecast_fn(now_slot: int) -> TraceSet:
+            return forecast_with_lead_noise(actual, sigma, seed,
+                                            now_slot=now_slot,
+                                            ramp_slots=ramp_slots)
     mgr = TransferManager(
         topology,
-        forecast_with_lead_noise(actual, sigma, seed, now_slot=0,
-                                 ramp_slots=ramp_slots),
+        forecast_fn(0),
         actual=actual,
         capacity_gbps=capacity_gbps,
         power=power,
@@ -216,12 +229,12 @@ def rolling_horizon_replay(
                     "dst": r.path[-1],
                     "deadline_slots": int(r.deadline_slots) - s,
                     "request_id": r.request_id,
+                    "tenant": r.tenant,
                 }
                 for r in due
             ])
         if revise_every and s > 0 and s % revise_every == 0:
-            mgr.revise_forecast(forecast_with_lead_noise(
-                actual, sigma, seed, now_slot=s, ramp_slots=ramp_slots))
+            mgr.revise_forecast(forecast_fn(s))
             revisions += 1
         mgr.tick(congestion=congestion_fn(s) if congestion_fn else 1.0)
     report = mgr.report()

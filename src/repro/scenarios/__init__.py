@@ -1,0 +1,18 @@
+"""Scenario packs: forecast-vs-actual grids, seeded workloads, fair LP
+configs bundled under one loadable name (DESIGN.md §16)."""
+
+from .grids import (ACTUAL_COLUMNS, PREDICTION_COLUMNS, GridScenario,
+                    load_grid_dir, load_zone_csv)
+from .packs import (ScenarioPack, available_scenario_packs,
+                    load_scenario_pack, register_scenario_pack)
+from .workloads import (WORKLOADS, bulk_replication, checkpoint_shipping,
+                        diurnal_serving, flash_crowd, mixed_tenant_workload)
+
+__all__ = [
+    "GridScenario", "load_grid_dir", "load_zone_csv",
+    "PREDICTION_COLUMNS", "ACTUAL_COLUMNS",
+    "ScenarioPack", "register_scenario_pack", "available_scenario_packs",
+    "load_scenario_pack",
+    "WORKLOADS", "diurnal_serving", "flash_crowd", "bulk_replication",
+    "checkpoint_shipping", "mixed_tenant_workload",
+]

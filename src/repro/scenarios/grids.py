@@ -1,0 +1,174 @@
+"""Forecast-vs-actual grid adapters (DESIGN.md §16).
+
+Real-grid evaluations (Radovanović et al.) need the *day-ahead forecast*
+the planner saw and the *actual* intensity the grid delivered as separate
+series — the gap between them is where carbon-aware scheduling wins or
+loses.  This module extends the ElectricityMaps CSV ingest of
+:mod:`repro.core.trace` to that split:
+
+* one CSV per zone in a directory (``<zone>.csv`` — the zone name is the
+  file stem, so zones are *discovered*, not configured),
+* ``prediction`` / ``actual`` intensity columns per row (hourly, in time
+  order), with the common ElectricityMaps export aliases accepted,
+* hourly -> slot expansion via the same ``ExpansionMatrix`` helper, and
+* every validation rule reused from :class:`repro.core.trace.TraceSet` —
+  NaN / negative / empty / ragged traces are rejected by the *existing*
+  messages naming the zone, not by a forked copy of them.
+
+The loaded :class:`GridScenario` plugs straight into the closed loop:
+``revealed(now)`` splices actuals up to *now* with the recorded forecast
+beyond it, which is exactly the ``forecast_fn`` contract of
+:func:`repro.core.simulator.rolling_horizon_replay` — the planner only
+ever sees forecasts, emissions are charged on actuals.
+"""
+
+from __future__ import annotations
+
+import csv
+import dataclasses
+import math
+import pathlib
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from ..core.trace import TraceSet, expand_hourly_to_slots
+
+__all__ = ["GridScenario", "load_grid_dir", "load_zone_csv",
+           "PREDICTION_COLUMNS", "ACTUAL_COLUMNS"]
+
+# Column aliases, most specific first (the SNIPPETS carbon_intensity.py
+# idiom: exports disagree on naming but always mean these two series).
+PREDICTION_COLUMNS = ("prediction", "predicted", "forecast",
+                      "carbon_intensity_prediction")
+ACTUAL_COLUMNS = ("actual", "measured", "carbon_intensity_actual",
+                  "carbon_intensity", "carbonIntensity", "ci")
+
+
+def _pick(cols: Sequence[str], aliases: Sequence[str]) -> str | None:
+    return next((c for c in aliases if c in cols), None)
+
+
+def load_zone_csv(path: str | pathlib.Path) -> tuple[np.ndarray, np.ndarray]:
+    """One zone's ``(prediction, actual)`` hourly series from a CSV.
+
+    Rows are hourly readings in time order.  Either column may be absent —
+    the other series stands in (a perfect forecast for actuals-only
+    exports, and vice versa) — but at least one must exist.  Blank cells
+    become NaN so the :class:`~repro.core.trace.TraceSet` validator can
+    reject them *naming the zone and slot* instead of a float() crash
+    naming neither.
+    """
+    path = pathlib.Path(path)
+    pred: list[float] = []
+    act: list[float] = []
+    with open(path, newline="") as f:
+        reader = csv.DictReader(f)
+        cols = reader.fieldnames or []
+        p_col = _pick(cols, PREDICTION_COLUMNS)
+        a_col = _pick(cols, ACTUAL_COLUMNS)
+        if p_col is None and a_col is None:
+            raise ValueError(
+                f"{path.name}: no prediction column "
+                f"(any of {list(PREDICTION_COLUMNS)}) nor actual column "
+                f"(any of {list(ACTUAL_COLUMNS)}) in {cols}")
+        for row in reader:
+            p = row.get(p_col, "") if p_col else row.get(a_col, "")
+            a = row.get(a_col, "") if a_col else row.get(p_col, "")
+            pred.append(float(p) if p not in ("", None) else math.nan)
+            act.append(float(a) if a not in ("", None) else math.nan)
+    return (np.asarray(pred, dtype=np.float64),
+            np.asarray(act, dtype=np.float64))
+
+
+@dataclasses.dataclass(frozen=True)
+class GridScenario:
+    """A forecast/actual trace pair over one slot grid.
+
+    Both members are full :class:`~repro.core.trace.TraceSet` instances
+    (same zones, same horizon — enforced at construction), so everything
+    that consumes a ``TraceSet`` consumes either side unchanged.
+    """
+
+    name: str
+    forecast: TraceSet
+    actual: TraceSet
+
+    def __post_init__(self):
+        if set(self.forecast.zone_slots) != set(self.actual.zone_slots):
+            raise ValueError(
+                f"grid scenario {self.name!r}: forecast zones "
+                f"{sorted(self.forecast.zone_slots)} != actual zones "
+                f"{sorted(self.actual.zone_slots)}")
+        if (self.forecast.n_slots != self.actual.n_slots
+                or self.forecast.slot_seconds != self.actual.slot_seconds):
+            raise ValueError(
+                f"grid scenario {self.name!r}: forecast grid "
+                f"({self.forecast.n_slots} x {self.forecast.slot_seconds}s) "
+                f"!= actual grid ({self.actual.n_slots} x "
+                f"{self.actual.slot_seconds}s)")
+
+    @property
+    def zones(self) -> tuple[str, ...]:
+        return tuple(sorted(self.forecast.zone_slots))
+
+    @property
+    def n_slots(self) -> int:
+        return self.forecast.n_slots
+
+    def revealed(self, now_slot: int,
+                 stale_from: Mapping[str, int] | None = None) -> TraceSet:
+        """The planner's view at ``now_slot``: actuals up to now, the
+        recorded forecast beyond — the ``forecast_fn`` of
+        :func:`repro.core.simulator.rolling_horizon_replay`.
+
+        ``stale_from`` (zone -> first stale slot) applies the standard
+        :meth:`~repro.core.trace.TraceSet.hold_last` staleness fill on the
+        spliced view — a zone whose feed dropped out is held at its last
+        fresh value, exactly as the forecast-dropout fault does.
+        """
+        s = int(np.clip(now_slot, 0, self.n_slots))
+        spliced = {
+            z: np.concatenate([self.actual.zone_slots[z][:s],
+                               self.forecast.zone_slots[z][s:]])
+            for z in self.forecast.zone_slots
+        }
+        view = TraceSet(self.forecast.slot_seconds, spliced)
+        if stale_from:
+            view = view.hold_last(stale_from)
+        return view
+
+
+def load_grid_dir(
+    path: str | pathlib.Path,
+    name: str | None = None,
+    slot_seconds: float = 900.0,
+    slots_per_hour: int | None = None,
+) -> GridScenario:
+    """Load a :class:`GridScenario` from a directory of per-zone CSVs.
+
+    Every ``*.csv`` in ``path`` is one zone (zone name = file stem).
+    Hourly rows are expanded to ``slots_per_hour`` slots (default derived
+    from ``slot_seconds``: 900 s -> 4, the paper's grid).  All trace
+    validation — NaN / negative / empty cells naming the zone, equal
+    horizons across zones — is the :class:`~repro.core.trace.TraceSet`
+    constructor's, reused as-is.
+    """
+    path = pathlib.Path(path)
+    files = sorted(path.glob("*.csv"))
+    if not files:
+        raise ValueError(f"no per-zone CSVs (*.csv) in {str(path)!r}")
+    if slots_per_hour is None:
+        slots_per_hour = int(round(3600.0 / slot_seconds))
+    pred: dict[str, np.ndarray] = {}
+    act: dict[str, np.ndarray] = {}
+    for f in files:
+        zone = f.stem
+        p, a = load_zone_csv(f)
+        pred[zone] = expand_hourly_to_slots(p, slots_per_hour)
+        act[zone] = expand_hourly_to_slots(a, slots_per_hour)
+    return GridScenario(
+        name=name or path.name,
+        forecast=TraceSet(slot_seconds, pred),
+        actual=TraceSet(slot_seconds, act),
+    )

@@ -1,0 +1,224 @@
+"""Seeded workload generators (DESIGN.md §16).
+
+*Let's Wait Awhile* (Wiesner et al.) shows workload *shape* decides how
+much carbon temporal shifting can recover: diurnal serving traffic has
+almost no slack, bulk batch has days of it.  These generators emit
+:class:`~repro.core.problem.TransferRequest` streams for the shapes the
+scenario packs exercise:
+
+* :func:`diurnal_serving` — business-hour-peaked log shipping with tight
+  SLAs (tenant ``serving``),
+* :func:`flash_crowd` — a burst of small urgent transfers in one window
+  (tenant ``crowd``),
+* :func:`bulk_replication` — few, large, loose-deadline dataset copies
+  (tenant ``bulk``),
+* :func:`checkpoint_shipping` — the periodic-commit pattern of
+  ``examples/carbon_aware_training.py``: a 25 GB checkpoint every 4 h
+  with a 24 h replication SLA over a 48 h run (tenant ``training``).
+
+Determinism contract (mirrors ``faults.chaos(seed, ...)``): every
+generator consumes exactly one ``np.random.default_rng(seed)`` stream, so
+the same ``(seed, kwargs)`` yields an *identical* request list, and
+different seeds move sizes/arrivals only within the declared bounds —
+``tests/test_scenarios.py`` pins both.  Requests use absolute slots
+(``offset_slots`` arrival, ``deadline_slots`` absolute), ready for
+:func:`~repro.core.problem.build_problem` and
+:meth:`~repro.transfer.manager.TransferManager.submit_many`.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Mapping
+
+import numpy as np
+
+from ..core.problem import TransferRequest
+
+__all__ = ["diurnal_serving", "flash_crowd", "bulk_replication",
+           "checkpoint_shipping", "mixed_tenant_workload", "WORKLOADS"]
+
+_DEFAULT_PATH = ("US-NM", "US-WY", "US-SD")
+
+
+def diurnal_serving(
+    seed: int,
+    *,
+    hours: int = 48,
+    slots_per_hour: int = 4,
+    path: tuple[str, ...] = _DEFAULT_PATH,
+    peak_per_hour: float = 3.0,
+    size_range_gb: tuple[float, float] = (2.0, 12.0),
+    sla_range_slots: tuple[int, int] = (8, 24),
+    tenant: str = "serving",
+) -> list[TransferRequest]:
+    """Diurnally modulated serving-log shipping: tight SLAs, steady drip.
+
+    Hour ``h`` draws ``Poisson(rate(h))`` arrivals with ``rate`` peaking
+    at ``peak_per_hour`` mid-business-day (14:00) and bottoming at 10% of
+    peak overnight.  Sizes are uniform in ``size_range_gb``; each request
+    gets an SLA uniform in ``sla_range_slots`` after arrival (clipped to
+    the horizon).
+    """
+    rng = np.random.default_rng(seed)
+    horizon = hours * slots_per_hour
+    out: list[TransferRequest] = []
+    for h in range(hours):
+        rate = peak_per_hour * (0.1 + 0.9 * 0.5
+                                * (1.0 - np.cos(2 * np.pi * (h % 24 - 2)
+                                                / 24.0)))
+        for _ in range(int(rng.poisson(rate))):
+            offset = h * slots_per_hour + int(rng.integers(slots_per_hour))
+            sla = int(rng.integers(sla_range_slots[0],
+                                   sla_range_slots[1] + 1))
+            deadline = min(offset + sla, horizon)
+            if deadline <= offset:
+                continue  # arrival at the horizon edge: nothing to ship
+            out.append(TransferRequest(
+                size_gb=float(rng.uniform(*size_range_gb)),
+                deadline_slots=deadline,
+                path=path,
+                offset_slots=offset,
+                request_id=f"serve-{len(out):04d}",
+                tenant=tenant,
+            ))
+    return out
+
+
+def flash_crowd(
+    seed: int,
+    *,
+    hours: int = 48,
+    slots_per_hour: int = 4,
+    path: tuple[str, ...] = _DEFAULT_PATH,
+    n_requests: int = 32,
+    burst_hours: int = 3,
+    size_range_gb: tuple[float, float] = (0.5, 6.0),
+    sla_range_slots: tuple[int, int] = (4, 12),
+    tenant: str = "crowd",
+) -> list[TransferRequest]:
+    """A flash crowd: ``n_requests`` small urgent transfers packed into one
+    ``burst_hours`` window whose start is drawn uniformly from the first
+    half of the horizon.  The stress shape for re-planning: a spike the
+    forecast never promised."""
+    rng = np.random.default_rng(seed)
+    horizon = hours * slots_per_hour
+    start = int(rng.integers(0, max(hours // 2 - burst_hours, 1)))
+    window = burst_hours * slots_per_hour
+    out: list[TransferRequest] = []
+    for i in range(n_requests):
+        offset = start * slots_per_hour + int(rng.integers(window))
+        sla = int(rng.integers(sla_range_slots[0], sla_range_slots[1] + 1))
+        out.append(TransferRequest(
+            size_gb=float(rng.uniform(*size_range_gb)),
+            deadline_slots=min(offset + sla, horizon),
+            path=path,
+            offset_slots=offset,
+            request_id=f"crowd-{i:04d}",
+            tenant=tenant,
+        ))
+    return out
+
+
+def bulk_replication(
+    seed: int,
+    *,
+    hours: int = 48,
+    slots_per_hour: int = 4,
+    path: tuple[str, ...] = _DEFAULT_PATH,
+    n_requests: int = 10,
+    size_range_gb: tuple[float, float] = (80.0, 320.0),
+    deadline_range_h: tuple[int, int] = (36, 47),
+    tenant: str = "bulk",
+) -> list[TransferRequest]:
+    """Bulk dataset replication: few, large, loose deadlines — the shape
+    with maximal temporal-shifting slack (and therefore the tenant most
+    easily raided without a fairness ledger).  Arrivals land in the first
+    12 h; deadlines are absolute hours in ``deadline_range_h``."""
+    rng = np.random.default_rng(seed)
+    horizon = hours * slots_per_hour
+    out: list[TransferRequest] = []
+    for i in range(n_requests):
+        offset = int(rng.integers(0, 12 * slots_per_hour))
+        deadline_h = int(rng.integers(deadline_range_h[0],
+                                      deadline_range_h[1] + 1))
+        out.append(TransferRequest(
+            size_gb=float(rng.uniform(*size_range_gb)),
+            deadline_slots=min(max(deadline_h * slots_per_hour,
+                                   offset + 1), horizon),
+            path=path,
+            offset_slots=offset,
+            request_id=f"bulk-{i:04d}",
+            tenant=tenant,
+        ))
+    return out
+
+
+def checkpoint_shipping(
+    seed: int,
+    *,
+    hours: int = 48,
+    slots_per_hour: int = 4,
+    path: tuple[str, ...] = _DEFAULT_PATH,
+    ckpt_gb: float = 25.0,
+    every_h: int = 4,
+    sla_h: int = 24,
+    size_jitter: float = 0.1,
+    tenant: str = "training",
+) -> list[TransferRequest]:
+    """Periodic checkpoint replication, sourced from
+    ``examples/carbon_aware_training.py``: one ``ckpt_gb`` commit every
+    ``every_h`` hours with an ``sla_h`` replication SLA over an ``hours``
+    run.  Commit times are fixed by the training loop; only the size
+    jitters (±``size_jitter`` relative, optimizer-state drift)."""
+    rng = np.random.default_rng(seed)
+    horizon = hours * slots_per_hour
+    out: list[TransferRequest] = []
+    for step, h in enumerate(range(0, hours, every_h)):
+        offset = h * slots_per_hour
+        deadline = min(offset + sla_h * slots_per_hour, horizon)
+        if deadline <= offset:
+            continue
+        out.append(TransferRequest(
+            size_gb=float(ckpt_gb * (1.0 + rng.uniform(-size_jitter,
+                                                       size_jitter))),
+            deadline_slots=deadline,
+            path=path,
+            offset_slots=offset,
+            request_id=f"ckpt-{step:04d}",
+            tenant=tenant,
+        ))
+    return out
+
+
+#: Generator registry — the property suite iterates this, so a new
+#: generator added here is automatically under the determinism contract.
+WORKLOADS: Mapping[str, Callable[..., list[TransferRequest]]] = {
+    "diurnal_serving": diurnal_serving,
+    "flash_crowd": flash_crowd,
+    "bulk_replication": bulk_replication,
+    "checkpoint_shipping": checkpoint_shipping,
+}
+
+
+def mixed_tenant_workload(
+    seed: int,
+    *,
+    hours: int = 48,
+    slots_per_hour: int = 4,
+    paths: Mapping[str, tuple[str, ...]] | None = None,
+) -> list[TransferRequest]:
+    """All four tenants on one horizon: the multi-tenant scenario shape.
+
+    Each generator runs with a distinct derived seed (``seed``, ``seed+1``,
+    ...) and, optionally, a per-generator path from ``paths`` (keyed by
+    :data:`WORKLOADS` name).  Request ids stay generator-prefixed, so the
+    stream is identical to concatenating the four generators directly.
+    """
+    paths = dict(paths or {})
+    out: list[TransferRequest] = []
+    for k, (name, gen) in enumerate(WORKLOADS.items()):
+        kwargs = {"hours": hours, "slots_per_hour": slots_per_hour}
+        if name in paths:
+            kwargs["path"] = tuple(paths[name])
+        out.extend(gen(seed + k, **kwargs))
+    return out

@@ -59,6 +59,10 @@ class ManagedTransfer:
     # below the feasible-rate floor.
     reroutes: int = 0
     panic: bool = False
+    # Owning tenant (multi-tenant fairness, DESIGN.md §16).  Threaded into
+    # the replan ``TransferRequest`` so ledger policies ("lints-fair") can
+    # rebuild per-tenant budgets online; "" = unattributed (default ledger).
+    tenant: str = ""
 
 
 # ---------------------------------------------------------------------------

@@ -411,8 +411,10 @@ class TransferManager:
 
     # ------------------------------------------------------------------ API
     def enqueue(self, size_gb: float, src: str, dst: str,
-                deadline_slots: int, request_id: str | None = None) -> str:
-        rid = self._admit(size_gb, src, dst, deadline_slots, request_id)
+                deadline_slots: int, request_id: str | None = None,
+                tenant: str = "") -> str:
+        rid = self._admit(size_gb, src, dst, deadline_slots, request_id,
+                          tenant)
         self.events.post(ev.ArrivalEvent(self.slot, rids=(rid,)))
         return rid
 
@@ -447,17 +449,49 @@ class TransferManager:
                 self.slot, rids=tuple(rid for rid, _ in staged)))
         return [rid for rid, _ in staged]
 
+    def submit_many(self, requests: Sequence) -> list[str]:
+        """Admit a batch of :class:`~repro.core.problem.TransferRequest`.
+
+        The request-object face of :meth:`enqueue_many` — what the
+        scenario-pack workload generators emit (DESIGN.md §16).  Requests
+        carry *absolute* slots, so each deadline is rebased to this
+        manager's current slot; a request whose absolute deadline is
+        already at or behind ``self.slot`` raises before anything is
+        admitted (the all-or-nothing contract of :meth:`enqueue_many`).
+        Tenant attribution flows through to :meth:`report`'s per-tenant
+        rollup.
+        """
+        batch = []
+        for r in requests:
+            rel = int(r.deadline_slots) - self.slot
+            if rel <= 0:
+                raise ValueError(
+                    f"request {r.request_id or '<anonymous>'!r}: absolute "
+                    f"deadline {r.deadline_slots} is not past the current "
+                    f"slot {self.slot}")
+            batch.append({
+                "size_gb": r.size_gb,
+                "src": r.path[0],
+                "dst": r.path[-1],
+                "deadline_slots": rel,
+                "request_id": r.request_id or None,
+                "tenant": r.tenant,
+            })
+        return self.enqueue_many(batch)
+
     def _admit(self, size_gb: float, src: str, dst: str,
-               deadline_slots: int, request_id: str | None = None) -> str:
+               deadline_slots: int, request_id: str | None = None,
+               tenant: str = "") -> str:
         """Register one transfer in the state store (no event posted)."""
         rid, t = self._build_transfer(size_gb, src, dst, deadline_slots,
-                                      request_id)
+                                      request_id, tenant)
         self.transfers[rid] = t
         return rid
 
     def _build_transfer(
         self, size_gb: float, src: str, dst: str,
         deadline_slots: int, request_id: str | None = None,
+        tenant: str = "",
     ) -> tuple[str, ManagedTransfer]:
         """Validate one request and build its transfer WITHOUT registering
         it — the staging half of all-or-nothing batch admission."""
@@ -478,6 +512,7 @@ class TransferManager:
             remaining_bits=size_gb * 8.0e9,
             deadline_truncated_slots=requested - deadline,
             candidate_paths=candidates,
+            tenant=tenant,
         )
 
     def pending(self) -> list[ManagedTransfer]:
@@ -565,6 +600,7 @@ class TransferManager:
                 offset_slots=self.slot,
                 path=t.path,
                 request_id=t.request_id,
+                tenant=t.tenant,
             )
             for t in live
         ]
@@ -848,6 +884,19 @@ class TransferManager:
     # --------------------------------------------------------------- report
     def report(self) -> dict:
         done = [t for t in self.transfers.values() if t.done_slot is not None]
+        # Per-tenant rollup (simulator-exact gCO2, on actuals) — only when
+        # any transfer is tenant-attributed, so pre-tenant reports keep
+        # their exact shape.
+        by_tenant: dict[str, dict] = {}
+        for t in self.transfers.values():
+            if not t.tenant:
+                continue
+            row = by_tenant.setdefault(
+                t.tenant, {"emissions_kg": 0.0, "transfers": 0,
+                           "sla_violations": 0})
+            row["emissions_kg"] += t.emissions_g / 1000.0
+            row["transfers"] += 1
+            row["sla_violations"] += int(t.violated)
         return {
             "policy": self.policy.name,
             "total_emissions_kg": sum(t.emissions_g for t in self.transfers.values()) / 1000.0,
@@ -871,6 +920,9 @@ class TransferManager:
             # Online-replanning telemetry (DESIGN.md §13): per-replan
             # wall-clock p50/p99, warm vs cold counts, events coalesced.
             "replans": self.planner.telemetry.summary(),
+            # Multi-tenant rollup (DESIGN.md §16): empty unless transfers
+            # were enqueued with a tenant.
+            "tenants": by_tenant,
         }
 
 

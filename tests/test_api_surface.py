@@ -14,7 +14,7 @@ PATH = ("US-NM", "US-WY", "US-SD")
 
 EXPECTED_POLICIES = {
     "lints", "lints_pdhg", "lints+", "lints-spatial", "lints-robust",
-    "lints-learned",
+    "lints-learned", "lints-fair",
     "fcfs", "edf", "worst_case", "single_threshold", "double_threshold",
 }
 

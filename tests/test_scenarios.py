@@ -1,0 +1,678 @@
+"""Scenario packs (DESIGN.md §16): forecast-vs-actual grid adapters,
+seeded workload generators, and the fairness-constrained multi-tenant LP —
+locked down by a property/differential harness.
+
+Four pillars:
+
+* **report-key regressions** — the PR 4 ``#k`` dedup extended to global
+  uniqueness, so per-tenant sub-reports can never overwrite a plan report
+  (the bugfix rides with this PR; the regression tests come first).
+* **fair-LP differential sweep** — the ∞-cap fair LP must *be* plain
+  LinTS (HiGHS-vs-HiGHS ≤1e-9 relative) on randomized ragged fleets; the
+  PDHG ledger solve is parity-gated against the HiGHS oracle on the
+  canonical binding fixture; binding ledgers hold budgets without
+  breaking deadlines; genuine budget-infeasibility raises through the
+  ladder instead of shipping a ledger-blind plan.
+* **workload determinism** — every :data:`repro.scenarios.WORKLOADS`
+  generator is byte-identical under a repeated seed and moves only
+  within its declared bounds across seeds.
+* **grid adapters** — CSV-dir round-trip on the vendored fixture, all
+  trace poisoning rejected by the *existing* ``TraceSet`` messages
+  (reuse, not a fork), and ``revealed()`` splice semantics: the planner
+  sees forecasts, emissions charge on actuals.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.fairness import (
+    DEFAULT_TENANT,
+    FairConfig,
+    FairPolicy,
+    FairProblem,
+    as_fair,
+    binding_budgets,
+    build_fair_problem,
+    solve_fair,
+    tenant_objectives,
+    tenants_of_requests,
+)
+from repro.core.feasibility import check_plan
+from repro.core.montecarlo import evaluate_ensemble
+from repro.core.plan import InfeasibleError, Plan, report_keys, unique_key
+from repro.core.problem import TransferRequest, build_problem
+from repro.core.scipy_backend import solve_fair_scipy, solve_scipy
+from repro.core.trace import TraceSet, make_trace_set
+from repro.scenarios import (
+    WORKLOADS,
+    GridScenario,
+    ScenarioPack,
+    available_scenario_packs,
+    bulk_replication,
+    checkpoint_shipping,
+    load_grid_dir,
+    load_scenario_pack,
+    load_zone_csv,
+    mixed_tenant_workload,
+    register_scenario_pack,
+)
+from tests.conftest import random_problem
+
+FIXTURE_GRID = "tests/fixtures/scenarios/gridA"
+
+LEDGER_RTOL = 1e-5     # mirror of fairness.LEDGER_RTOL (pinned on purpose)
+
+
+def _objective(problem, rho_bps) -> float:
+    return float((np.asarray(problem.cost) * np.asarray(rho_bps)).sum())
+
+
+def _binding_fixture():
+    """The canonical contended two-tenant fleet: disjoint zone pairs
+    squeezed through one binding shared capacity, so the fair ledger has
+    genuine slack to bind on (measured 0.3–0.6% relative)."""
+    reqs = (
+        [TransferRequest(250.0, 24, ("US-NM", "US-WY"),
+                         request_id=f"serve-{i}", tenant="serving")
+         for i in range(4)]
+        + [TransferRequest(300.0, 48, ("US-SD", "US-CO"),
+                           request_id=f"bulk-{i}", tenant="bulk")
+           for i in range(4)]
+    )
+    traces = make_trace_set(("US-NM", "US-WY", "US-SD", "US-CO"),
+                            hours=12, seed=5)
+    return build_fair_problem(reqs, traces, capacity_gbps=0.6), reqs, traces
+
+
+# ---------------------------------------------------------------------------
+# Report-key regressions (the bugfix rides with this PR — tests first)
+# ---------------------------------------------------------------------------
+
+def _plan_named(policy: str, n=2, m=3) -> Plan:
+    return Plan(np.zeros((n, m)), "lints", {"policy": policy})
+
+
+def test_report_keys_dense_numbering_preserved():
+    keys = report_keys([_plan_named("lints"), _plan_named("lints_pdhg"),
+                        _plan_named("lints"), _plan_named("lints")])
+    assert keys == ["lints", "lints_pdhg", "lints#2", "lints#3"]
+
+
+def test_report_keys_global_collision_regression():
+    """A roster whose third plan is literally named ``lints#2`` must not
+    collide with the dedup suffix of the second — pre-fix, both landed on
+    ``lints#2`` and one report silently overwrote the other."""
+    keys = report_keys([_plan_named("lints"), _plan_named("lints"),
+                        _plan_named("lints#2")])
+    assert len(set(keys)) == 3
+    assert keys[0] == "lints" and keys[1] == "lints#2"
+
+
+def test_unique_key_bumps_until_free_and_records():
+    used = {"a", "a#2"}
+    assert unique_key("a", used) == "a#3"
+    assert "a#3" in used                    # recorded for the next caller
+    assert unique_key("b", used) == "b"
+
+
+def test_evaluate_ensemble_emits_tenant_subreports():
+    fp, reqs, traces = _binding_fixture()
+    plan = solve_fair_scipy(fp)
+    out = evaluate_ensemble(fp, [plan, plan], sigma=0.05, n_draws=4,
+                            requests=reqs, traces=traces)
+    for key in ("lints-fair", "lints-fair#2"):
+        assert key in out
+        for t in ("serving", "bulk"):
+            assert f"{key}[{t}]" in out
+    # Per-tenant totals partition the plan total (all jobs attributed).
+    total = out["lints-fair"].total_gco2
+    parts = (out["lints-fair[serving]"].total_gco2
+             + out["lints-fair[bulk]"].total_gco2)
+    np.testing.assert_allclose(parts, total, rtol=1e-9)
+
+
+def test_evaluate_ensemble_subreport_cannot_overwrite():
+    """Pathological roster: a policy literally named like a sub-report key
+    still gets its own report — the global uniquifier bumps the tenant
+    sub-key instead of clobbering."""
+    fp, reqs, traces = _binding_fixture()
+    plan = solve_fair_scipy(fp)
+    impostor = Plan(np.array(plan.rho_bps),
+                    "lints", {"policy": "lints-fair[bulk]"})
+    out = evaluate_ensemble(fp, [impostor, plan], sigma=0.05, n_draws=2,
+                            requests=reqs, traces=traces)
+    assert "lints-fair[bulk]" in out            # the impostor's own report
+    assert "lints-fair[bulk]#2" in out          # the real sub-report, bumped
+    assert out["lints-fair[bulk]"].sla_violations == 0
+
+
+def test_evaluate_ensemble_plain_problem_no_subreports(small_problem):
+    plan = solve_scipy(small_problem)
+    out = evaluate_ensemble(small_problem, [plan], sigma=0.05, n_draws=2,
+                            cost_draws=np.broadcast_to(
+                                small_problem.cost,
+                                (2,) + small_problem.cost.shape))
+    assert all("[" not in k for k in out)
+
+
+# ---------------------------------------------------------------------------
+# Fair LP: differential + property sweep
+# ---------------------------------------------------------------------------
+
+def test_fair_uncapped_matches_plain_lints_property():
+    """∞-cap fair LP ≡ plain LinTS: HiGHS-vs-HiGHS differential on
+    randomized ragged fleets with randomized tenant assignment."""
+    from repro.core.feasibility import workload_feasible
+
+    checked = 0
+    for seed in range(12):
+        rng = np.random.default_rng(seed)
+        base = random_problem(rng)
+        if not workload_feasible(base)[0]:
+            continue                     # property holds on feasible fleets
+        checked += 1
+        n_tenants = int(rng.integers(1, 4))
+        ids = tuple(f"t{k}" for k in range(n_tenants))
+        fp = as_fair(base, ids, rng.integers(0, n_tenants, size=base.n_jobs))
+        plain = solve_scipy(base)
+        fair = solve_fair_scipy(fp)
+        assert fair.meta["n_ledger_rows"] == 0
+        rel = abs(_objective(base, fair.rho_bps)
+                  - _objective(base, plain.rho_bps))
+        rel /= max(abs(_objective(base, plain.rho_bps)), 1e-12)
+        assert rel <= 1e-9, f"seed {seed}: ∞-cap fair drifted {rel:.2e}"
+    assert checked >= 6                  # the sweep actually exercised LPs
+
+
+def test_fair_pdhg_uncapped_delegates_to_temporal_path():
+    fp, _, _ = _binding_fixture()
+    fp = as_fair(fp, fp.tenant_ids, fp.tenant_of, None)   # uncapped
+    plan = solve_fair(fp, FairConfig(backend="pdhg"))
+    oracle = solve_scipy(fp)
+    rel = abs(_objective(fp, plan.rho_bps) - _objective(fp, oracle.rho_bps))
+    rel /= abs(_objective(fp, oracle.rho_bps))
+    assert rel <= 1e-5
+    assert "warm_state" in plan.meta
+
+
+def test_fair_pdhg_oracle_parity_on_binding_ledger():
+    """The PDHG ledger-dual solve vs the HiGHS epigraph oracle, ≤1e-6
+    relative objective on the canonical binding fixture (the bench gate,
+    run here at test scale)."""
+    fp, _, _ = _binding_fixture()
+    budgets = binding_budgets(fp, {"bulk": 0.5})
+    fp = as_fair(fp, fp.tenant_ids, fp.tenant_of, budgets)
+    oracle = solve_fair_scipy(fp)
+    plan = solve_fair(fp, FairConfig(backend="pdhg"))
+    rel = abs(_objective(fp, plan.rho_bps) - _objective(fp, oracle.rho_bps))
+    rel /= abs(_objective(fp, oracle.rho_bps))
+    assert rel <= 1e-6, f"PDHG/HiGHS fair parity {rel:.2e} > 1e-6"
+    shares = tenant_objectives(fp, plan.rho_bps)
+    b = np.asarray(fp.budgets_g)
+    finite = np.isfinite(b)
+    assert (shares[finite] <= b[finite] * (1 + LEDGER_RTOL)).all()
+
+
+def test_binding_ledger_holds_budget_and_deadlines():
+    fp, _, _ = _binding_fixture()
+    budgets = binding_budgets(fp, {"bulk": 0.4})
+    capped = as_fair(fp, fp.tenant_ids, fp.tenant_of, budgets)
+    plan = solve_fair_scipy(capped)
+    assert plan.meta["n_ledger_rows"] == 1
+    check_plan(capped, plan.rho_bps)        # deadlines + capacity intact
+    shares = tenant_objectives(capped, plan.rho_bps)
+    t = capped.tenant_ids.index("bulk")
+    assert shares[t] <= budgets["bulk"] * (1 + LEDGER_RTOL)
+    # The ledger actually bound: bulk pays at most its budget, which sits
+    # strictly below its unconstrained share.
+    unconstrained = tenant_objectives(fp, solve_scipy(fp).rho_bps)[t]
+    assert budgets["bulk"] < unconstrained
+
+
+def test_binding_budgets_interpolation_feasible_by_construction():
+    """frac=0 (the tenant's min-share LP value) must still be feasible —
+    the naive frac×share cap is not, which is the whole reason
+    ``binding_budgets`` interpolates from min-share instead."""
+    fp, _, _ = _binding_fixture()
+    lo = binding_budgets(fp, {"bulk": 0.0})
+    hi = binding_budgets(fp, {"bulk": 1.0})
+    assert lo["bulk"] < hi["bulk"]
+    plan = solve_fair_scipy(as_fair(fp, fp.tenant_ids, fp.tenant_of, lo))
+    check_plan(fp, plan.rho_bps)
+    assert binding_budgets(fp, {"bulk": 0.5})["bulk"] == pytest.approx(
+        0.5 * (lo["bulk"] + hi["bulk"]))
+
+
+def test_binding_budgets_unknown_tenant_raises():
+    fp, _, _ = _binding_fixture()
+    with pytest.raises(ValueError, match="unknown tenant 'nobody'"):
+        binding_budgets(fp, {"nobody": 0.5})
+
+
+def test_fair_infeasible_budget_raises_through_ladder():
+    """A ledger below the tenant's minimal feasible share must RAISE —
+    never degrade to a ledger-blind heuristic plan."""
+    fp, _, _ = _binding_fixture()
+    lo = binding_budgets(fp, {"bulk": 0.0})["bulk"]
+    tight = as_fair(fp, fp.tenant_ids, fp.tenant_of, {"bulk": 0.5 * lo})
+    with pytest.raises(InfeasibleError):
+        FairPolicy().plan(tight)
+
+
+def test_fair_ladder_degrades_on_injected_fault():
+    fp, _, _ = _binding_fixture()
+    budgets = binding_budgets(fp, {"bulk": 0.5})
+    capped = as_fair(fp, fp.tenant_ids, fp.tenant_of, budgets)
+    pol = FairPolicy(FairConfig(backend="pdhg"))
+    plan = pol.plan_incremental(capped, inject="nan")
+    assert plan.meta["solver_status"] in ("pdhg-retry", "scipy")
+    assert plan.meta["ledger_enforced"] is True
+    assert plan.meta["solver_ladder"][0]["rung"] == "pdhg"
+    check_plan(capped, plan.rho_bps)
+
+
+def test_fair_heuristic_rung_flags_ledger_blindness():
+    """When every solver rung is poisoned, the last-resort heuristic plan
+    must confess ``ledger_enforced=False`` and still report per-tenant
+    shares so the caller can audit the raid."""
+    from repro.core.faults import SolverFault
+
+    fp, _, _ = _binding_fixture()
+    pol = FairPolicy(FairConfig(backend="scipy"))
+    plan = pol.plan_incremental(
+        fp, inject=SolverFault(0, mode="nan", rungs=3))
+    assert plan.meta["solver_status"] == "heuristic"
+    assert plan.meta["ledger_enforced"] is False
+    assert list(plan.meta["tenant_ids"]) == list(fp.tenant_ids)
+    assert len(plan.meta["tenant_objectives"]) == fp.n_tenants
+
+
+def test_tenant_objectives_partition_total_cost():
+    fp, _, _ = _binding_fixture()
+    plan = solve_fair_scipy(fp)
+    shares = tenant_objectives(fp, plan.rho_bps)
+    assert shares.sum() == pytest.approx(_objective(fp, plan.rho_bps))
+
+
+def test_as_fair_validation():
+    fp, _, _ = _binding_fixture()
+    with pytest.raises(ValueError, match="duplicate tenant ids"):
+        as_fair(fp, ("a", "a"), np.zeros(fp.n_jobs, dtype=np.int64))
+    with pytest.raises(ValueError, match="does not match"):
+        as_fair(fp, ("a",), np.zeros(fp.n_jobs + 1, dtype=np.int64))
+    with pytest.raises(ValueError, match="unknown tenants"):
+        as_fair(fp, ("a",), np.zeros(fp.n_jobs, dtype=np.int64),
+                {"ghost": 1.0})
+
+
+def test_tenants_of_requests_first_seen_order_and_default():
+    reqs = [TransferRequest(1.0, 8, ("US-NM",), tenant="b"),
+            TransferRequest(1.0, 8, ("US-NM",)),
+            TransferRequest(1.0, 8, ("US-NM",), tenant="a"),
+            TransferRequest(1.0, 8, ("US-NM",), tenant="b")]
+    ids, of = tenants_of_requests(reqs)
+    assert ids == ("b", DEFAULT_TENANT, "a")
+    assert list(of) == [0, 1, 2, 0]
+
+
+def test_lints_fair_registered_and_schedules():
+    assert "lints-fair" in api.available_policies()
+    _, reqs, traces = _binding_fixture()
+    sched = api.Scheduler("lints-fair")
+    plan = sched.schedule(reqs, traces, capacity_gbps=0.6)
+    assert plan.meta["policy"] == "lints-fair"
+    # Scheduler.schedule threads the wrap_problem hook, so the live
+    # requests' tenants survive the build (regression: they used to drop).
+    assert list(plan.meta["tenant_ids"]) == ["serving", "bulk"]
+    assert len(plan.meta["tenant_objectives"]) == 2
+
+
+def test_fair_policy_budgets_flow_through_wrap_problem():
+    _, reqs, traces = _binding_fixture()
+    fp = build_fair_problem(reqs, traces, 0.6)
+    budget = binding_budgets(fp, {"bulk": 0.5})["bulk"]
+    pol = FairPolicy(FairConfig(budgets=(("bulk", budget),)))
+    base = build_problem(reqs, traces, 0.6)
+    wrapped = pol.wrap_problem(base, reqs, traces)
+    assert isinstance(wrapped, FairProblem)
+    assert wrapped.budget_of("bulk") == pytest.approx(budget)
+    assert np.isinf(wrapped.budget_of("serving"))
+
+
+# ---------------------------------------------------------------------------
+# Workload generators: determinism + declared bounds
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_workload_same_seed_identical(name):
+    gen = WORKLOADS[name]
+    a, b = gen(11), gen(11)
+    assert [dataclasses.asdict(r) for r in a] \
+        == [dataclasses.asdict(r) for r in b]
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_workload_different_seeds_differ(name):
+    gen = WORKLOADS[name]
+    a, c = gen(11), gen(12)
+    assert [dataclasses.asdict(r) for r in a] \
+        != [dataclasses.asdict(r) for r in c]
+
+
+_BOUNDS = {
+    # name -> (size_lo, size_hi, tenant)
+    "diurnal_serving": (2.0, 12.0, "serving"),
+    "flash_crowd": (0.5, 6.0, "crowd"),
+    "bulk_replication": (80.0, 320.0, "bulk"),
+    "checkpoint_shipping": (25.0 * 0.9, 25.0 * 1.1, "training"),
+}
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_workload_declared_bounds(name):
+    lo, hi, tenant = _BOUNDS[name]
+    horizon = 48 * 4
+    for seed in range(5):
+        reqs = WORKLOADS[name](seed)
+        assert reqs, f"{name} seed {seed}: empty stream"
+        ids = [r.request_id for r in reqs]
+        assert len(set(ids)) == len(ids)
+        for r in reqs:
+            assert lo <= r.size_gb <= hi
+            assert r.tenant == tenant
+            assert 0 <= r.offset_slots < r.deadline_slots <= horizon
+
+
+def test_checkpoint_shipping_commit_times_are_seed_invariant():
+    a = checkpoint_shipping(1)
+    b = checkpoint_shipping(2)
+    assert [r.offset_slots for r in a] == [r.offset_slots for r in b]
+    assert [r.offset_slots for r in a] == [h * 4 for h in range(0, 48, 4)]
+    assert [r.size_gb for r in a] != [r.size_gb for r in b]  # only jitter
+
+
+def test_mixed_tenant_workload_is_concatenation_of_generators():
+    mixed = mixed_tenant_workload(7)
+    manual = []
+    for k, gen in enumerate(WORKLOADS.values()):
+        manual.extend(gen(7 + k))
+    assert [dataclasses.asdict(r) for r in mixed] \
+        == [dataclasses.asdict(r) for r in manual]
+
+
+def test_mixed_tenant_workload_paths_override():
+    path = ("US-SC", "US-MT")
+    mixed = mixed_tenant_workload(0, paths={"bulk_replication": path})
+    by_tenant = {r.tenant: r.path for r in mixed}
+    assert by_tenant["bulk"] == path
+    assert by_tenant["serving"] != path
+
+
+# ---------------------------------------------------------------------------
+# Grid adapters: CSV round-trip, reused validation, revealed() splice
+# ---------------------------------------------------------------------------
+
+def test_load_grid_dir_fixture_roundtrip():
+    g = load_grid_dir(FIXTURE_GRID)
+    assert g.name == "gridA"
+    assert g.zones == ("US-NM", "US-SD", "US-WY")   # zone = file stem
+    assert g.n_slots == 24 * 4                       # hourly -> 15-min slots
+    assert g.forecast.slot_seconds == 900.0
+    for z in g.zones:
+        f, a = g.forecast.zone_slots[z], g.actual.zone_slots[z]
+        assert f.shape == a.shape == (96,)
+        assert not np.array_equal(f, a)              # a real forecast gap
+        # Hourly expansion: each hour's reading repeats 4x.
+        assert np.array_equal(a.reshape(24, 4), a.reshape(24, 4)[:, :1]
+                              .repeat(4, axis=1))
+
+
+def test_load_zone_csv_alias_columns(tmp_path):
+    p = tmp_path / "Z.csv"
+    p.write_text("timestamp,forecast,carbonIntensity\n"
+                 "t0,100,110\nt1,200,190\n")
+    pred, act = load_zone_csv(p)
+    assert pred.tolist() == [100.0, 200.0]
+    assert act.tolist() == [110.0, 190.0]
+
+
+def test_load_zone_csv_single_column_stands_in(tmp_path):
+    p = tmp_path / "Z.csv"
+    p.write_text("timestamp,carbon_intensity\nt0,100\nt1,200\n")
+    pred, act = load_zone_csv(p)                     # perfect forecast
+    assert pred.tolist() == act.tolist() == [100.0, 200.0]
+
+
+def test_load_zone_csv_no_intensity_columns_raises(tmp_path):
+    p = tmp_path / "Z.csv"
+    p.write_text("timestamp,volts\nt0,1\n")
+    with pytest.raises(ValueError, match="Z.csv: no prediction column"):
+        load_zone_csv(p)
+
+
+def test_load_grid_dir_empty_raises(tmp_path):
+    with pytest.raises(ValueError, match=r"no per-zone CSVs \(\*\.csv\)"):
+        load_grid_dir(tmp_path)
+
+
+def test_grid_nan_cell_rejected_by_existing_traceset_message(tmp_path):
+    """A blank intensity cell must surface as the *existing* TraceSet
+    validation message naming zone and slot — not a float() crash and not
+    a forked copy of the message."""
+    (tmp_path / "US-NM.csv").write_text(
+        "timestamp,prediction,actual\nt0,100,110\nt1,,190\n")
+    with pytest.raises(ValueError,
+                       match=r"zone 'US-NM': NaN carbon intensity at slot"):
+        load_grid_dir(tmp_path)
+
+
+def test_grid_negative_cell_rejected_by_existing_message(tmp_path):
+    (tmp_path / "US-NM.csv").write_text(
+        "timestamp,prediction,actual\nt0,100,-5\nt1,100,190\n")
+    with pytest.raises(
+            ValueError,
+            match=r"zone 'US-NM': negative carbon intensity -5 at slot 0"):
+        load_grid_dir(tmp_path)
+
+
+def test_grid_ragged_zones_rejected_by_existing_message(tmp_path):
+    (tmp_path / "US-NM.csv").write_text(
+        "timestamp,prediction,actual\nt0,100,110\nt1,120,190\n")
+    (tmp_path / "US-WY.csv").write_text(
+        "timestamp,prediction,actual\nt0,100,110\n")
+    with pytest.raises(ValueError, match="unequal trace lengths per zone"):
+        load_grid_dir(tmp_path)
+
+
+def test_grid_scenario_zone_and_grid_mismatch_raise():
+    a = make_trace_set(("US-NM",), hours=6, seed=0)
+    b = make_trace_set(("US-WY",), hours=6, seed=0)
+    with pytest.raises(ValueError, match="forecast zones"):
+        GridScenario("bad", a, b)
+    c = make_trace_set(("US-NM",), hours=12, seed=0)
+    with pytest.raises(ValueError, match="forecast grid"):
+        GridScenario("bad", a, c)
+
+
+def test_revealed_splices_actual_then_forecast():
+    g = load_grid_dir(FIXTURE_GRID)
+    now = 10
+    view = g.revealed(now)
+    for z in g.zones:
+        np.testing.assert_array_equal(
+            view.zone_slots[z][:now], g.actual.zone_slots[z][:now])
+        np.testing.assert_array_equal(
+            view.zone_slots[z][now:], g.forecast.zone_slots[z][now:])
+    # Edges clip: 0 == pure forecast, >= n_slots == pure actuals.
+    for z in g.zones:
+        np.testing.assert_array_equal(
+            g.revealed(0).zone_slots[z], g.forecast.zone_slots[z])
+        np.testing.assert_array_equal(
+            g.revealed(10_000).zone_slots[z], g.actual.zone_slots[z])
+
+
+def test_revealed_stale_zone_reuses_hold_last():
+    g = load_grid_dir(FIXTURE_GRID)
+    view = g.revealed(4, stale_from={"US-WY": 8})
+    t = view.zone_slots["US-WY"]
+    assert (t[8:] == t[7]).all()
+    with pytest.raises(KeyError, match="hold_last: unknown zone 'US-XX'"):
+        g.revealed(4, stale_from={"US-XX": 8})
+
+
+def test_replay_plans_on_forecast_charges_actual():
+    """The closed loop's split contract: every forecast the planner is
+    given is the ``revealed(now)`` splice (spied on), while the reported
+    emissions follow the *actual* trace — the same plan trajectory on a
+    3x dirtier actual grid reports ~3x the carbon."""
+    zones = ("US-NM", "US-WY")
+    slots = 32
+    flat = {z: np.full(slots, 300.0 + 50.0 * i)
+            for i, z in enumerate(zones)}
+    forecast = TraceSet(900.0, flat)
+    # Sized to keep the engine busy past the revise points (capacity
+    # 0.5 Gbps moves 56.25 GB/slot; 540 GB needs ~10 slots minimum), so
+    # the spy provably sees mid-replay revisions.
+    reqs = [TransferRequest(180.0, 24, zones, request_id=f"r{i}",
+                            offset_slots=0, tenant="serving")
+            for i in range(3)]
+
+    def run(scale):
+        actual = TraceSet(900.0, {z: t * scale for z, t in flat.items()})
+        grid = GridScenario("spy", forecast, actual)
+        seen = []
+
+        def spy(now_slot):
+            view = grid.revealed(now_slot)
+            seen.append((now_slot, view))
+            return view
+
+        pack = ScenarioPack("spy", grid, tuple(reqs), 0.5)
+        rep = pack.replay(policy="lints", forecast_fn=spy,
+                          revise_every=8, max_slots=slots)
+        return rep, seen
+
+    rep1, seen1 = run(1.0)
+    rep3, seen3 = run(3.0)
+    assert rep1["sla_violations"] == rep3["sla_violations"] == 0
+    # Planner inputs were the splice views, revised mid-replay.
+    assert [s for s, _ in seen1][0] == 0 and len(seen1) > 1
+    for now, view in seen1:
+        np.testing.assert_array_equal(
+            view.zone_slots["US-NM"][now:],
+            forecast.zone_slots["US-NM"][now:])
+    em1 = rep1["tenants"]["serving"]["emissions_kg"]
+    em3 = rep3["tenants"]["serving"]["emissions_kg"]
+    assert em3 == pytest.approx(3.0 * em1, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Scenario packs + TransferManager integration
+# ---------------------------------------------------------------------------
+
+def test_pack_registry_roundtrip():
+    built_in = available_scenario_packs()
+    assert {"mixed-diurnal", "contended-fair", "flash-crowd"} <= set(built_in)
+    marker = ScenarioPack(
+        "unit-test-pack", load_grid_dir(FIXTURE_GRID),
+        tuple(bulk_replication(0, hours=24)), 1.0)
+    register_scenario_pack("unit-test-pack", lambda: marker)
+    try:
+        assert load_scenario_pack("unit-test-pack") is marker
+        assert "unit-test-pack" in available_scenario_packs()
+    finally:
+        from repro.scenarios import packs as _packs
+        del _packs._PACKS["unit-test-pack"]
+    with pytest.raises(KeyError, match="unknown scenario pack 'nope'"):
+        load_scenario_pack("nope")
+
+
+def test_builtin_packs_materialize_deterministically():
+    for name in available_scenario_packs():
+        a, b = load_scenario_pack(name), load_scenario_pack(name)
+        assert a.name == name and a.requests and a.tenants
+        assert [dataclasses.asdict(r) for r in a.requests] \
+            == [dataclasses.asdict(r) for r in b.requests]
+        for z in a.grid.zones:
+            np.testing.assert_array_equal(a.grid.actual.zone_slots[z],
+                                          b.grid.actual.zone_slots[z])
+
+
+def test_contended_fair_pack_builds_binding_problem():
+    pack = load_scenario_pack("contended-fair")
+    fp = pack.problem()
+    assert isinstance(fp, FairProblem)
+    assert np.isfinite(fp.budgets_g).sum() == 1        # bulk capped
+    plan = solve_fair_scipy(fp)
+    assert plan.meta["n_ledger_rows"] == 1
+    shares = tenant_objectives(fp, plan.rho_bps)
+    t = fp.tenant_ids.index("bulk")
+    assert shares[t] <= fp.budgets_g[t] * (1 + LEDGER_RTOL)
+    # budgets={} forces every ledger off.
+    assert np.isinf(pack.problem(budgets={}).budgets_g).all()
+
+
+def test_load_scenario_pack_from_csv_directory():
+    pack = load_scenario_pack(FIXTURE_GRID, seed=3, capacity_gbps=0.7)
+    assert pack.name == "gridA"
+    assert pack.capacity_gbps == 0.7
+    assert pack.grid.n_slots == 96
+    assert set(pack.tenants) == {"serving", "crowd", "bulk", "training"}
+    horizon = pack.grid.n_slots
+    for r in pack.requests:
+        assert set(r.path) <= set(pack.grid.zones)
+        assert r.deadline_slots <= horizon
+
+
+def test_submit_many_admits_batch_with_tenants():
+    from repro.transfer.manager import Datacenter, Topology, TransferManager
+
+    traces = make_trace_set(("US-NM", "US-WY"), hours=12, seed=1)
+    topo = Topology(
+        datacenters=(Datacenter("US-NM", "US-NM"),
+                     Datacenter("US-WY", "US-WY")),
+        routes={("US-NM", "US-WY"): ("US-NM", "US-WY")},
+    )
+    mgr = TransferManager(topo, traces, capacity_gbps=1.0, policy="lints")
+    reqs = [TransferRequest(5.0, 24, ("US-NM", "US-WY"),
+                            request_id=f"s{i}", tenant="serving")
+            for i in range(2)]
+    rids = mgr.submit_many(reqs)
+    assert rids == ["s0", "s1"]
+    assert mgr.transfers["s0"].tenant == "serving"
+    mgr.run_until_idle()
+    rep = mgr.report()
+    assert rep["tenants"]["serving"]["transfers"] == 2
+    assert rep["tenants"]["serving"]["sla_violations"] == 0
+    assert rep["tenants"]["serving"]["emissions_kg"] > 0.0
+
+
+def test_submit_many_past_deadline_is_all_or_nothing():
+    from repro.transfer.manager import Datacenter, Topology, TransferManager
+
+    traces = make_trace_set(("US-NM", "US-WY"), hours=12, seed=1)
+    topo = Topology(
+        datacenters=(Datacenter("US-NM", "US-NM"),
+                     Datacenter("US-WY", "US-WY")),
+        routes={("US-NM", "US-WY"): ("US-NM", "US-WY")},
+    )
+    mgr = TransferManager(topo, traces, capacity_gbps=1.0, policy="lints")
+    good = TransferRequest(5.0, 24, ("US-NM", "US-WY"), request_id="ok")
+    stale = TransferRequest(5.0, 24, ("US-NM", "US-WY"), request_id="late",
+                            offset_slots=4)
+    object.__setattr__(stale, "deadline_slots", 0)   # force a dead SLA
+    with pytest.raises(ValueError, match="'late'.*deadline 0"):
+        mgr.submit_many([good, stale])
+    assert not mgr.transfers                         # nothing admitted
+
+
+def test_pack_replay_smoke_lints_fair():
+    pack = load_scenario_pack("contended-fair")
+    rep = pack.replay(policy="lints-fair", max_slots=48, revise_every=16)
+    assert rep["policy"] == "lints-fair"
+    assert set(rep["tenants"]) == {"serving", "bulk"}
+    assert rep["sla_violations"] == 0
+    assert rep["forecast_revisions"] >= 1
